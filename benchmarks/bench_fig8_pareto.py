@@ -1,0 +1,31 @@
+"""Fig. 8: MSO-searched Pareto frontier for the paper's spec
+(H=W=64, MCR=2, INT4/8 + FP4/8, 800 MHz MAC & weight update @ 0.9 V)."""
+
+from __future__ import annotations
+
+from repro.core import (SubcircuitLibrary, calibrated_tech_for_reference,
+                        mso_search, pareto_experiment_spec)
+
+from .common import timed
+
+
+def run() -> list[tuple]:
+    tech = calibrated_tech_for_reference()
+    scl = SubcircuitLibrary(tech).build()
+    spec = pareto_experiment_spec()
+    res, us = timed(lambda: mso_search(spec, scl, tech), iters=1)
+    rows = [("fig8/search", us,
+             f"explored={res.n_evaluated};frontier={len(res.frontier)}")]
+    for p in res.frontier:
+        s = p.summary()
+        rows.append((f"fig8/point/{s['design']}", us,
+                     f"fmax_mhz={s['fmax_mhz']};area_mm2={s['area_mm2']};"
+                     f"tops_w={s['tops_w_int_lo']};tops_mm2={s['tops_mm2']};"
+                     f"meets={s['meets_timing']}"))
+    # frontier must span energy- and area/throughput-efficient corners
+    effs = [p.tops_per_w_1b["int_lo"] for p in res.frontier]
+    fm = [p.fmax_hz for p in res.frontier]
+    rows.append(("fig8/span", us,
+                 f"eff_ratio={max(effs) / min(effs):.2f};"
+                 f"fmax_ratio={max(fm) / min(fm):.2f}"))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 9: shmoo plot of the silicon-validated macro — frequency/voltage
+pass region, peaking at 1.1 GHz @ 1.2 V and 300 MHz @ 0.7 V (9 TOPS)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import reference_chip_ppa
+
+from .common import timed
+
+VOLTAGES = (0.7, 0.8, 0.9, 1.0, 1.1, 1.2)
+FREQS_MHZ = (100, 200, 300, 400, 500, 600, 700, 800, 900, 1000, 1100)
+
+
+def run() -> list[tuple]:
+    rows = []
+
+    def shmoo():
+        grid = {}
+        for v in VOLTAGES:
+            fmax = reference_chip_ppa(vdd=v).fmax_hz / 1e6
+            grid[v] = [("P" if f <= fmax else ".") for f in FREQS_MHZ]
+        return grid
+
+    grid, us = timed(shmoo, iters=1)
+    for v in VOLTAGES:
+        rows.append((f"fig9/shmoo/{v:.1f}V", us, "".join(grid[v])))
+    p12 = reference_chip_ppa(1.2)
+    p07 = reference_chip_ppa(0.7)
+    rows.append(("fig9/anchors", us,
+                 f"fmax@1.2V={p12.fmax_hz / 1e6:.0f}MHz;"
+                 f"tops={p12.tops_1b:.2f};"
+                 f"fmax@0.7V={p07.fmax_hz / 1e6:.0f}MHz"))
+    return rows

@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks: XLA dispatch path wall-time on this host (CPU) +
+bit-exactness of the Pallas path (interpret mode) against the oracles.
+
+On TPU the same entry points dispatch to the compiled Pallas kernels; CPU
+numbers here are for harness regression tracking, not roofline claims."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.csa_tree import csa_tree_pallas, csa_tree_ref
+from repro.kernels.dcim_mac import dcim_matmul, dcim_matmul_int_pallas
+from repro.kernels.dcim_mac import ref as mac_ref
+from repro.kernels.ssm_scan import ssm_scan_pallas, ssm_scan_ref
+
+from .common import timed
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> list[tuple]:
+    rows = []
+    # dcim_mac XLA path
+    for m, k, n in ((256, 512, 512), (512, 2048, 2048)):
+        a = jnp.asarray(RNG.integers(-128, 128, (m, k)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-128, 128, (k, n)), jnp.int8)
+        f = jax.jit(lambda a, w: dcim_matmul(a, w, 0.02, 0.01,
+                                             use_pallas=False))
+        out, us = timed(lambda: jax.block_until_ready(f(a, w)), iters=5)
+        macs = m * k * n
+        rows.append((f"kernel/dcim_mac/{m}x{k}x{n}", us,
+                     f"gmacs_s={macs / us / 1e3:.2f}"))
+    # bit-exactness of the Pallas path
+    a = jnp.asarray(RNG.integers(-8, 8, (64, 128)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-8, 8, (128, 64)), jnp.int8)
+    mxu = dcim_matmul_int_pallas(a, w, interpret=True)
+    bits = mac_ref.dcim_matmul_bitserial_ref(a, w, 4, 4)
+    rows.append(("kernel/dcim_mac/bit_exact_vs_dcim", 0.0,
+                 f"equal={bool((np.asarray(mxu) == np.asarray(bits)).all())}"))
+    # csa_tree
+    x = jnp.asarray(RNG.integers(-2**20, 2**20, (64, 512)), jnp.int32)
+    out, us = timed(lambda: jax.block_until_ready(
+        csa_tree_pallas(x, interpret=True)), iters=1)
+    rows.append(("kernel/csa_tree/64x512", us,
+                 f"exact={bool((np.asarray(out) == np.asarray(csa_tree_ref(x))).all())}"))
+    # ssm_scan
+    t, d = 1024, 256
+    aa = jnp.asarray(RNG.uniform(0.8, 1.0, (t, d)), jnp.float32)
+    bb = jnp.asarray(RNG.normal(size=(t, d)), jnp.float32)
+    h0 = jnp.zeros((d,), jnp.float32)
+    ref = jax.jit(lambda a, b, h: ssm_scan_ref(a, b, h))
+    out, us = timed(lambda: jax.block_until_ready(ref(aa, bb, h0)), iters=3)
+    s_pl, _ = ssm_scan_pallas(aa, bb, h0, interpret=True)
+    err = float(jnp.abs(s_pl - out[0]).max())
+    rows.append((f"kernel/ssm_scan/{t}x{d}", us, f"pallas_max_err={err:.1e}"))
+    return rows

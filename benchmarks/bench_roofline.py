@@ -1,0 +1,70 @@
+"""Roofline table from the dry-run artifacts (artifacts/dryrun/*.json):
+three terms per (arch x shape x mesh) + dominant bottleneck + MODEL_FLOPS
+ratio.  Run the dry-run first; this bench only reads its outputs."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import hw
+
+ARTIFACTS = Path("artifacts/dryrun")
+
+
+def model_flops_per_step(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # decode: one token per row
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec["devices"]
+    flops_dev = rec["cost"]["flops_per_device"]
+    bytes_dev = rec["cost"]["bytes_per_device"]
+    coll_dev = rec["cost"]["coll_bytes_per_device"]
+    t_c = flops_dev / hw.PEAK_BF16_FLOPS
+    t_m = bytes_dev / hw.HBM_BW
+    t_x = hw.collective_time_s(coll_dev)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops_per_step(rec["arch"], rec["shape"])
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    bound = max(t_c, t_m, t_x)
+    mfu_bound = (mf / chips / hw.PEAK_BF16_FLOPS) / bound if bound else 0.0
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bottleneck": dom, "model_flops": mf,
+            "useful_flops_frac": useful, "roofline_mfu_bound": mfu_bound}
+
+
+def run() -> list[tuple]:
+    rows = []
+    sets = [("baseline", ARTIFACTS), ("optimized", Path("artifacts/optimized"))]
+    if not any(d.exists() for _, d in sets):
+        return [("roofline/missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all --mesh both` first")]
+    for label, artdir in sets:
+        if not artdir.exists():
+            continue
+        for p in sorted(artdir.glob("*.json")):
+            rec = json.loads(p.read_text())
+            if not rec.get("ok"):
+                rows.append((f"roofline/{label}/{p.stem}", 0.0, "FAILED"))
+                continue
+            r = roofline_row(rec)
+            rows.append((f"roofline/{label}/{p.stem}", 0.0,
+                         f"t_comp={r['t_compute_s']:.3e};"
+                         f"t_mem={r['t_memory_s']:.3e};"
+                         f"t_coll={r['t_collective_s']:.3e};"
+                         f"dom={r['bottleneck']};"
+                         f"useful_frac={r['useful_flops_frac']:.3f};"
+                         f"mfu_bound={r['roofline_mfu_bound']:.3f}"))
+    return rows

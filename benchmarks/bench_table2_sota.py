@@ -1,0 +1,59 @@
+"""Table II: the SynDCIM-generated test macro vs state-of-the-art DCIM
+designs, under the paper's technology-scaling rules (scaled to 40nm, 1b-1b:
++80% area efficiency and +30% energy efficiency per node)."""
+
+from __future__ import annotations
+
+import math
+
+from repro.core import reference_chip_ppa
+
+from .common import timed
+
+# name: (node_nm, tops_scaled_already, tops_mm2, tops_w) — paper Table II rows
+SOTA = {
+    "ISSCC22_5nm": (5, 2.9, 104.0, 842.0),
+    "ISSCC23_4nm": (4, 4.1, 64.3, 979.0),
+    "ISSCC24_3nm": (3, 8.2, 98.0, 1090.0),
+    "TCASI24_55nm": (55, 0.8, 22.67, 2848.0),
+}
+
+# process-node ladder for "per technology node" scaling steps
+NODE_LADDER = [3, 4, 5, 7, 10, 16, 22, 28, 40, 55]
+
+
+def _nodes_between(a: int, b: int) -> int:
+    ia, ib = NODE_LADDER.index(a), NODE_LADDER.index(b)
+    return ib - ia
+
+
+def run() -> list[tuple]:
+    def ours():
+        p12 = reference_chip_ppa(1.2)
+        p07 = reference_chip_ppa(0.7)
+        return p12, p07
+
+    (p12, p07), us = timed(ours, iters=1)
+    rows = [
+        ("table2/this_design", us,
+         f"node=40nm;tops={p12.tops_1b:.1f};"
+         f"tops_mm2={p12.tops_per_mm2_1b:.1f};"
+         f"tops_w={p07.tops_per_w_1b['int_lo']:.0f};"
+         f"area_mm2={p12.area_um2 / 1e6:.3f};macwrite=True"),
+    ]
+    for name, (node, tops, tmm2, tw) in SOTA.items():
+        # Table II already scales competitors to 40nm/1b; report both raw and
+        # the scaling factors used so the comparison is auditable.
+        steps = _nodes_between(node, 40)
+        area_k = 1.8 ** steps
+        energy_k = 1.3 ** steps
+        rows.append((f"table2/{name}", us,
+                     f"node={node}nm;tops={tops};tops_mm2={tmm2};tops_w={tw};"
+                     f"area_scale=1.8^{steps}={area_k:.2f};"
+                     f"energy_scale=1.3^{steps}={energy_k:.2f}"))
+    # headline: ours beats all on TOPS/W except the 55nm TCAS-I point, and is
+    # competitive on TOPS/mm2 (80.5 vs 104/98)
+    rows.append(("table2/headline", us,
+                 f"ours_tops_w={p07.tops_per_w_1b['int_lo']:.0f}"
+                 f";best_other=1090;ours_tops_mm2={p12.tops_per_mm2_1b:.1f}"))
+    return rows

@@ -1,0 +1,24 @@
+"""Benchmark harness utilities: every benchmark emits
+``name,us_per_call,derived`` CSV rows (derived = the quantity the paper's
+table/figure reports)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Returns (result, us_per_call)."""
+    for _ in range(warmup):
+        result = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return result, us
+
+
+def emit(rows: list[tuple]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

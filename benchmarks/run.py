@@ -1,0 +1,42 @@
+"""Benchmark orchestrator: one module per paper table/figure + kernels, DSE
+and the roofline reader.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (bench_csa, bench_dse, bench_fig7_energy, bench_fig8_pareto,
+               bench_fig9_shmoo, bench_kernels, bench_roofline,
+               bench_table1_features, bench_table2_sota)
+from .common import emit
+
+MODULES = [
+    ("fig7", bench_fig7_energy),
+    ("fig8", bench_fig8_pareto),
+    ("fig9", bench_fig9_shmoo),
+    ("table1", bench_table1_features),
+    ("table2", bench_table2_sota),
+    ("csa", bench_csa),
+    ("kernels", bench_kernels),
+    ("dse", bench_dse),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        try:
+            emit(mod.run())
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end training driver: a DCIM-quantized (QAT) language model trained
+with the full substrate — synthetic data pipeline, AdamW, checkpointing with
+restart, metrics.
+
+    PYTHONPATH=src python examples/train_lm_dcim.py --preset tiny --steps 200
+    PYTHONPATH=src python examples/train_lm_dcim.py --preset 100m --steps 300
+
+``tiny`` (~3M params) runs a few hundred steps in minutes on this CPU
+container; ``100m`` is the same driver at ~100M params for real hardware.
+Every linear layer runs the paper's DCIM execution semantics (INT8 weights /
+INT8 bit-serial activations via straight-through fake-quant), so the loss
+curve *is* the QAT curve of a SynDCIM-mapped model.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import smoke_config
+from repro.data import DataConfig, SyntheticCorpus
+from repro.models import get_model
+from repro.optim.schedules import linear_warmup_cosine
+from repro.parallel.logical import split_logical
+from repro.parallel.sharding import MESH_RULES
+from repro.optim.adamw import adamw_init
+from repro.train.step import make_train_step
+
+
+def preset(name: str):
+    cfg = smoke_config("llama3.2-3b")
+    if name == "tiny":
+        return cfg.replace(name="tiny-dcim-lm", n_layers=4, d_model=128,
+                           n_heads=4, n_kv_heads=2, d_ff=512, vocab=4096,
+                           head_dim=32), 16, 128
+    if name == "100m":
+        return cfg.replace(name="lm-100m-dcim", n_layers=12, d_model=768,
+                           n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32768,
+                           head_dim=64), 32, 512
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg, batch_size, seq_len = preset(args.preset)
+    api = get_model(cfg)
+    print(f"model {cfg.name}: ~{cfg.param_count() / 1e6:.1f}M params, "
+          f"DCIM INT{cfg.dcim_a_bits}xINT{cfg.dcim_w_bits} QAT")
+
+    params, _specs = split_logical(api.init_params(jax.random.PRNGKey(0)),
+                                   MESH_RULES)
+    opt = adamw_init(params)
+    corpus = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=seq_len,
+                                        global_batch=batch_size))
+    lr = linear_warmup_cosine(3e-4, warmup=20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(api, lr), donate_argnums=(0, 1))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        (params, opt), start = mgr.restore((params, opt))
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        raw = corpus.batch(step)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:4d}  loss={float(metrics['loss']):.4f}  "
+                  f"gnorm={float(metrics['grad_norm']):.3f}  "
+                  f"lr={float(metrics['lr']):.2e}  [{dt:.1f}s]")
+        if (step + 1) % args.save_every == 0:
+            mgr.async_save(step + 1, (params, opt))
+    mgr.wait()
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,255 @@
+"""Assemble EXPERIMENTS.md from the dry-run/optimized artifacts + the static
+reproduction and perf-log sections.  Rerun after any sweep:
+
+    PYTHONPATH=src python scripts/make_experiments.py
+"""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.roofline.report import (dryrun_table, load_records, roofline_table,  # noqa: E402
+                                   roofline_terms, skip_table)
+
+ROOT = Path(__file__).resolve().parent.parent
+BASE = ROOT / "artifacts/dryrun"
+OPT = ROOT / "artifacts/optimized"
+
+HEADER = """\
+# EXPERIMENTS — SynDCIM-JAX
+
+All numbers regenerate with the commands shown; artifacts live under
+``artifacts/``.  Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+4x50 GB/s ICI links per chip, 16 GiB HBM (constants in
+``src/repro/roofline/hw.py``).
+
+## §Reproduction — the paper's own claims
+
+``PYTHONPATH=src python -m benchmarks.run`` reproduces every table/figure:
+
+| Claim (paper) | Paper value | Reproduced | Benchmark |
+|---|---|---|---|
+| fmax @1.2 V (Fig. 9) | 1.1 GHz | 1.100 GHz (calibration anchor) | fig9 |
+| fmax @0.7 V (Fig. 9) | 300 MHz | 306 MHz — *predicted* by the alpha-power fit, not a knob | fig9 |
+| Peak TOPS (1b-1b, 4 Kb) | 9.0 | 9.01 | fig9/table2 |
+| TOPS/W @0.7 V (Table II) | 1921 | 1921 (anchor, leakage-corrected) | table2 |
+| TOPS/mm² (Table II) | 80.5 | 80.5 | table2 |
+| Macro area (Fig. 10) | 0.112 mm² | 0.112 mm² (anchor) | table2 |
+| FP8 vs INT4 power (Fig. 7) | ≈ +10% | +9.3% @64×64 | fig7 |
+| BF16 vs INT8 power (Fig. 7) | ≈ +20% | +22.2% @64×64 | fig7 |
+| TOPS/W rises with array size (Fig. 7) | monotone 32²→256² | 2136→2396 TOPS/W (INT4, 0.7 V) | fig7 |
+| Pareto frontier (Fig. 8) | multiple corners | 5 designs: 828 MHz/1404 TOPS/W ↔ 1084 MHz/1277 TOPS/W, all meet 800 MHz@0.9 V | fig8 |
+| Feature matrix (Table I) | 4 checks | all four *executed*, not asserted | table1 |
+| Alg. 1 techniques | tt1–tt5, ft1–ft3 | exercised + audit-logged (see quickstart) | fig8/csa |
+| Gate-level verification | DRC/LVS/post-sim | synthesized CSA netlists *executed*: Σ exact on random tensors | csa |
+
+Three calibration anchors (1.1 GHz@1.2 V, 0.112 mm², 1921 TOPS/W@0.7 V) solve
+the three free technology units (tau, eps, APR overhead); everything else —
+the 0.7 V frequency, the FP overheads, the dimension scaling, the whole
+Pareto frontier — is *predicted* by the subcircuit models (see
+``tests/test_core_compiler.py::TestSiliconAnchors``).
+
+## §Dry-run
+
+Every (architecture × applicable shape) cell lowered **and compiled** with
+``jax.jit(...).lower().compile()`` on both production meshes
+(single-pod 16×16 = 256 chips; multi-pod 2×16×16 = 512 chips), from
+ShapeDtypeStructs — no allocation:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Notes on the recorded numbers:
+  * ``memory_analysis`` on the forced-host platform aggregates across
+    partitions; per-device figures divide by the device count (verified:
+    whisper train temp/256 equals the per-device f32 logits+CE buffer).
+  * FLOPs/bytes come from the trip-count-aware HLO cost walker
+    (``repro/roofline/hlo_parse.py``): XLA's ``cost_analysis()`` counts scan
+    bodies once (verified 8× undercount on an 8-step scan), so the walker
+    re-derives costs from the optimized HLO text, multiplying while-bodies by
+    XLA's own ``known_trip_count``.
+  * bytes model: TPU-fusion projection — only dot/conv/reduce/gather/
+    collective/update ops carry HBM traffic; in-place cache updates charge
+    zero (aliased; reads are charged at the attention dots); XLA:CPU's
+    bf16→f32 dot upcasts are projected back to bf16 sizes
+    (``bf16_normalize=True``; raw numbers retained in ``cost_raw``).
+"""
+
+PERF = """\
+## §Perf — hillclimb log (hypothesis → change → measure → validate)
+
+Cells chosen from the baseline table: **internvl2-1b/prefill_32k** (worst
+roofline fraction, 0.0002), **internvl2-1b/train_4k** (most collective-bound:
+t_coll 58 s > t_mem 54 s), **mistral-large-123b/train_4k** (most
+representative of the paper's technique: 123 B-parameter INT8-QAT training —
+the paper's cloud-acceleration scenario — and the largest MODEL_FLOPS).
+
+**The paper-faithful baseline is the full `artifacts/dryrun` table above.**
+Optimized results live in `artifacts/optimized`; both are kept.
+
+### Iteration 1 — activation sharding constraints (all three cells)
+
+* **Hypothesis** (napkin): the HLO shows 2280 all-reduces of ~1.6 GiB
+  (3.6 TiB/chip/step on llama train) — GSPMD resolves the d_in-'data'-sharded
+  weight contraction by partial-sum + all-reduce of full f32 activations
+  instead of all-gathering the (100× smaller) FSDP weight shards.
+  Constraining every linear's output to (batch→data, features→model-if-TP)
+  should force the weight-gather strategy: collective term ↓10–100×, memory
+  ↓2–5×.
+* **Change**: ``constrain_act`` after every DCIM linear / embedding / logits
+  (``cfg.act_shard``; ``repro/parallel/sharding.py``).
+* **Measured** (single-pod, t in ms: compute/memory/collective, mfu = roofline-MFU bound):
+
+| cell | baseline | iteration 1 | verdict |
+|---|---|---|---|
+| mistral train_4k | 33992/170218/63028, mfu 0.090 | 19987/28384/21984, mfu 0.539 | **CONFIRMED** (6.0×) |
+| internvl train_4k | 448/54278/58008, mfu 0.0014 | 100/3759/3897, mfu 0.020 | **CONFIRMED** (14×) |
+| internvl prefill_32k | 569/90583/105837, mfu 0.0002 | 55/5745/6654, mfu 0.0039 | **CONFIRMED** (19×) |
+
+### Iteration 2a — bf16-normalized measurement (correction, not a code change)
+
+* **Hypothesis**: XLA:CPU upcasts bf16 dots to f32 (convert→f32-dot), so the
+  walker charges 2× the TPU-native bytes for dot operands and the TP
+  all-reduces that consume them.
+* **Change**: resolve dot operands through converts; halve f32 collective
+  tensors (``bf16_normalize``).  Applied to baseline AND optimized tables.
+* **Measured**: mistral train mem 28.4 s→19.1 s, coll 22.0→11.0 s → mfu
+  0.765, now *compute*-bound.  **CONFIRMED** (the residual f32 terms — CE,
+  Adam moments — are <1% of traffic).
+
+### Iteration 2b — layout: pure-DP for width-starved archs (internvl train)
+
+* **Hypothesis**: d_model=896/16-way TP = 56 features/chip and 14 heads over
+  16 shards pad to ~1/chip: per-layer attention emits padded-head
+  all-reduces (~84/layer).  A 0.9 B model doesn't need TP at all at this
+  scale: batch 256 over all 256 chips (features local, weights still
+  FSDP-sharded) removes every TP collective at the cost of per-use weight
+  gathers (~40 MB/layer — trivial).
+* **Change**: ``sharding_overrides={"batch": ("data","model"), "act_heads":
+  None, "act_ff": None}`` (tuned.py).
+* **Measured**: 100/3759/3897 → 98/292/**22** ms, mfu 0.020→**0.269**,
+  useful-flops 0.80.  **CONFIRMED** (13×; 190× vs baseline).
+
+### Iteration 2b' — sequence parallelism (internvl prefill; batch 32 < 256)
+
+* **Hypothesis**: batch can't cover the mesh (32 rows); shard the 32 k
+  sequence over 'model' instead, keeping attention exact via the causal
+  q-block loop.
+* **Measured**: mfu 0.0039→0.0153, coll 6.7 s→1.7 s.  **CONFIRMED** (2×),
+  but all-gathers remain (316 GiB: the q-block loop re-gathers K/V per
+  block).
+* **Iteration 3** — gather K/V once per layer before the q-loop
+  (``attn_kv_seq`` constraint): **REFUTED** — identical numbers; the gathers
+  are q-slice resharding, which the constraint can't remove.
+* **Iteration 4** — heads-local without seq sharding: collective ↓ to 57 ms
+  but attention compute replicates 16× over 'model' (useful 0.51→0.06), mfu
+  0.0095 < 0.0153.  **REFUTED**.  Two consecutive <5% iterations → stop;
+  remaining gap is structural (MODEL_FLOPS=2·N·D ignores the 32 k-seq
+  attention FLOPs that dominate prefill for a 0.9 B model — useful-flops
+  counts them at 0.51).
+
+### Iteration 3' — remat off (mistral train)
+
+* **Hypothesis**: compute term includes the remat re-forward (8/6 of model
+  FLOPs); 123 B × bf16 FSDP over 256 chips leaves HBM headroom, so full
+  activation residency may fit: compute −25%, memory reads −20%.
+* **Measured**: 19987/19113/10992 → 15977/14693/10036 ms, mfu 0.765→**0.957**,
+  HBM 15.6/16 GiB.  **CONFIRMED** — with the caveat that 97% HBM occupancy is
+  fragile; production would use ``microbatches=2`` or selective remat as the
+  fallback (knob exists: ``--microbatches``).
+
+### Final per-cell results (baseline → optimized, single-pod)
+
+Quoted under the FINAL cost model (bf16-normalized) applied to both sides —
+the iteration log above quotes the values as measured at each point in time
+(iterations 1–2a predate the normalization, so their raw baselines read
+lower):
+
+| cell | mfu bound before | after | total gain |
+|---|---|---|---|
+| mistral-large-123b train_4k | 0.132 | **0.957** | 7.3× |
+| internvl2-1b train_4k | 0.0023 | **0.269** | 116× |
+| internvl2-1b prefill_32k | 0.0005 | **0.0153** | 31× |
+
+Stopping rule satisfied: the last iterations on each cell were either <5%
+(prefill it.3) or explicitly refuted (prefill it.4); mistral is at 0.96 of
+its roofline bound, within noise of the model's ceiling.
+
+### Beyond-paper optimizations carried into the framework defaults
+
+1. ``act_shard`` activation constraints (iteration 1) — applied to every
+   **train/prefill** cell in the optimized sweep below.  A first optimized
+   sweep applied them to decode too and *regressed* decode cells 0.5–0.9×
+   (cache-read-bound steps gain nothing from weight-gather layouts; the
+   constraints on (B,1,d) tensors only add resharding) — the tuned policy
+   now arms them by workload kind.  Hypothesis→measure→refine, recorded.
+2. Per-cell tuned layouts (``repro/launch/tuned.py``): pure-DP for
+   width-starved train cells (internvl, whisper), sequence-parallel prefill
+   for the same archs, remat-off for mistral train.
+3. int8 error-feedback gradient compression across the 'pod' axis
+   (``repro/optim/compression.py``, validated in tests/test_distributed.py)
+   — 8× fewer DCN bytes for multi-pod gradient sync, with a global-scale
+   agreement round (per-replica scales measured 20× worse error).
+"""
+
+
+def main():
+    base = load_records(BASE)
+    out = [HEADER]
+    n_ok = sum(1 for r in base.values() if r.get("ok"))
+    out.append(f"### Matrix ({n_ok}/{len(base)} cells compiled, 0 failures)\n")
+    out.append(dryrun_table(base))
+    out.append("\n### Skipped cells (per assignment rules)\n")
+    out.append(skip_table())
+    out.append("""
+## §Roofline — baseline (paper-faithful configuration)
+
+Terms per chip per step: compute = HLO_FLOPs/(197e12), memory =
+HLO_bytes/(819e9), collective = ICI_bytes/(4×50e9).  ``useful/HLO`` =
+MODEL_FLOPS/(HLO FLOPs × chips) — remat, QAT fake-quant, attention and
+padding waste show up here.  ``roofline-MFU bound`` = the MFU the step would
+achieve if it ran exactly at the dominant roofline term.
+""")
+    out.append("### Single-pod (16×16 = 256 chips)\n")
+    out.append(roofline_table(base, "single"))
+    out.append("\n### Multi-pod (2×16×16 = 512 chips)\n")
+    out.append(roofline_table(base, "multi"))
+    out.append("\n" + PERF)
+
+    if OPT.exists():
+        opt = load_records(OPT)
+        n_ok = sum(1 for r in opt.values() if r.get("ok"))
+        out.append(f"""
+## §Roofline — optimized (beyond-paper defaults: act_shard + tuned layouts)
+
+``PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --tuned``
+({n_ok}/{len(opt)} cells compiled)
+
+### Single-pod (256 chips)
+""")
+        out.append(roofline_table(opt, "single"))
+        out.append("\n### Multi-pod (512 chips)\n")
+        out.append(roofline_table(opt, "multi"))
+        # improvement summary
+        rows = ["\n### Baseline → optimized (single-pod mfu bound)\n",
+                "| cell | baseline | optimized | gain |", "|---|---|---|---|"]
+        for key in sorted(base):
+            arch, shape, mesh = key
+            if mesh != "single" or key not in opt:
+                continue
+            if not (base[key].get("ok") and opt[key].get("ok")):
+                continue
+            b = roofline_terms(base[key])["mfu_bound"]
+            o = roofline_terms(opt[key])["mfu_bound"]
+            gain = o / b if b else float("inf")
+            rows.append(f"| {arch} {shape} | {b:.4f} | {o:.4f} | {gain:.1f}× |")
+        out.append("\n".join(rows))
+
+    (ROOT / "EXPERIMENTS.md").write_text("\n".join(out) + "\n")
+    print("wrote EXPERIMENTS.md",
+          len((ROOT / 'EXPERIMENTS.md').read_text().splitlines()), "lines")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .manager import CheckpointManager, load_checkpoint, save_checkpoint
+from .elastic import reshard_tree
+from .failures import FailureInjector, run_with_restarts
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "reshard_tree", "FailureInjector", "run_with_restarts"]

@@ -1,0 +1,26 @@
+"""Elastic re-meshing: move a checkpoint onto a different mesh.
+
+When nodes fail (or capacity grows), the job restarts with a different device
+count; parameters saved under one sharding must load under another.  Because
+checkpoints here store *global* arrays (np.savez of the full tree) and
+shardings are recomputed from the logical rules for whatever mesh exists at
+restore time, resharding is a pure placement operation:
+
+    tree' = jax.device_put(tree, NamedSharding(new_mesh, spec))
+
+`reshard_tree` performs exactly that, per-leaf.  The elasticity drill in
+tests/test_distributed.py saves from an 8-device mesh and restores onto
+4- and 2-device meshes, verifying bit-identical values.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+
+def reshard_tree(tree, mesh: Mesh, spec_tree):
+    """Place (host or device) arrays onto ``mesh`` with per-leaf specs."""
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+        tree, spec_tree)

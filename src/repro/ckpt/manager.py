@@ -1,0 +1,128 @@
+"""Checkpointing: atomic, sharded, async-capable, keep-k.
+
+Layout (one directory per step):
+
+    <root>/step_000100/
+        manifest.json            # tree structure, shapes, dtypes, step meta
+        shard_00000.npz          # flat-index -> array chunks for this host
+
+Writes go to ``<dir>.tmp`` then ``os.rename`` (atomic on POSIX) so a crash
+mid-write never corrupts the latest checkpoint — the restart scan only
+considers directories with a valid manifest.  ``async_save`` runs the
+serialize+rename on a background thread (training continues; ``wait()``
+fences — the fence doubles as the straggler-mitigation point: a host that
+cannot finish its shard within the fence timeout is declared failed and the
+job restarts elastically from the previous step, see failures.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(root: str | Path, step: int, tree, host_id: int = 0,
+                    meta: dict | None = None) -> Path:
+    root = Path(root)
+    final = root / f"step_{step:08d}"
+    tmp = root / f".tmp_step_{step:08d}_{host_id}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(tmp / f"shard_{host_id:05d}.npz", **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "shapes": [list(np.shape(l)) for l in leaves],
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "time": time.time(),
+        "meta": meta or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic publish
+    return final
+
+
+def load_checkpoint(root: str | Path, tree_like, step: int | None = None,
+                    host_id: int = 0):
+    """Restore into the structure of ``tree_like``; returns (tree, step)."""
+    root = Path(root)
+    if step is None:
+        steps = sorted(int(p.name.split("_")[1]) for p in root.glob("step_*")
+                       if (p / "manifest.json").exists())
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+        step = steps[-1]
+    d = root / f"step_{step:08d}"
+    data = np.load(d / f"shard_{host_id:05d}.npz")
+    leaves, treedef = _flatten(tree_like)
+    new_leaves = [data[f"a{i}"] for i in range(len(leaves))]
+    return treedef.unflatten(new_leaves), step
+
+
+class CheckpointManager:
+    """keep-k GC + async save + restart discovery."""
+
+    def __init__(self, root: str | Path, keep: int = 3, host_id: int = 0):
+        self.root = Path(root)
+        self.keep = keep
+        self.host_id = host_id
+        self._thread: threading.Thread | None = None
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # -------------------------------------------------------------- sync api
+    def save(self, step: int, tree, meta: dict | None = None) -> Path:
+        p = save_checkpoint(self.root, step, tree, self.host_id, meta)
+        self._gc()
+        return p
+
+    def async_save(self, step: int, tree, meta: dict | None = None):
+        # snapshot to host memory NOW so training can mutate device buffers
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=lambda: (save_checkpoint(self.root, step, host_tree,
+                                            self.host_id, meta), self._gc()),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Fence: returns False if the save straggled past ``timeout``."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+            alive = self._thread.is_alive()
+            if not alive:
+                self._thread = None
+            return not alive
+        return True
+
+    def restore(self, tree_like, step: int | None = None):
+        return load_checkpoint(self.root, tree_like, step, self.host_id)
+
+    def latest_step(self) -> int | None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.root.glob("step_*")
+                       if (p / "manifest.json").exists())
+        return steps[-1] if steps else None
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.root.glob("step_*")
+                       if (p / "manifest.json").exists())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)

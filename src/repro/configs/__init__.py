@@ -1,0 +1,46 @@
+"""Assigned architecture configs (exact, from the task sheet) + smoke variants.
+
+``get_config(name)`` / ``list_archs()`` are the CLI entry points
+(``--arch <id>``); ``smoke_config(name)`` returns the reduced same-family
+config for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+from .base import (ArchConfig, FrontendCfg, MoECfg, SSMCfg, SHAPES, ShapeCfg,
+                   SUBQUADRATIC_FAMILIES, applicable_shapes)
+from . import (granite_moe_1b, granite_moe_3b, internvl2_1b, llama32_3b,
+               mistral_large_123b, phi3_mini_38b, qwen3_4b, rwkv6_7b,
+               whisper_tiny, zamba2_12b)
+
+_MODULES = {
+    "llama3.2-3b": llama32_3b,
+    "qwen3-4b": qwen3_4b,
+    "mistral-large-123b": mistral_large_123b,
+    "phi3-mini-3.8b": phi3_mini_38b,
+    "internvl2-1b": internvl2_1b,
+    "zamba2-1.2b": zamba2_12b,
+    "rwkv6-7b": rwkv6_7b,
+    "granite-moe-1b-a400m": granite_moe_1b,
+    "granite-moe-3b-a800m": granite_moe_3b,
+    "whisper-tiny": whisper_tiny,
+}
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {list_archs()}")
+    return _MODULES[name].config()
+
+
+def smoke_config(name: str) -> ArchConfig:
+    return _MODULES[name].smoke()
+
+
+__all__ = ["ArchConfig", "FrontendCfg", "MoECfg", "SSMCfg", "SHAPES",
+           "ShapeCfg", "SUBQUADRATIC_FAMILIES", "applicable_shapes",
+           "get_config", "smoke_config", "list_archs"]

@@ -1,0 +1,44 @@
+"""SynDCIM core: the paper's contribution as an executable library.
+
+Layers (paper Fig. 2):
+  tech        40nm technology + voltage-scaling model (calibrated to silicon)
+  subcircuits the seven DCIM subcircuit types and their PPA models
+  csa         mixed compressor/FA carry-save adder-tree family (Fig. 4)
+  scl         Subcircuit Library: characterized PPA lookup tables (Fig. 3)
+  searcher    Multi-Spec-Oriented searcher — Algorithm 1
+  pareto      Pareto-frontier utilities (Fig. 8)
+  macro       spec -> design -> PPA roll-up (+ silicon calibration)
+  netlist     RTL / structural netlist emission
+  gatesim     functional gate-level simulation of synthesized trees
+  dse         system-level workload -> macro-array mapping
+"""
+
+from .csa import CSADesign, CSAReport, FAMILY, build_netlist, characterize
+from .dse import AcceleratorReport, GemmShape, accelerator_report, map_gemm
+from .gatesim import simulate, verify_tree
+from .macro import (MacroDesign, MacroPPA, MacroSpec, at_voltage,
+                    calibrated_tech_for_reference, pareto_experiment_spec,
+                    reference_chip_design, reference_chip_ppa,
+                    reference_chip_spec, rollup, timing_paths)
+from .netlist import emit_verilog, tree_netlist
+from .pareto import pareto_front, preference_grid
+from .scl import SubcircuitLibrary
+from .searcher import SearchResult, mso_search, synthesize_one
+from .subcircuits import SC, MemCellKind, MultMuxKind, PPA
+from .tech import TechModel, delay_scale, energy_scale
+
+__all__ = [
+    "CSADesign", "CSAReport", "FAMILY", "build_netlist", "characterize",
+    "AcceleratorReport", "GemmShape", "accelerator_report", "map_gemm",
+    "simulate", "verify_tree",
+    "MacroDesign", "MacroPPA", "MacroSpec", "at_voltage",
+    "calibrated_tech_for_reference", "pareto_experiment_spec",
+    "reference_chip_design", "reference_chip_ppa", "reference_chip_spec",
+    "rollup", "timing_paths",
+    "emit_verilog", "tree_netlist",
+    "pareto_front", "preference_grid",
+    "SubcircuitLibrary",
+    "SearchResult", "mso_search", "synthesize_one",
+    "SC", "MemCellKind", "MultMuxKind", "PPA",
+    "TechModel", "delay_scale", "energy_scale",
+]

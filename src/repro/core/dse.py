@@ -1,0 +1,130 @@
+"""System-level design-space exploration: mapping AI workloads onto arrays of
+SynDCIM macros (the paper's §I framing — "system-level acceleration that DCIM
+can offer", with distinct optimizations for vision / language / cloud /
+wearable scenarios).
+
+Given a workload (the GEMM inventory of one of the assigned model
+architectures) and a synthesized macro design point, this module computes the
+accelerator-level throughput/energy/area of an N-macro array executing the
+workload — the bridge between the paper's circuit compiler and the JAX
+framework's model zoo.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .macro import MacroPPA
+
+
+@dataclass(frozen=True)
+class GemmShape:
+    """One GEMM in a model: out[m, n] += a[m, k] @ w[k, n], executed
+    ``count`` times per model step."""
+
+    name: str
+    m: int
+    k: int
+    n: int
+    count: int = 1
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n * self.count
+
+
+@dataclass(frozen=True)
+class MappingReport:
+    gemm: GemmShape
+    tiles: int                 # weight tiles (k x n) across macro array
+    passes: int                # sequential tile waves on n_macros
+    cycles: int                # total macro cycles for the GEMM
+    weight_reloads: int        # tile swaps requiring BL writes (MCR-aware)
+    energy_pj: float
+    util: float                # MAC-lane utilization
+
+
+@dataclass(frozen=True)
+class AcceleratorReport:
+    macro: str
+    n_macros: int
+    ib: int
+    wb: int
+    reports: tuple[MappingReport, ...]
+    total_cycles: int
+    total_energy_pj: float
+    wallclock_s: float
+    effective_tops: float      # at the workload's real precision
+    avg_util: float
+    area_mm2: float
+
+    def summary(self) -> dict:
+        return {
+            "macro": self.macro,
+            "n_macros": self.n_macros,
+            "precision": f"INT{self.ib}xINT{self.wb}",
+            "total_cycles": self.total_cycles,
+            "energy_uj": round(self.total_energy_pj / 1e6, 3),
+            "wallclock_ms": round(self.wallclock_s * 1e3, 4),
+            "effective_tops": round(self.effective_tops, 4),
+            "avg_util": round(self.avg_util, 4),
+            "area_mm2": round(self.area_mm2, 3),
+        }
+
+
+def map_gemm(g: GemmShape, ppa: MacroPPA, n_macros: int, ib: int, wb: int
+             ) -> MappingReport:
+    """Weight-stationary tiling: the (k, n) weight matrix is cut into
+    H x (W/wb) tiles held in the macro arrays; activations stream bit-serially
+    (ib cycles per row of m).  MCR>1 lets a macro hold ``mcr`` tiles resident
+    and switch per cycle, reducing weight reloads (the paper's MCR-aware
+    memory-density argument)."""
+    spec = ppa.design.spec
+    cols_per_out = max(1, spec.w // wb)
+    tiles_k = math.ceil(g.k / spec.h)
+    tiles_n = math.ceil(g.n / cols_per_out)
+    tiles = tiles_k * tiles_n
+    resident = n_macros * spec.mcr
+    passes = math.ceil(tiles / resident)
+    weight_reloads = max(0, tiles - resident) * g.count
+
+    cycles_per_tilewave = g.m * ib
+    active_waves = math.ceil(tiles / min(tiles, resident))
+    cycles = cycles_per_tilewave * active_waves * g.count
+    # Weight reload cost: one row per cycle through BL drivers.
+    reload_cycles = weight_reloads * spec.h
+    cycles += reload_cycles
+
+    # Energy: per-cycle macro energy (int mode) x active macros x cycles.
+    e_cycle_fj = ppa.e_cycle_fj["int_hi" if ib > 4 else "int_lo"]
+    active_macros = min(tiles, n_macros)
+    energy_pj = (cycles - reload_cycles) * e_cycle_fj * active_macros / 1e3
+    # BL write energy estimate per reload: ~array write energy.
+    energy_pj += weight_reloads * spec.h * spec.w * 3.6 * ppa.design.spec.mcr / 1e3
+
+    lanes_used = (min(g.k, tiles_k * spec.h) / (tiles_k * spec.h)) * \
+                 (min(g.n, tiles_n * cols_per_out) / (tiles_n * cols_per_out))
+    util = lanes_used * min(1.0, tiles / resident)
+    return MappingReport(gemm=g, tiles=tiles, passes=passes, cycles=cycles,
+                         weight_reloads=weight_reloads, energy_pj=energy_pj,
+                         util=util)
+
+
+def accelerator_report(gemms: list[GemmShape], ppa: MacroPPA, n_macros: int,
+                       ib: int = 8, wb: int = 8) -> AcceleratorReport:
+    reports = tuple(map_gemm(g, ppa, n_macros, ib, wb) for g in gemms)
+    total_cycles = sum(r.cycles for r in reports)
+    total_energy = sum(r.energy_pj for r in reports)
+    f = min(ppa.fmax_hz, ppa.design.spec.f_mac_hz) if ppa.meets_timing else ppa.fmax_hz
+    wall = total_cycles / f
+    macs = sum(r.gemm.macs for r in reports)
+    tops = 2.0 * macs / wall / 1e12 if wall > 0 else 0.0
+    avg_util = (sum(r.util * r.cycles for r in reports) / total_cycles
+                if total_cycles else 0.0)
+    return AcceleratorReport(
+        macro=ppa.design.name(), n_macros=n_macros, ib=ib, wb=wb,
+        reports=reports, total_cycles=total_cycles,
+        total_energy_pj=total_energy, wallclock_s=wall,
+        effective_tops=tops, avg_util=avg_util,
+        area_mm2=n_macros * ppa.area_um2 / 1e6)

@@ -1,0 +1,58 @@
+"""Pareto-frontier utilities (paper §III-C / Fig. 8).
+
+The MSO searcher emits a *set* of design points; the compiler returns those on
+the Pareto frontier of (power, area, latency) under the throughput constraint,
+"to be finally chosen based on defined PPA preferences or user selection".
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
+    """True if objective vector ``a`` Pareto-dominates ``b`` (all <=, one <).
+    Objectives are minimized."""
+    le = all(x <= y + 1e-12 for x, y in zip(a, b))
+    lt = any(x < y - 1e-12 for x, y in zip(a, b))
+    return le and lt
+
+
+def pareto_front(items: Iterable[T], objectives: Callable[[T], Sequence[float]]
+                 ) -> list[T]:
+    """Filter ``items`` to the non-dominated set, stably ordered by the first
+    objective."""
+    pts = [(objectives(it), it) for it in items]
+    front: list[tuple[Sequence[float], T]] = []
+    for obj, it in pts:
+        if any(dominates(o2, obj) for o2, _ in pts):
+            continue
+        # drop exact duplicates
+        if any(all(abs(x - y) < 1e-12 for x, y in zip(obj, o2)) for o2, _ in front):
+            continue
+        front.append((obj, it))
+    front.sort(key=lambda oi: tuple(oi[0]))
+    return [it for _, it in front]
+
+
+def scalarize(weights: Sequence[float], objectives: Sequence[float],
+              refs: Sequence[float]) -> float:
+    """Weighted-sum scalarization with reference normalization (used to pick a
+    single design for a PPA preference)."""
+    return sum(w * (o / max(r, 1e-30))
+               for w, o, r in zip(weights, objectives, refs))
+
+
+def preference_grid(resolution: int = 4) -> list[tuple[float, float, float]]:
+    """Deterministic simplex grid over (power, area, throughput) preference
+    weights — the multi-spec sweep driving the searcher."""
+    out = []
+    for a in range(resolution + 1):
+        for b in range(resolution + 1 - a):
+            c = resolution - a - b
+            if a == b == c == 0:
+                continue
+            out.append((a / resolution, b / resolution, c / resolution))
+    return out

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticCorpus, host_sharded_loader
+
+__all__ = ["DataConfig", "SyntheticCorpus", "host_sharded_loader"]

@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  dcim_mac  — the paper's MAC array, MXU-adapted (weight-stationary blocked
+              int matmul, int32 accumulate, fused dequant epilogue) with a
+              faithful bit-serial DCIM oracle.
+  csa_tree  — bit-exact executable model of the Fig. 4 mixed-CSA adder tree
+              (4-2 compressors as 5-3 carry-save adders) on the VPU.
+  ssm_scan  — chunked diagonal linear recurrence (SSM / linear-attention
+              decode primitive) with VMEM-carried state.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatch) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+interpret mode against the oracles.
+"""
+
+from .csa_tree import csa_tree_pallas, csa_tree_ref, csa_tree_sum
+from .dcim_mac import (dcim_matmul, dcim_matmul_int, dcim_matmul_int_pallas,
+                       dcim_matmul_pallas)
+from .ssm_scan import ssm_scan, ssm_scan_assoc_ref, ssm_scan_pallas, ssm_scan_ref
+
+__all__ = [
+    "csa_tree_pallas", "csa_tree_ref", "csa_tree_sum",
+    "dcim_matmul", "dcim_matmul_int", "dcim_matmul_int_pallas",
+    "dcim_matmul_pallas",
+    "ssm_scan", "ssm_scan_assoc_ref", "ssm_scan_pallas", "ssm_scan_ref",
+]

@@ -1,0 +1,5 @@
+from .kernel import csa_tree_pallas
+from .ops import csa_tree_sum
+from .ref import csa_tree_ref
+
+__all__ = ["csa_tree_pallas", "csa_tree_sum", "csa_tree_ref"]

@@ -1,0 +1,94 @@
+"""Pallas kernel executing the paper's Fig. 4 carry-save reduction on the VPU.
+
+This is the *bit-exact executable model* of the synthesized adder tree: the
+4-2 compressor is evaluated as the "5-3 carry-save adder" of [11] using pure
+bitwise ops (XOR/AND/OR + shift), level by level, with a final two-operand add
+standing in for the ripple-carry stage.  The reduction schedule is generated
+at trace time from the row count, exactly like the netlist builder in
+``repro.core.csa`` — so the TPU kernel and the synthesized netlist share
+structure.
+
+Layout: operands (H, N) int32 arrive as (H, bn) VMEM blocks (full row dim in
+VMEM — the adder tree is a column-local reduction, H <= 512 by construction);
+the grid tiles N.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fa(a, b, c):
+    """Full adder on integer lanes: exact carry-save split."""
+    s = a ^ b ^ c
+    carry = ((a & b) | (b & c) | (a & c)) << 1
+    return s, carry
+
+
+def _c42(a, b, c, d, cin):
+    """4-2 compressor as a 5-3 carry-save adder (two chained FAs)."""
+    s1, cout = _fa(a, b, c)
+    s, carry = _fa(s1, d, cin)
+    return s, carry, cout
+
+
+def _reduce_level(lanes: list, rho_comp: bool) -> list:
+    """One tree level: compress groups of 4 (compressors) or 3 (FAs)."""
+    nxt = []
+    i = 0
+    if rho_comp:
+        cout = None
+        while len(lanes) - i >= 4:
+            cin = cout if cout is not None else jnp.zeros_like(lanes[0])
+            s, c, cout = _c42(lanes[i], lanes[i + 1], lanes[i + 2],
+                              lanes[i + 3], cin)
+            nxt += [s, c]
+            i += 4
+        if cout is not None:
+            nxt.append(cout)
+    while len(lanes) - i >= 3:
+        s, c = _fa(lanes[i], lanes[i + 1], lanes[i + 2])
+        nxt += [s, c]
+        i += 3
+    nxt += lanes[i:]
+    return nxt
+
+
+def _csa_kernel(x_ref, o_ref, *, h: int, use_compressors: bool):
+    lanes = [x_ref[i, :] for i in range(h)]
+    guard = 0
+    while len(lanes) > 2 and guard < 64:
+        guard += 1
+        reduced = _reduce_level(lanes, use_compressors)
+        if len(reduced) >= len(lanes):            # force progress on tiny n
+            a = reduced[0] + reduced[1]
+            reduced = [a] + reduced[2:]
+        lanes = reduced
+    total = lanes[0]
+    for l in lanes[1:]:
+        total = total + l                          # final RCA
+    o_ref[...] = total
+
+
+@functools.partial(jax.jit, static_argnames=("use_compressors", "bn",
+                                             "interpret"))
+def csa_tree_pallas(operands: jnp.ndarray, *, use_compressors: bool = True,
+                    bn: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """Carry-save column reduction: (H, N) int32 -> (N,) int32."""
+    h, n = operands.shape
+    rem = (-n) % bn
+    x = jnp.pad(operands.astype(jnp.int32), ((0, 0), (0, rem)))
+    np_ = x.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_csa_kernel, h=h, use_compressors=use_compressors),
+        grid=(np_ // bn,),
+        in_specs=[pl.BlockSpec((h, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.int32),
+        interpret=interpret,
+    )(x)
+    return out[:n]

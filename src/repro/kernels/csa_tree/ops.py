@@ -1,0 +1,25 @@
+"""Entry point for the carry-save adder-tree reduction."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import csa_tree_pallas
+from .ref import csa_tree_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "use_compressors",
+                                             "interpret"))
+def csa_tree_sum(operands: jnp.ndarray, *, use_pallas: bool | None = None,
+                 use_compressors: bool = True,
+                 interpret: bool = False) -> jnp.ndarray:
+    """(H, N) int32 -> (N,) int32 column sums via the Fig. 4 CSA structure."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return csa_tree_pallas(operands, use_compressors=use_compressors,
+                               interpret=interpret)
+    return csa_tree_ref(operands)

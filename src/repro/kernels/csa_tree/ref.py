@@ -1,0 +1,10 @@
+"""Oracle for the carry-save adder-tree kernel: plain integer column sum."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def csa_tree_ref(operands: jnp.ndarray) -> jnp.ndarray:
+    """(H, N) int32 -> (N,) int32 exact column sums."""
+    return operands.astype(jnp.int32).sum(axis=0)

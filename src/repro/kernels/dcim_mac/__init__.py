@@ -1,0 +1,6 @@
+from .ops import dcim_matmul, dcim_matmul_int
+from .kernel import dcim_matmul_int_pallas, dcim_matmul_pallas
+from . import ref
+
+__all__ = ["dcim_matmul", "dcim_matmul_int", "dcim_matmul_pallas",
+           "dcim_matmul_int_pallas", "ref"]

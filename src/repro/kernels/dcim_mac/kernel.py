@@ -1,0 +1,136 @@
+"""Pallas TPU kernel for the DCIM MAC (the paper's compute hot-spot, adapted
+to the MXU — see DESIGN.md §4 "Hardware adaptation").
+
+The circuit mechanism (bit-serial WL streaming + per-column adder trees) has
+no MXU analogue; the TPU-native mapping keeps the *roles*:
+
+  weight-stationary SRAM tile   ->  W block resident in VMEM (BlockSpec)
+  bitwise multiplier + CSA tree ->  MXU systolic int multiply-accumulate
+  S&A (full-width accumulation) ->  int32 accumulator scratch in VMEM
+  OFU / alignment epilogue      ->  fused per-channel dequant on final k step
+
+Blocked matmul with grid (M/bm, N/bn, K/bk), k innermost (sequential on TPU)
+so the int32 accumulator lives in a VMEM scratch across k steps.  Block shapes
+default to MXU-aligned 128 multiples; int8 operands, int32 accumulate
+(``preferred_element_type``), bf16/f32 output after the epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mac_kernel(a_ref, w_ref, asc_ref, wsc_ref, o_ref, acc_ref, *, k_steps: int,
+                out_dtype):
+    """One (bm, bn) output tile; accumulates over the k grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU: int8 x int8 -> int32 (the adder tree + S&A, full width, one shot).
+    acc_ref[...] += jnp.dot(a_ref[...], w_ref[...],
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        # OFU-equivalent: per-row activation scale x per-column weight scale.
+        scale = asc_ref[...].reshape(-1, 1) * wsc_ref[...].reshape(1, -1)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def _int_kernel(a_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], w_ref[...],
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _out():
+        o_ref[...] = acc_ref[...]
+
+
+def _pad_to(x: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
+    pads = []
+    for dim, m in zip(x.shape, mults):
+        rem = (-dim) % m
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "interpret"))
+def dcim_matmul_pallas(a_q: jnp.ndarray, w_q: jnp.ndarray,
+                       a_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                       *, bm: int = 128, bn: int = 128, bk: int = 128,
+                       out_dtype=jnp.float32,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Quantized matmul with fused dequant: (M,K)i8 @ (K,N)i8 -> (M,N).
+
+    ``a_scale``: per-row (M,) f32; ``w_scale``: per-column (N,) f32.
+    Shapes are padded up to block multiples and the result sliced back.
+    """
+    m, k = a_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (a_q.shape, w_q.shape)
+    a_scale = jnp.broadcast_to(jnp.asarray(a_scale, jnp.float32), (m,))
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (n,))
+
+    a_p = _pad_to(a_q, (bm, bk))
+    w_p = _pad_to(w_q, (bk, bn))
+    asc = _pad_to(a_scale, (bm,))
+    wsc = _pad_to(w_scale, (bn,))
+    mp, kp = a_p.shape
+    _, np_ = w_p.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_mac_kernel, k_steps=grid[2], out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((bm,), lambda i, j, t: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, t: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_p, w_p, asc, wsc)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dcim_matmul_int_pallas(a_q: jnp.ndarray, w_q: jnp.ndarray,
+                           *, bm: int = 128, bn: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Integer-out variant (no epilogue): (M,K)i8 @ (K,N)i8 -> (M,N)i32."""
+    m, k = a_q.shape
+    _, n = w_q.shape
+    a_p = _pad_to(a_q, (bm, bk))
+    w_p = _pad_to(w_q, (bk, bn))
+    mp, kp = a_p.shape
+    _, np_ = w_p.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_int_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_p, w_p)
+    return out[:m, :n]

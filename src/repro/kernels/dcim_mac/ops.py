@@ -1,0 +1,56 @@
+"""Public entry points for the DCIM MAC.
+
+``dcim_matmul`` dispatches between the Pallas TPU kernel and an XLA path:
+
+  * On TPU the Pallas kernel runs compiled (interpret=False).
+  * On CPU (this container) the *framework* uses the XLA path for speed, and
+    tests exercise the Pallas kernel in interpret mode against the oracles.
+
+Both paths compute identical integers (asserted by tests), so the dispatch is
+purely a performance decision.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import dcim_matmul_int_pallas, dcim_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "use_pallas",
+                                             "interpret"))
+def dcim_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray,
+                a_scale: jnp.ndarray | float = 1.0,
+                w_scale: jnp.ndarray | float = 1.0,
+                *, out_dtype=jnp.float32, use_pallas: bool | None = None,
+                interpret: bool = False) -> jnp.ndarray:
+    """Quantized (M,K)x(K,N) matmul with fused dequant epilogue."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        m, n = a_q.shape[0], w_q.shape[1]
+        asc = jnp.broadcast_to(jnp.asarray(a_scale, jnp.float32), (m,))
+        wsc = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (n,))
+        return dcim_matmul_pallas(a_q, w_q, asc, wsc, out_dtype=out_dtype,
+                                  interpret=interpret)
+    return ref.dcim_matmul_ref(a_q, w_q, a_scale, w_scale, out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def dcim_matmul_int(a_q: jnp.ndarray, w_q: jnp.ndarray,
+                    *, use_pallas: bool | None = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Integer-accumulator variant: returns int32 (M,N)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return dcim_matmul_int_pallas(a_q, w_q, interpret=interpret)
+    return ref.dcim_matmul_int_ref(a_q, w_q)

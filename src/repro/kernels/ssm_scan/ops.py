@@ -1,0 +1,26 @@
+"""Entry point for the SSM linear-recurrence scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssm_scan_pallas
+from .ref import ssm_scan_assoc_ref, ssm_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ssm_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+             *, use_pallas: bool | None = None, interpret: bool = False
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: (T, D); h0: (D,).  Returns (states (T, D), final (D,)).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return ssm_scan_pallas(a, b, h0, interpret=interpret)
+    return ssm_scan_assoc_ref(a, b, h0)

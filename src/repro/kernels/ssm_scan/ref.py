@@ -1,0 +1,44 @@
+"""Oracles for the chunked linear-recurrence (SSM/linear-attention) scan.
+
+Recurrence (diagonal):  h_t = a_t * h_{t-1} + b_t,   h_{-1} = h0
+Returns every state h_0..h_{T-1} plus the final carry.
+
+Two oracles: a sequential ``lax.scan`` (ground truth) and an
+``associative_scan`` formulation (validates the parallel decomposition the
+chunked Pallas kernel relies on).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b: (T, D); h0: (D,) -> (states (T, D), final (D,))."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    final, states = jax.lax.scan(step, h0, (a, b))
+    return states, final
+
+
+def ssm_scan_assoc_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Same contract via associative composition (A, B) o (A', B') =
+    (A'A, A'B + B')."""
+    a_all = jnp.concatenate([jnp.ones_like(h0)[None], a], axis=0)
+    b_all = jnp.concatenate([h0[None], b], axis=0)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    aa, bb = jax.lax.associative_scan(combine, (a_all, b_all), axis=0)
+    states = bb[1:]
+    return states, states[-1]

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips ('data','model');
+multi-pod: 2x16x16 = 512 chips ('pod','data','model') — the 'pod' axis is
+pure data parallelism across DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape: tuple[int, ...] = (1, 1),
+                   axes: tuple[str, ...] = ("data", "model")):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = 1
+    for s in shape:
+        n *= s
+    avail = len(jax.devices())
+    if n > avail:
+        shape = (1,) * (len(shape) - 1) + (avail,)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable SDS trees for
+each step kind — no device allocation, the dry-run lowers directly from
+these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, SHAPES, ShapeCfg
+from ..models.registry import ModelApi
+from ..parallel.logical import abstract_init, split_logical
+from ..parallel.sharding import rules_for_mesh
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeCfg):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32), "labels": sds((b, s), jnp.int32)}
+    if cfg.frontend is not None:
+        batch["frontend"] = sds((b, cfg.frontend.n_tokens,
+                                 cfg.frontend.d_frontend), jnp.float32)
+    return batch
+
+
+def batch_shardings(cfg: ArchConfig, batch, mesh, rules):
+    bspec = rules.get("batch")
+
+    def spec_for(x):
+        return NamedSharding(mesh, P(bspec, *([None] * (len(x.shape) - 1))))
+
+    return jax.tree.map(spec_for, batch)
+
+
+def abstract_params(api: ModelApi, mesh, rules):
+    """(SDS tree, NamedSharding tree) for the model params — no allocation."""
+    key = jax.random.PRNGKey(0)
+    ltree = abstract_init(api.init_params, key)
+    vals, specs = split_logical(ltree, rules)
+    shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
+    return vals, shardings
+
+
+def abstract_opt_state(params_sds, param_shardings, mesh):
+    """AdamW m/v mirror the params (f32); count replicated."""
+    f32 = lambda p: sds(p.shape, jnp.float32)
+    return (
+        {"m": jax.tree.map(f32, params_sds),
+         "v": jax.tree.map(f32, params_sds),
+         "count": sds((), jnp.int32)},
+        {"m": param_shardings, "v": param_shardings,
+         "count": NamedSharding(mesh, P())},
+    )
+
+
+def abstract_decode_state(api: ModelApi, shape: ShapeCfg, mesh, rules):
+    """(SDS tree, shardings) for the serve state: KV cache of seq_len (the
+    'one new token against a cache of seq_len' contract)."""
+    b, s = shape.global_batch, shape.seq_len
+    ltree = abstract_init(lambda: api.init_decode_state(b, s))
+    vals, specs = split_logical(ltree, rules)
+    shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
+    return vals, shardings
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeCfg, mesh, rules):
+    b = shape.global_batch
+    toks = sds((b, 1), jnp.int32)
+    shard = NamedSharding(mesh, P(rules.get("batch"), None))
+    return toks, shard
+
+
+def prefill_token_specs(cfg: ArchConfig, shape: ShapeCfg, mesh, rules):
+    b, s = shape.global_batch, shape.seq_len
+    toks = sds((b, s), jnp.int32)
+    shard = NamedSharding(mesh, P(rules.get("batch"), None))
+    return toks, shard

@@ -1,0 +1,46 @@
+"""Per-cell tuned configurations — the OUTCOME of the §Perf hillclimb
+(EXPERIMENTS.md).  ``--tuned`` dry-runs apply these on top of
+``act_shard=True`` (iteration 1, global win) to produce the beyond-paper
+optimized table; baselines stay in artifacts/dryrun.
+
+Keys: (arch, shape, mesh) with None wildcards; first exact match wins.
+"""
+
+from __future__ import annotations
+
+# Tiny-width archs (d_model/16 < 128 lanes) suffer degenerate 16-way TP:
+# head-padding all-reduces dominate.  Measured fixes:
+#   * train (global_batch divides the whole mesh): pure data parallelism —
+#     batch over every axis, features local, weights still FSDP-sharded.
+#   * prefill (batch < chips): batch over 'data' + sequence-parallel
+#     activations over 'model'.
+_PURE_DP_TRAIN = {"batch": ["pod", "data", "model"], "act_heads": None,
+                  "act_ff": None}
+_PURE_DP_TRAIN_MULTI = {"batch": ["data", "model"], "act_heads": None,
+                        "act_ff": None}
+_SEQ_PARALLEL = {"seq": "model", "act_heads": None, "act_ff": None}
+
+TUNED: dict[tuple, dict] = {
+    # mistral-large-123b train: remat off — recompute eliminated (compute
+    # 20.0s -> 16.0s, memory 19.1 -> 14.7s, mfu bound 0.765 -> 0.957);
+    # measured 15.6 GiB/chip of 16 (tight — revert to remat or microbatch=2
+    # if fragmentation bites on silicon).
+    ("mistral-large-123b", "train_4k", None): {"remat": False},
+    # internvl2-1b (d=896): hillclimb cells — 0.0014 -> 0.269 (train),
+    # 0.0002 -> 0.0153 (prefill); see EXPERIMENTS.md §Perf.
+    ("internvl2-1b", "train_4k", "single"): {"sharding_overrides": _PURE_DP_TRAIN},
+    ("internvl2-1b", "train_4k", "multi"): {"sharding_overrides": _PURE_DP_TRAIN_MULTI},
+    ("internvl2-1b", "prefill_32k", None): {"sharding_overrides": _SEQ_PARALLEL},
+    # whisper-tiny (d=384): same degenerate-TP pathology as internvl.
+    ("whisper-tiny", "train_4k", "single"): {"sharding_overrides": _PURE_DP_TRAIN},
+    ("whisper-tiny", "train_4k", "multi"): {"sharding_overrides": _PURE_DP_TRAIN_MULTI},
+    ("whisper-tiny", "prefill_32k", None): {"sharding_overrides": _SEQ_PARALLEL},
+}
+
+
+def tuned_overrides(arch: str, shape: str, mesh: str) -> dict:
+    for key in ((arch, shape, mesh), (arch, shape, None), (arch, None, mesh),
+                (arch, None, None)):
+        if key in TUNED:
+            return dict(TUNED[key])
+    return {}

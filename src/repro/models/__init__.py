@@ -1,0 +1,3 @@
+from .registry import ModelApi, cross_entropy_loss, get_model
+
+__all__ = ["ModelApi", "cross_entropy_loss", "get_model"]

@@ -1,0 +1,356 @@
+"""Shared neural-net layers (pure JAX, logical-axis params).
+
+Every linear layer routes through the DCIM execution semantics
+(``DcimLinear``): at train time weights/activations pass through
+straight-through fake-quant at the macro's INT precision (QAT — what you
+train is what the macro computes); at serve time the same layer can execute
+the true integer path (``repro.kernels.dcim_mac``).
+
+Attention is blockwise (FlashAttention-style online softmax, pure jnp +
+lax.scan) so long-context shapes compile with O(q_block x kv_block) live
+memory instead of O(S^2): python-unrolled query blocks with *exact* static
+causal KV ranges (no wasted quadratic FLOPs — the roofline reads HLO FLOPs).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.logical import Logical, param
+from ..parallel.sharding import constrain_act
+from ..quant import fake_quant
+
+# weight out-axis -> activation logical axis (for constrain_act)
+_ACT_OF = {"heads": "act_heads", "kv_heads": "act_heads", "ff": "act_ff",
+           "embed": "act_embed", "vocab": "act_vocab"}
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+def dt(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# DCIM linear
+# ---------------------------------------------------------------------------
+
+
+def dcim_linear_init(key, d_in: int, d_out: int, in_axis: str, out_axis: str,
+                     dtype, scale: float | None = None) -> dict:
+    return {"w": param(key, (d_in, d_out), (in_axis, out_axis), dtype,
+                       scale=scale)}
+
+
+def dcim_linear_apply(w: jnp.ndarray, x: jnp.ndarray, *, a_bits: int = 8,
+                      w_bits: int = 8, enabled: bool = True,
+                      compute_dtype=jnp.bfloat16,
+                      out_ax: str | None = None) -> jnp.ndarray:
+    """y = x @ W under DCIM QAT semantics.
+
+    Weights fake-quantized per-output-channel (columns live in macro columns),
+    activations per-token (rows stream bit-serially) — gradients pass straight
+    through.  ``enabled=False`` gives the plain (non-paper baseline) linear.
+    ``out_ax``: logical axis of the output features — drives the activation
+    sharding constraint (no-op unless cfg.act_shard armed the context).
+    """
+    x = x.astype(compute_dtype)
+    w = w.astype(compute_dtype)
+    if enabled:
+        w = fake_quant(w, w_bits, 0)      # per-out-channel (axis 0 = d_in dim reduced)
+        x = fake_quant(x, a_bits, -1)     # per-token
+    y = jnp.matmul(x, w)
+    if out_ax is not None and y.ndim == 3:
+        y = constrain_act(y, ("batch", "seq", _ACT_OF.get(out_ax, out_ax)))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / rotary
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, axis: str = "act_embed") -> dict:
+    return {"g": Logical(jnp.ones((d,), jnp.float32), (axis,))}
+
+
+def rmsnorm_apply(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype) -> dict:
+    # d^-1/2 init keeps tied-embedding logits ~N(0,1) at init (CE ~= ln V).
+    return {"emb": param(key, (vocab, d), ("vocab", "embed"), dtype,
+                         scale=d ** -0.5)}
+
+
+def embedding_apply(p: dict, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    out = p["emb"].astype(compute_dtype)[tokens]
+    return constrain_act(out, ("batch", "seq", "act_embed"))
+
+
+def constrain_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    return constrain_act(logits, ("batch", "seq", "act_vocab"))
+
+
+def mask_padded_vocab(logits: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Neutralize sharding-padding columns WITHOUT slicing (a slice on the
+    model-sharded vocab dim would force an all-gather of the logits)."""
+    vp = logits.shape[-1]
+    if vp == vocab:
+        return logits
+    mask = jnp.arange(vp) < vocab
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, logits.dtype)
+    return jnp.where(mask, logits, neg)
+
+
+def unembed_apply(p: dict, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    out = jnp.matmul(x.astype(compute_dtype),
+                     p["emb"].astype(compute_dtype).T)
+    return constrain_act(out, ("batch", "seq", "act_vocab"))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, half)
+    ang = ang[..., None, :]                                     # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (memory-efficient, causal-exact)
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D)."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)) \
+        .reshape(b, s, h * groups, d)
+
+
+def _attn_block(q, k, v, mask) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One (qb x kvb) tile: returns (m, l, acc) online-softmax stats.
+
+    q: (B, H, qb, D); k, v: (B, H, kvb, D); mask: (qb, kvb) or None.
+    """
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    if mask is not None:
+        s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)                            # (B,H,qb)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+    return m, l, acc
+
+
+def _merge_stats(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    e1 = jnp.exp(m1 - m)
+    e2 = jnp.exp(m2 - m)
+    l = l1 * e1 + l2 * e2
+    a = a1 * e1[..., None].astype(a1.dtype) + a2 * e2[..., None].astype(a2.dtype)
+    return m, l, a
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool, q_block: int, kv_block: int,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """FlashAttention-style attention in pure jnp.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    Causal semantics: query position i (+q_offset) attends keys <= i+q_offset.
+    Query blocks unroll in python with exact static causal KV extents; KV
+    blocks run under lax.scan with online-softmax merging.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = 1.0 / math.sqrt(d)
+    qt = jnp.swapaxes(q, 1, 2) * scale       # (B,H,Sq,D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    n_q = (sq + q_block - 1) // q_block
+    outs = []
+    for qi in range(n_q):
+        q0 = qi * q_block
+        qb = min(q_block, sq - q0)
+        q_tile = lax.slice_in_dim(qt, q0, q0 + qb, axis=2)
+        if causal:
+            hi = min(skv, q0 + qb + q_offset)      # last key visible
+        else:
+            hi = skv
+        n_kv = (hi + kv_block - 1) // kv_block
+        if n_kv == 0:
+            outs.append(jnp.zeros_like(q_tile))
+            continue
+
+        def kv_step(carry, ki, q_tile=q_tile, q0=q0, qb=qb, hi=hi):
+            m, l, acc = carry
+            k0 = ki * kv_block
+            k_tile = lax.dynamic_slice_in_dim(kt, k0, kv_block, axis=2)
+            v_tile = lax.dynamic_slice_in_dim(vt, k0, kv_block, axis=2)
+            kpos = k0 + jnp.arange(kv_block)
+            valid = kpos < hi
+            if causal:
+                qpos = q0 + q_offset + jnp.arange(qb)
+                mask = valid[None, :] & (kpos[None, :] <= qpos[:, None])
+            else:
+                mask = jnp.broadcast_to(valid[None, :], (qb, kv_block))
+            m2, l2, a2 = _attn_block(q_tile, k_tile, v_tile, mask)
+            return _merge_stats(m, l, acc, m2, l2, a2), None
+
+        init = (jnp.full((b, hq, qb), -1e30, jnp.float32),
+                jnp.zeros((b, hq, qb), jnp.float32),
+                jnp.zeros((b, hq, qb, d), qt.dtype))
+        (m, l, acc), _ = lax.scan(kv_step, init, jnp.arange(n_kv))
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype))
+    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+    return jnp.swapaxes(out, 1, 2)            # (B,Sq,Hq,D)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": param(ks[0], (d, cfg.n_heads * hd), ("embed", "heads"), dtype),
+        "wk": param(ks[1], (d, cfg.n_kv_heads * hd), ("embed", "kv_heads"), dtype),
+        "wv": param(ks[2], (d, cfg.n_kv_heads * hd), ("embed", "kv_heads"), dtype),
+        "wo": param(ks[3], (cfg.n_heads * hd, d), ("heads", "embed"), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def attention_apply(p: dict, x: jnp.ndarray, cfg, *, positions: jnp.ndarray,
+                    causal: bool = True, kv_cache: dict | None = None,
+                    cache_pos: jnp.ndarray | None = None,
+                    kv_override: tuple | None = None,
+                    prefill_fill: bool = False) -> tuple[jnp.ndarray, dict | None]:
+    """x: (B, S, d).
+
+    Modes:
+      * plain (kv_cache=None): blockwise attention over local K/V.
+      * prefill (kv_cache + prefill_fill): blockwise attention *and* the
+        computed K/V written into the cache at position 0.
+      * decode (kv_cache, prefill_fill=False): append K/V at ``cache_pos``,
+        attend over the cache (GQA-grouped einsum — no repeated-KV tensor).
+    ``kv_override`` supplies external K/V (cross-attention).
+    """
+    b, s, d = x.shape
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    lin = partial(dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                  w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                  compute_dtype=x.dtype)
+    q = lin(p["wq"], x, out_ax="heads").reshape(b, s, hq, hd)
+    if kv_override is None:
+        k = lin(p["wk"], x, out_ax="kv_heads").reshape(b, s, hkv, hd)
+        v = lin(p["wv"], x, out_ax="kv_heads").reshape(b, s, hkv, hd)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    if kv_override is None and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    elif positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and prefill_fill:
+        ck = lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                                      (0, 0, 0, 0))
+        cv = lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                                      (0, 0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        out = blockwise_attention(q, k, v, causal=causal,
+                                  q_block=cfg.attn_q_block,
+                                  kv_block=cfg.attn_kv_block)
+    elif kv_cache is not None:
+        # Decode: write the new K/V into the cache at cache_pos, attend over
+        # everything written so far (mask handles the tail).  GQA einsum keeps
+        # KV un-repeated: q regrouped to (b, s, hkv, g, hd).
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        qg = q.reshape(b, s, hkv, g, hd) / math.sqrt(hd)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, ck.astype(x.dtype))
+        tpos = jnp.arange(ck.shape[1])
+        mask = tpos[None, :] <= (cache_pos + jnp.arange(s))[:, None]
+        scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                           -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", w, cv.astype(x.dtype))
+        out = out.reshape(b, s, hq, hd)
+    else:
+        # Gather K/V across any sequence sharding ONCE, before the q-block
+        # loop (otherwise every q block re-gathers them — measured 316 GiB
+        # vs 14 GiB per step on seq-parallel 32k prefill).
+        k = constrain_act(k, ("batch", "attn_kv_seq", "act_heads", None))
+        v = constrain_act(v, ("batch", "attn_kv_seq", "act_heads", None))
+        out = blockwise_attention(q, k, v, causal=causal,
+                                  q_block=cfg.attn_q_block,
+                                  kv_block=cfg.attn_kv_block)
+    out = out.reshape(b, s, hq * hd)
+    y = lin(p["wo"], out, out_ax="embed")
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg, dtype, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": param(ks[0], (d, ff), ("embed", "ff"), dtype),
+        "w_up": param(ks[1], (d, ff), ("embed", "ff"), dtype),
+        "w_down": param(ks[2], (ff, d), ("ff", "embed"), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    lin = partial(dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                  w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                  compute_dtype=x.dtype)
+    g = lin(p["w_gate"], x, out_ax="ff")
+    u = lin(p["w_up"], x, out_ax="ff")
+    return lin(p["w_down"], jax.nn.silu(g) * u, out_ax="embed")

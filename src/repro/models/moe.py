@@ -1,0 +1,223 @@
+"""Mixture-of-Experts decoder (granite-3.0-moe family): GQA attention + top-k
+routed SwiGLU experts with GShard/Switch capacity-based dispatch.
+
+Dispatch is the einsum formulation proven at pod scale (GShard lineage): token
+groups of ``MOE_GROUP`` tokens build (group, S, E, C) dispatch/combine
+tensors; under the expert-parallel sharding rules (experts -> 'model' axis,
+groups -> 'data' axis) GSPMD lowers the two einsums into all-to-alls.  Group
+size bounds both the dispatch-tensor memory and its FLOPs overhead
+(E*C ≈ S*k*cf per token — keep S small).
+
+The MCR/weight-update angle of the paper (DESIGN.md §5): expert weights cycle
+per token group, so a DCIM mapping of MoE experts exercises the macro's
+weight-update frequency spec; benchmarks/bench_dse.py reports it.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.logical import Logical, param
+from . import layers as L
+from .transformer import (_logits, init_decode_state, scan_layers, stack_init)
+from .transformer import block_init as dense_block_init
+
+MOE_GROUP = 256      # tokens per dispatch group
+
+
+def moe_mlp_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    e, ff = cfg.moe.n_experts, cfg.moe.d_expert
+    ks = jax.random.split(key, 4)
+    return {
+        "router": param(ks[0], (d, e), ("embed", "experts"), dtype),
+        "w_gate": param(ks[1], (e, d, ff), ("experts", "embed", "expert_ff"), dtype),
+        "w_up": param(ks[2], (e, d, ff), ("experts", "embed", "expert_ff"), dtype),
+        "w_down": param(ks[3], (e, ff, d), ("experts", "expert_ff", "embed"), dtype),
+    }
+
+
+def _top_k_dispatch(gates: jnp.ndarray, k: int, capacity: int):
+    """gates: (G, S, E) softmax router probs.  Returns (dispatch (G,S,E,C)
+    bool, combine (G,S,E,C) f32, aux_loss) via the Switch/GShard slot
+    assignment: iterate the k choices, positions within an expert given by a
+    cumulative count over the group; overflow tokens drop (capacity factor)."""
+    g, s, e = gates.shape
+    topv, topi = jax.lax.top_k(gates, k)                       # (G,S,k)
+    prio_used = jnp.zeros((g, e), jnp.int32)
+    dispatch = jnp.zeros((g, s, e, capacity), bool)
+    combine = jnp.zeros((g, s, e, capacity), jnp.float32)
+    for slot in range(k):
+        idx = topi[..., slot]                                  # (G,S)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)       # (G,S,E)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + prio_used[:, None, :]
+        prio_used = prio_used + onehot.sum(axis=1)
+        mypos = jnp.take_along_axis(pos, idx[..., None], -1)[..., 0]  # (G,S)
+        keep = mypos < capacity
+        posoh = jax.nn.one_hot(jnp.where(keep, mypos, capacity), capacity + 1,
+                               dtype=jnp.float32)[..., :capacity]  # (G,S,C)
+        d_slot = onehot.astype(jnp.float32)[..., None] * posoh[..., None, :]
+        dispatch = dispatch | (d_slot > 0)
+        combine = combine + d_slot * topv[..., slot][..., None, None]
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    density = dispatch.any(-1).astype(jnp.float32).mean(axis=(0, 1))  # (E,)
+    p_mean = gates.mean(axis=(0, 1))
+    aux = e * jnp.sum(density * p_mean)
+    return dispatch, combine, aux
+
+
+def moe_mlp_apply(p, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    cd = x.dtype
+    b, s, d = x.shape
+    e, k, ffe = cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.d_expert
+    lin = partial(L.dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                  w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                  compute_dtype=cd)
+    # group tokens: (G, Sg, d)
+    toks = b * s
+    sg = min(MOE_GROUP, toks)
+    gcount = toks // sg
+    xg = x.reshape(gcount, sg, d)
+    logits = jnp.matmul(xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    cap = max(1, int(math.ceil(sg * k / e * cfg.moe.capacity_factor)))
+    dispatch, combine, aux = _top_k_dispatch(gates, k, cap)
+
+    # dispatch: (G,Sg,E,C) x (G,Sg,d) -> (E,G,C,d)   [all-to-all under EP]
+    from ..parallel.sharding import constrain_act
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(cd), xg)
+    xin = constrain_act(xin, ("experts", "batch", None, None))
+    wg = p["w_gate"].astype(cd)
+    wu = p["w_up"].astype(cd)
+    wd = p["w_down"].astype(cd)
+    if cfg.dcim_enabled:
+        from ..quant import fake_quant
+        wg = fake_quant(wg, cfg.dcim_w_bits, 1)
+        wu = fake_quant(wu, cfg.dcim_w_bits, 1)
+        wd = fake_quant(wd, cfg.dcim_w_bits, 1)
+        xin = fake_quant(xin, cfg.dcim_a_bits, -1)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, wg)) \
+        * jnp.einsum("egcd,edf->egcf", xin, wu)
+    hout = jnp.einsum("egcf,efd->egcd", h, wd)
+    hout = constrain_act(hout, ("experts", "batch", None, None))
+    # combine back: (G,Sg,E,C) x (E,G,C,d) -> (G,Sg,d)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(cd), hout)
+    y = constrain_act(y, ("batch", None, None))
+    return y.reshape(b, s, d), aux
+
+
+def block_init(key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], cfg, dtype),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model),
+        "moe": moe_mlp_init(ks[1], cfg, dtype),
+    }
+
+
+def block_apply(p, x, cfg, *, positions, kv_cache=None, cache_pos=None,
+                prefill_fill=False):
+    h, new_cache = L.attention_apply(p["attn"],
+                                     L.rmsnorm_apply(p["ln_attn"], x), cfg,
+                                     positions=positions, kv_cache=kv_cache,
+                                     cache_pos=cache_pos,
+                                     prefill_fill=prefill_fill)
+    x = x + h
+    y, aux = moe_mlp_apply(p["moe"], L.rmsnorm_apply(p["ln_mlp"], x), cfg)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    p = {
+        "embed": L.embedding_init(ks[1], cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": stack_init(partial(block_init, cfg=cfg, dtype=dtype),
+                             layer_keys),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"w": param(ks[2], (cfg.d_model, cfg.vocab_padded),
+                                   ("embed", "vocab"), dtype)}
+    return p
+
+
+def forward_train(p, cfg, batch):
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], batch["tokens"], cd)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def blk(h, bp):
+        h2, _, aux = block_apply(bp, h, cfg, positions=pos)
+        return h2, aux
+
+    x, auxes = scan_layers(blk, p["blocks"], x, remat=cfg.remat)
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = _logits(p, cfg, x)
+    return logits, jnp.mean(auxes)
+
+
+def decode_step(p, cfg, state, tokens, frontend=None):
+    """``state`` is a PLAIN array tree."""
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    b, s, _ = x.shape
+    pos_idx = state["pos"]
+    positions = jnp.broadcast_to(pos_idx + jnp.arange(s), (b, s))
+
+    def blk(h, xs):
+        bp, (kc, vc) = xs
+        h2, cache, _aux = block_apply(bp, h, cfg, positions=positions,
+                                      kv_cache={"k": kc, "v": vc},
+                                      cache_pos=pos_idx)
+        return h2, (cache["k"], cache["v"])
+
+    x, (k_new, v_new) = scan_layers(blk, p["blocks"], x, remat=False,
+                                    extra=(state["k"], state["v"]))
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = _logits(p, cfg, x)
+    new_state = dict(state)
+    new_state["k"] = k_new
+    new_state["v"] = v_new
+    new_state["pos"] = pos_idx + s
+    return logits, new_state
+
+
+def prefill(p, cfg, tokens, cache_len: int, frontend=None):
+    from ..parallel.logical import values_of
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    state = values_of(init_decode_state(cfg, b, cache_len))
+
+    def blk(h, xs):
+        bp, (kc, vc) = xs
+        h2, cache, _aux = block_apply(bp, h, cfg, positions=positions,
+                                      kv_cache={"k": kc, "v": vc},
+                                      cache_pos=jnp.zeros((), jnp.int32),
+                                      prefill_fill=True)
+        return h2, (cache["k"], cache["v"])
+
+    x, (k_new, v_new) = scan_layers(blk, p["blocks"], x, remat=cfg.remat,
+                                    extra=(state["k"], state["v"]))
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = _logits(p, cfg, x)
+    state["k"] = k_new
+    state["v"] = v_new
+    state["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, state

@@ -1,0 +1,74 @@
+"""Uniform model API over the zoo.
+
+``get_model(cfg)`` returns a :class:`ModelApi` whose functions all take PLAIN
+array trees (init_params returns a Logical tree for sharding-spec
+derivation; strip with ``values_of`` / ``split_logical``).
+
+forward_train returns (logits, aux_loss) uniformly (aux = 0 for non-MoE).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from . import transformer as tfm_mod
+from . import zamba2 as zamba_mod
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init_params: Callable          # key -> Logical tree
+    forward_train: Callable        # (params, batch) -> (logits, aux)
+    prefill: Callable              # (params, tokens, cache_len, frontend) -> (logits, state)
+    decode_step: Callable          # (params, state, tokens, frontend) -> (logits, state)
+    init_decode_state: Callable    # (batch, cache_len) -> Logical tree
+
+
+def _wrap_aux(fn):
+    def f(p, cfg, batch):
+        out = fn(p, cfg, batch)
+        if isinstance(out, tuple):
+            return out
+        return out, jnp.zeros((), jnp.float32)
+    return f
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family in ("dense", "vlm", "audio"):
+        m = tfm_mod
+    elif cfg.family == "moe":
+        m = moe_mod
+    elif cfg.family == "ssm":
+        m = rwkv_mod
+    elif cfg.family == "hybrid":
+        m = zamba_mod
+    else:  # pragma: no cover
+        raise ValueError(f"unknown family {cfg.family}")
+    fwd = _wrap_aux(m.forward_train)
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda key: m.init_params(key, cfg),
+        forward_train=lambda p, batch: fwd(p, cfg, batch),
+        prefill=lambda p, tokens, cache_len, frontend=None:
+            m.prefill(p, cfg, tokens, cache_len, frontend=frontend),
+        decode_step=lambda p, state, tokens, frontend=None:
+            m.decode_step(p, cfg, state, tokens, frontend=frontend),
+        init_decode_state=lambda batch, cache_len:
+            m.init_decode_state(cfg, batch, cache_len),
+    )
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Token-mean CE in f32 (logits may be bf16)."""
+    lf = logits.astype(jnp.float32)
+    logz = jnp.log(jnp.sum(jnp.exp(lf - lf.max(-1, keepdims=True)), -1)) \
+        + lf.max(-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], -1)[..., 0]
+    return jnp.mean(logz - gold)

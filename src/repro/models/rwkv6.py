@@ -1,0 +1,230 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay) — arXiv:2404.05892.
+
+Per block: Time-Mix (token-shift lerp, r/k/v/g projections, LoRA-produced
+per-token decay w, WKV recurrence with bonus u) + Channel-Mix (token-shift,
+squared-ReLU FFN gated by sigmoid(r)).  The WKV recurrence runs on the shared
+chunked-GLA path (``repro.models.ssm``); decode carries per-layer
+(shift_tmix, shift_cmix, wkv_state).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.logical import Logical, param
+from . import layers as L
+from .ssm import chunked_gla, gla_decode_step
+from .transformer import scan_layers, stack_init
+
+LORA_R = 64
+
+
+def block_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    h = cfg.n_heads
+    dk = cfg.hd
+    return {
+        "ln_t": L.rmsnorm_init(d),
+        "ln_c": L.rmsnorm_init(d),
+        # time-mix
+        "mu_r": Logical(jnp.full((d,), 0.5, jnp.float32), ("act_embed",)),
+        "mu_k": Logical(jnp.full((d,), 0.5, jnp.float32), ("act_embed",)),
+        "mu_v": Logical(jnp.full((d,), 0.5, jnp.float32), ("act_embed",)),
+        "mu_g": Logical(jnp.full((d,), 0.5, jnp.float32), ("act_embed",)),
+        "mu_w": Logical(jnp.full((d,), 0.5, jnp.float32), ("act_embed",)),
+        "wr": param(ks[0], (d, d), ("embed", "heads"), dtype),
+        "wk": param(ks[1], (d, d), ("embed", "heads"), dtype),
+        "wv": param(ks[2], (d, d), ("embed", "heads"), dtype),
+        "wg": param(ks[3], (d, d), ("embed", "heads"), dtype),
+        "wo": param(ks[4], (d, d), ("heads", "embed"), dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": Logical(jnp.full((d,), -1.0, jnp.float32), ("act_embed",)),
+        "wA": param(ks[5], (d, LORA_R), ("embed", None), dtype, scale=0.01),
+        "wB": param(ks[6], (LORA_R, d), (None, "heads"), dtype, scale=0.01),
+        "u": Logical(jnp.full((h, dk), 0.5, jnp.float32), ("act_heads", None)),
+        "ln_x": L.rmsnorm_init(d),
+        # channel-mix
+        "mu_ck": Logical(jnp.full((d,), 0.5, jnp.float32), ("act_embed",)),
+        "mu_cr": Logical(jnp.full((d,), 0.5, jnp.float32), ("act_embed",)),
+        "ck": param(ks[7], (d, cfg.d_ff), ("embed", "ff"), dtype),
+        "cv": param(ks[8], (cfg.d_ff, d), ("ff", "embed"), dtype),
+        "cr": param(ks[9], (d, d), ("embed", "heads"), dtype),
+    }
+
+
+def _shift(x: jnp.ndarray, last: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token shift: previous token's features ((B,T,D) -> shifted)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1) \
+        if x.shape[1] > 1 else last[:, None, :]
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def time_mix(p, x, cfg, *, state=None):
+    """x: (B,T,d).  state: {'shift': (B,d), 'wkv': (B,H,dk,dv)} for decode."""
+    b, t, d = x.shape
+    h, dk = cfg.n_heads, cfg.hd
+    cd = x.dtype
+    lin = partial(L.dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                  w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                  compute_dtype=cd)
+    last = state["shift_t"] if state is not None else None
+    xs = _shift(x, last)
+    r = lin(p["wr"], _lerp(x, xs, p["mu_r"]).astype(cd), out_ax="heads")
+    k = lin(p["wk"], _lerp(x, xs, p["mu_k"]).astype(cd), out_ax="heads")
+    v = lin(p["wv"], _lerp(x, xs, p["mu_v"]).astype(cd), out_ax="heads")
+    g = lin(p["wg"], _lerp(x, xs, p["mu_g"]).astype(cd), out_ax="heads")
+    xw = _lerp(x, xs, p["mu_w"]).astype(cd)
+    lora = jnp.matmul(jnp.tanh(jnp.matmul(xw, p["wA"].astype(cd))),
+                      p["wB"].astype(cd))
+    log_w = -jnp.exp(jnp.clip(p["w0"] + lora.astype(jnp.float32), -8.0, 4.0))
+
+    rq = r.reshape(b, t, h, dk)
+    kq = k.reshape(b, t, h, dk)
+    vq = v.reshape(b, t, h, dk)
+    lw = log_w.reshape(b, t, h, dk)
+    u = p["u"].value if isinstance(p["u"], Logical) else p["u"]
+
+    if state is None:
+        y, s_fin = chunked_gla(rq, kq, vq, lw, u=u, inclusive=False,
+                               chunk=cfg.ssm.chunk, remat=cfg.remat)
+    else:
+        yv, s_fin = gla_decode_step(rq[:, 0], kq[:, 0], vq[:, 0], lw[:, 0],
+                                    state["wkv"], u=u, inclusive=False)
+        y = yv[:, None]
+    new_state = {"shift_t": x[:, -1, :], "wkv": s_fin}
+    y = y.reshape(b, t, d)
+    y = L.rmsnorm_apply(p["ln_x"], y)
+    y = y * jax.nn.silu(g)
+    return lin(p["wo"], y, out_ax="embed"), new_state
+
+
+def channel_mix(p, x, cfg, *, state=None):
+    cd = x.dtype
+    lin = partial(L.dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                  w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                  compute_dtype=cd)
+    last = state["shift_c"] if state is not None else None
+    xs = _shift(x, last)
+    xk = _lerp(x, xs, p["mu_ck"]).astype(cd)
+    xr = _lerp(x, xs, p["mu_cr"]).astype(cd)
+    kk = jnp.square(jax.nn.relu(lin(p["ck"], xk, out_ax="ff")))
+    out = lin(p["cv"], kk, out_ax="embed")
+    out = out * jax.nn.sigmoid(lin(p["cr"], xr, out_ax="embed"))
+    return out, {"shift_c": x[:, -1, :]}
+
+
+def block_apply(p, x, cfg, *, state=None):
+    """Returns (x, state') — state' always carries the block's final
+    recurrent state (shift_t, shift_c, wkv), so prefill hands exact state to
+    decode."""
+    t_in = L.rmsnorm_apply(p["ln_t"], x)
+    h, st_t = time_mix(p, t_in, cfg, state=state)
+    x = x + h
+    c_in = L.rmsnorm_apply(p["ln_c"], x)
+    h2, st_c = channel_mix(p, c_in, cfg, state=state)
+    x = x + h2
+    return x, {**st_t, **st_c}
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": L.embedding_init(ks[1], cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": stack_init(partial(block_init, cfg=cfg, dtype=dtype),
+                             layer_keys),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+        "unembed": {"w": param(ks[2], (cfg.d_model, cfg.vocab_padded),
+                               ("embed", "vocab"), dtype)},
+    }
+
+
+def forward_train(p, cfg, batch):
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], batch["tokens"], cd)
+
+    def blk(h, bp):
+        h2, _ = block_apply(bp, h, cfg)
+        return h2, 0
+
+    x, _ = scan_layers(blk, p["blocks"], x, remat=cfg.remat)
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    return L.mask_padded_vocab(L.constrain_logits(jnp.matmul(x.astype(cd), p["unembed"]["w"].astype(cd))), cfg.vocab)
+
+
+def init_decode_state(cfg, batch: int, cache_len: int = 0):
+    """O(1) recurrent state — cache_len is irrelevant (attention-free)."""
+    cd = L.dt(cfg.compute_dtype)
+    lyr = cfg.n_layers
+    d, h, dk = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "shift_t": Logical(jnp.zeros((lyr, batch, d), cd),
+                           ("layer", "batch", "act_embed")),
+        "shift_c": Logical(jnp.zeros((lyr, batch, d), cd),
+                           ("layer", "batch", "act_embed")),
+        "wkv": Logical(jnp.zeros((lyr, batch, h, dk, dk), jnp.float32),
+                       ("layer", "batch", "act_heads", None, None)),
+        "pos": Logical(jnp.zeros((), jnp.int32), ()),
+    }
+
+
+def decode_step(p, cfg, state, tokens, frontend=None):
+    """``state`` is a PLAIN array tree."""
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    extra = (state["shift_t"], state["shift_c"], state["wkv"])
+
+    def blk(h, xs):
+        bp, (sht, shc, wkv) = xs
+        h2, ns = block_apply(bp, h, cfg,
+                             state={"shift_t": sht, "shift_c": shc, "wkv": wkv})
+        return h2, (ns["shift_t"].astype(sht.dtype), ns["shift_c"], ns["wkv"])
+
+    x, (nst, nsc, nwkv) = scan_layers(blk, p["blocks"], x, remat=False,
+                                      extra=extra)
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = L.mask_padded_vocab(jnp.matmul(x.astype(cd), p["unembed"]["w"].astype(cd)), cfg.vocab)
+    new_state = dict(state)
+    new_state["shift_t"] = nst
+    new_state["shift_c"] = nsc
+    new_state["wkv"] = nwkv
+    new_state["pos"] = state["pos"] + tokens.shape[1]
+    return logits, new_state
+
+
+def prefill(p, cfg, tokens, cache_len: int = 0, frontend=None):
+    """Prefill = chunked-GLA forward; block states (token shifts + final WKV
+    state) hand off exactly into decode."""
+    from ..parallel.logical import values_of
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    b = tokens.shape[0]
+    state = values_of(init_decode_state(cfg, b))
+
+    def blk(h, bp):
+        h2, st = block_apply(bp, h, cfg)
+        return h2, (st["shift_t"], st["shift_c"], st["wkv"])
+
+    x_out, (sht, shc, wkv) = scan_layers(blk, p["blocks"], x, remat=cfg.remat)
+    x_f = L.rmsnorm_apply(p["ln_f"], x_out)
+    logits = L.mask_padded_vocab(jnp.matmul(x_f.astype(cd), p["unembed"]["w"].astype(cd)), cfg.vocab)
+    state["shift_t"] = sht.astype(cd)
+    state["shift_c"] = shc.astype(cd)
+    state["wkv"] = wkv
+    state["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, state

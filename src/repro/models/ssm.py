@@ -1,0 +1,136 @@
+"""Chunked decayed linear attention — the shared recurrence under RWKV6
+("Finch", vector decay per key channel) and Mamba2 (SSD, scalar decay per
+head).
+
+Semantics per head with state S in R^{dk x dv}:
+
+    S_t = Diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = q_t^T (S_{t-1} + Diag(u) k_t v_t^T)     [rwkv: bonus u, exclusive]
+    y_t = q_t^T S_t                               [mamba: inclusive, no bonus]
+
+Chunked evaluation (GLA-style): within a chunk of C tokens the decay factors
+telescope into per-token exponentials of the cumulative log-decay, giving an
+exact O(C^2) intra-chunk term plus an O(dk x dv) inter-chunk state carried by
+``lax.scan``.  Backward memory stays O(T/C x state) via remat of the chunk
+body — this is what makes 4k-token training and 500k-token decode of the SSM
+archs feasible (DESIGN.md §5).
+
+Decode (T=1) uses the plain recurrence; the Pallas ``ssm_scan`` kernel covers
+the diagonal case on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_gla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                log_w: jnp.ndarray, *, u: jnp.ndarray | None = None,
+                inclusive: bool = False, chunk: int = 256,
+                s0: jnp.ndarray | None = None, remat: bool = True
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """q, k: (B, T, H, dk); v: (B, T, H, dv); log_w: (B, T, H, dk) (<= 0).
+
+    u: (H, dk) bonus (rwkv) — applied to the diagonal (current token) term.
+    inclusive: diagonal uses decayed state *including* k_t v_t (mamba2).
+    s0: (B, H, dk, dv) initial state.
+    Returns (y (B, T, H, dv), final_state (B, H, dk, dv)).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = t + pad
+    nc = tp // c
+
+    def to_chunks(x):
+        # (B, T, H, D) -> (NC, B, H, C, D)
+        return x.reshape(b, nc, c, h, -1).transpose(1, 0, 3, 2, 4)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lwc = to_chunks(log_w).astype(jnp.float32)
+
+    ccum = jnp.cumsum(lwc, axis=-2)                 # inclusive over chunk
+    ccum_ex = ccum - lwc                            # exclusive
+    wtot = ccum[..., -1:, :]                        # (NC,B,H,1,dk)
+
+    # Factored decay weights (exact; bounded within a chunk).  Convention:
+    #   exclusive (rwkv):  y_i reads S_{i-1} -> q scales by exp(ccum_ex_i),
+    #                      strictly-causal mask, diagonal via the u bonus;
+    #   inclusive (mamba): y_i reads S_i     -> q scales by exp(ccum_i),
+    #                      mask includes the diagonal (coefficient
+    #                      exp(ccum_i - ccum_i) = 1, i.e. k_i v_i undecayed).
+    q_cum = ccum if inclusive else ccum_ex
+    q_dec = (qc.astype(jnp.float32) * jnp.exp(q_cum))            # q~
+    k_dec = (kc.astype(jnp.float32) * jnp.exp(-ccum))            # k~ (1/G_j)
+    k_rem = (kc.astype(jnp.float32) * jnp.exp(wtot - ccum))      # for state upd
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)      # strictly lower (j < i)
+    if inclusive:
+        tri = jnp.tril(jnp.ones((c, c), bool), 0)   # j <= i
+
+    def chunk_step(s, xs):
+        qd, kd, kr, vv, wt, qraw, kraw = xs
+        # inter-chunk: y_i += (q_i ⊙ E_i) S
+        y_inter = jnp.einsum("bhcd,bhde->bhce", qd, s)
+        # intra-chunk: scores_ij = q~_i · k~_j  (masked causal)
+        scores = jnp.einsum("bhcd,bhkd->bhck", qd, kd)
+        scores = jnp.where(tri, scores, 0.0)
+        y_intra = jnp.einsum("bhck,bhke->bhce", scores, vv.astype(jnp.float32))
+        y = y_inter + y_intra
+        if u is not None and not inclusive:
+            bonus = jnp.einsum("bhcd,hd,bhcd->bhc",
+                               qraw.astype(jnp.float32), u.astype(jnp.float32),
+                               kraw.astype(jnp.float32))
+            y = y + bonus[..., None] * vv.astype(jnp.float32)
+        # state: S' = Diag(exp(wtot)) S + k_rem^T v
+        s_new = jnp.exp(wt[..., 0, :])[..., None] * s \
+            + jnp.einsum("bhck,bhce->bhke", kr, vv.astype(jnp.float32))
+        return s_new, y
+
+    step = jax.checkpoint(chunk_step) if remat else chunk_step
+    s_fin, ys = lax.scan(step, s0, (q_dec, k_dec, k_rem, vc, wtot, qc, kc))
+    # ys: (NC, B, H, C, dv) -> (B, T, H, dv)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, tp, h, dv)[:, :t]
+    return y.astype(v.dtype), s_fin
+
+
+def gla_decode_step(q, k, v, log_w, s, *, u=None, inclusive=False):
+    """Single-token recurrence.  q,k: (B,H,dk); v: (B,H,dv); s: (B,H,dk,dv)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(log_w.astype(jnp.float32))
+    kv = kf[..., :, None] * vf[..., None, :]
+    if inclusive:
+        s_new = w[..., None] * s + kv
+        y = jnp.einsum("bhd,bhde->bhe", qf, s_new)
+    else:
+        eff = s + (u.astype(jnp.float32)[None, :, :, None] * kv
+                   if u is not None else 0.0)
+        y = jnp.einsum("bhd,bhde->bhe", qf, eff)
+        s_new = w[..., None] * s + kv
+    return y.astype(v.dtype), s_new
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, cache: jnp.ndarray | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv: x (B, T, D); w (K, D).  Returns (y, new_cache)
+    with cache (B, K-1, D) carrying the last K-1 inputs for decode."""
+    ksz = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], ksz - 1, x.shape[-1]), x.dtype)
+    xc = jnp.concatenate([cache, x], axis=1)
+    y = sum(xc[:, i:i + x.shape[1], :] * w[i] for i in range(ksz))
+    new_cache = xc[:, -(ksz - 1):, :] if ksz > 1 else cache
+    return y.astype(x.dtype), new_cache

@@ -1,0 +1,307 @@
+"""Dense GQA transformer family: llama3.2 / qwen3 / mistral-large / phi3,
+plus the VLM (internvl2: stub patch embeddings + projector) and the audio
+enc-dec (whisper: stub frame embeddings + encoder + cross-attending decoder).
+
+Layers are scanned (stacked params + ``lax.scan``) with optional remat — one
+compiled layer body regardless of depth (88-layer Mistral compiles as one).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.logical import Logical, is_logical, param
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# stacked-layer helpers
+# ---------------------------------------------------------------------------
+
+
+def stack_init(init_fn, keys):
+    """vmap ``init_fn`` over ``keys`` and prepend a 'layer' logical axis."""
+    proto = init_fn(keys[0])
+    vals = jax.vmap(
+        lambda k: jax.tree.map(lambda l: l.value, init_fn(k),
+                               is_leaf=is_logical))(keys)
+    return jax.tree.map(
+        lambda l, v: Logical(v, ("layer",) + l.axes), proto, vals,
+        is_leaf=is_logical)
+
+
+def scan_layers(block_fn, params_stacked, x, *, remat: bool, extra=None,
+                length: int | None = None):
+    """Run x through stacked layers.  ``extra`` is scanned alongside params
+    (e.g. per-layer KV caches); returns (x, stacked outputs)."""
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def step(carry, xs):
+        y, out = fn(carry, xs)
+        return y, out
+
+    xs = (params_stacked, extra) if extra is not None else params_stacked
+    return lax.scan(step, x, xs, length=length)
+
+
+# ---------------------------------------------------------------------------
+# Decoder block
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg, dtype, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], cfg, dtype),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg, dtype),
+    }
+    if cross:
+        p["ln_xattn"] = L.rmsnorm_init(cfg.d_model)
+        p["xattn"] = L.attention_init(ks[2], cfg, dtype)
+    return p
+
+
+def block_apply(p, x, cfg, *, positions, causal=True, kv_cache=None,
+                cache_pos=None, enc_kv=None, prefill_fill=False):
+    h, new_cache = L.attention_apply(p["attn"], L.rmsnorm_apply(p["ln_attn"], x),
+                                     cfg, positions=positions, causal=causal,
+                                     kv_cache=kv_cache, cache_pos=cache_pos,
+                                     prefill_fill=prefill_fill)
+    x = x + h
+    if enc_kv is not None:
+        hx, _ = L.attention_apply(p["xattn"],
+                                  L.rmsnorm_apply(p["ln_xattn"], x), cfg,
+                                  positions=None, causal=False,
+                                  kv_override=enc_kv)
+        x = x + hx
+    x = x + L.mlp_apply(p["mlp"], L.rmsnorm_apply(p["ln_mlp"], x), cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model: init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    cross = cfg.encoder_layers > 0
+    p = {
+        "embed": L.embedding_init(ks[1], cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": stack_init(partial(block_init, cfg=cfg, dtype=dtype,
+                                     cross=cross), layer_keys),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"w": param(ks[2], (cfg.d_model, cfg.vocab_padded),
+                                   ("embed", "vocab"), dtype)}
+    if cfg.frontend is not None:
+        p["frontend_proj"] = {"w": param(ks[3], (cfg.frontend.d_frontend,
+                                                 cfg.d_model),
+                                         ("embed_no_fsdp", "embed"), dtype)}
+    if cfg.encoder_layers > 0:
+        enc_keys = jax.random.split(ks[4], cfg.encoder_layers)
+        p["enc_blocks"] = stack_init(partial(block_init, cfg=cfg, dtype=dtype),
+                                     enc_keys)
+        p["enc_ln_f"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _logits(p, cfg, x):
+    cd = L.dt(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        out = L.unembed_apply(p["embed"], x, cd)
+    else:
+        out = jnp.matmul(x.astype(cd), p["unembed"]["w"].astype(cd))
+        from ..parallel.sharding import constrain_act
+        out = constrain_act(out, ("batch", "seq", "act_vocab"))
+    return L.mask_padded_vocab(out, cfg.vocab)
+
+
+def _encode(p, cfg, frames):
+    """Whisper encoder over (stubbed) frame embeddings (B, F, d_frontend)."""
+    cd = L.dt(cfg.compute_dtype)
+    x = frames.astype(cd)
+    if cfg.frontend is not None and cfg.frontend.d_frontend != cfg.d_model:
+        x = jnp.matmul(x, p["frontend_proj"]["w"].astype(cd))
+    elif "frontend_proj" in p:
+        x = jnp.matmul(x, p["frontend_proj"]["w"].astype(cd))
+    b, f, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(f), (b, f))
+
+    def enc_block(h, blk):
+        h2, _ = block_apply(blk, h, cfg, positions=pos, causal=False)
+        return h2, 0
+
+    x, _ = scan_layers(enc_block, p["enc_blocks"], x, remat=cfg.remat)
+    return L.rmsnorm_apply(p["enc_ln_f"], x)
+
+
+# ---------------------------------------------------------------------------
+# Model: training forward
+# ---------------------------------------------------------------------------
+
+
+def forward_train(p, cfg, batch) -> jnp.ndarray:
+    """batch: {'tokens': (B,S)} (+ 'frontend': (B,F,d_frontend) for vlm/audio).
+    Returns logits (B, S(+P for vlm prefix), vocab) — callers slice."""
+    cd = L.dt(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    enc_kv = None
+    prefix = 0
+    if cfg.family == "vlm":
+        img = batch["frontend"].astype(cd)
+        img = jnp.matmul(img, p["frontend_proj"]["w"].astype(cd))
+        x = jnp.concatenate([img, x], axis=1)
+        prefix = img.shape[1]
+    if cfg.encoder_layers > 0:
+        enc = _encode(p, cfg, batch["frontend"])
+        enc_kv = enc  # per-block K/V projections computed inside the block
+
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def dec_block(h, blk):
+        ekv = None
+        if enc_kv is not None:
+            # Cross-attention K/V from encoder output using this block's
+            # wk/wv (no rope).
+            lin = partial(L.dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                          w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                          compute_dtype=cd)
+            eb, ef, _ = enc_kv.shape
+            kx = lin(blk["xattn"]["wk"], enc_kv, out_ax="kv_heads") \
+                .reshape(eb, ef, cfg.n_kv_heads, cfg.hd)
+            vx = lin(blk["xattn"]["wv"], enc_kv, out_ax="kv_heads") \
+                .reshape(eb, ef, cfg.n_kv_heads, cfg.hd)
+            ekv = (kx, vx)
+        h2, _ = block_apply(blk, h, cfg, positions=pos, enc_kv=ekv)
+        return h2, 0
+
+    x, _ = scan_layers(dec_block, p["blocks"], x, remat=cfg.remat)
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = _logits(p, cfg, x)
+    if prefix:
+        logits = logits[:, prefix:]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Model: serving (prefill / decode with per-layer KV caches)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg, batch: int, cache_len: int):
+    """Per-layer KV caches stacked on the layer axis."""
+    cd = L.dt(cfg.compute_dtype)
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.hd)
+    state = {
+        "k": Logical(jnp.zeros(shape, cd),
+                     ("layer", "batch", "kv_seq", "cache_heads", None)),
+        "v": Logical(jnp.zeros(shape, cd),
+                     ("layer", "batch", "kv_seq", "cache_heads", None)),
+        "pos": Logical(jnp.zeros((), jnp.int32), ()),
+    }
+    if cfg.encoder_layers > 0:
+        state["enc_out"] = Logical(
+            jnp.zeros((batch, cfg.frontend.n_tokens, cfg.d_model), cd),
+            ("batch", None, "act_embed"))
+    return state
+
+
+def decode_step(p, cfg, state, tokens, frontend=None):
+    """One decode step: tokens (B, 1) -> logits (B, 1, V); updates caches.
+
+    ``state`` is a PLAIN array tree (see init_decode_state + values_of);
+    ``state['pos']`` is the number of tokens already cached.
+    """
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    b, s, _ = x.shape
+    pos_idx = state["pos"]
+    positions = jnp.broadcast_to(pos_idx + jnp.arange(s), (b, s))
+    k_all, v_all = state["k"], state["v"]
+    enc_out = state.get("enc_out") if cfg.encoder_layers > 0 else None
+
+    def dec_block(h, xs):
+        blk, (kc, vc) = xs
+        ekv = None
+        if enc_out is not None:
+            lin = partial(L.dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                          w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                          compute_dtype=cd)
+            eb, ef, _ = enc_out.shape
+            kx = lin(blk["xattn"]["wk"], enc_out) \
+                .reshape(eb, ef, cfg.n_kv_heads, cfg.hd)
+            vx = lin(blk["xattn"]["wv"], enc_out) \
+                .reshape(eb, ef, cfg.n_kv_heads, cfg.hd)
+            ekv = (kx, vx)
+        h2, new_cache = block_apply(blk, h, cfg, positions=positions,
+                                    kv_cache={"k": kc, "v": vc},
+                                    cache_pos=pos_idx, enc_kv=ekv)
+        return h2, (new_cache["k"], new_cache["v"])
+
+    x, (k_new, v_new) = scan_layers(dec_block, p["blocks"], x,
+                                    remat=False, extra=(k_all, v_all))
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = _logits(p, cfg, x)
+    new_state = dict(state)
+    new_state["k"] = k_new
+    new_state["v"] = v_new
+    new_state["pos"] = pos_idx + s
+    return logits, new_state
+
+
+def prefill(p, cfg, tokens, cache_len: int, frontend=None):
+    """Run the prompt through the model, filling the KV caches.  Returns a
+    PLAIN state tree."""
+    from ..parallel.logical import values_of
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    state = values_of(init_decode_state(cfg, b, cache_len))
+    k_all = state["k"]
+    v_all = state["v"]
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = _encode(p, cfg, frontend)
+
+    def dec_block(h, xs):
+        blk, (kc, vc) = xs
+        ekv = None
+        if enc_out is not None:
+            lin = partial(L.dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                          w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                          compute_dtype=cd)
+            eb, ef, _ = enc_out.shape
+            kx = lin(blk["xattn"]["wk"], enc_out) \
+                .reshape(eb, ef, cfg.n_kv_heads, cfg.hd)
+            vx = lin(blk["xattn"]["wv"], enc_out) \
+                .reshape(eb, ef, cfg.n_kv_heads, cfg.hd)
+            ekv = (kx, vx)
+        h2, new_cache = block_apply(blk, h, cfg, positions=positions,
+                                    kv_cache={"k": kc, "v": vc},
+                                    cache_pos=jnp.zeros((), jnp.int32),
+                                    enc_kv=ekv, prefill_fill=True)
+        return h2, (new_cache["k"], new_cache["v"])
+
+    x, (k_new, v_new) = scan_layers(dec_block, p["blocks"], x,
+                                    remat=cfg.remat, extra=(k_all, v_all))
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = _logits(p, cfg, x)
+    state["k"] = k_new
+    state["v"] = v_new
+    state["pos"] = jnp.asarray(s, jnp.int32)
+    if enc_out is not None:
+        state["enc_out"] = enc_out
+    return logits, state

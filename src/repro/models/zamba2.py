@@ -1,0 +1,253 @@
+"""Mamba2 (SSD) blocks + Zamba2 hybrid (shared attention block every N Mamba
+blocks, weights shared across invocations) — arXiv:2411.15242.
+
+Mamba2 block: in_proj -> (z, x, B, C, dt); depthwise causal conv on (x,B,C);
+SSD recurrence with scalar per-head decay a_t = exp(-softplus(dt + bias) *
+exp(A_log)) executed on the shared chunked-GLA path (inclusive diagonal);
+gated rmsnorm + out_proj.
+
+Decode state per mamba layer: conv cache (K-1 last inputs) + SSD state
+(B, H, N, P).  The shared attention block keeps a standard KV cache.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.logical import Logical, param
+from . import layers as L
+from .ssm import causal_conv1d, chunked_gla, gla_decode_step
+from .transformer import block_apply as attn_block_apply
+from .transformer import block_init as attn_block_init
+from .transformer import scan_layers, stack_init
+
+
+def mamba_block_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    nh = di // s.head_dim                  # ssd heads
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * s.state
+    return {
+        "ln": L.rmsnorm_init(d),
+        "in_proj": param(ks[0], (d, 2 * di + 2 * s.state + nh),
+                         ("embed", "ff"), dtype),
+        "conv_w": Logical(jnp.zeros((s.conv_kernel, conv_dim), jnp.float32)
+                          .at[-1].set(1.0), ("conv", "act_ff")),
+        "A_log": Logical(jnp.zeros((nh,), jnp.float32), ("act_heads",)),
+        "dt_bias": Logical(jnp.full((nh,), -2.0, jnp.float32), ("act_heads",)),
+        "D": Logical(jnp.ones((nh,), jnp.float32), ("act_heads",)),
+        "ln_y": L.rmsnorm_init(di, axis="act_ff"),
+        "out_proj": param(ks[1], (di, d), ("ff", "embed"), dtype),
+    }
+
+
+def _split_in_proj(cfg, proj):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    z, xbc, dtp = jnp.split(proj, [di, 2 * di + 2 * s.state], axis=-1)
+    return z, xbc, dtp, di, nh
+
+
+def mamba_block_apply(p, xin, cfg, *, state=None):
+    """xin: (B, T, d).  state: {'conv': (B,K-1,conv_dim), 'ssd': (B,H,N,P)}."""
+    s = cfg.ssm
+    cd = xin.dtype
+    b, t, d = xin.shape
+    lin = partial(L.dcim_linear_apply, a_bits=cfg.dcim_a_bits,
+                  w_bits=cfg.dcim_w_bits, enabled=cfg.dcim_enabled,
+                  compute_dtype=cd)
+    x = L.rmsnorm_apply(p["ln"], xin)
+    proj = lin(p["in_proj"], x, out_ax="ff")
+    z, xbc, dtp, di, nh = _split_in_proj(cfg, proj)
+
+    conv_cache = state["conv"] if state is not None else None
+    xbc, new_conv = causal_conv1d(jax.nn.silu(xbc), p["conv_w"].value
+                                  if isinstance(p["conv_w"], Logical)
+                                  else p["conv_w"], conv_cache)
+    xs, B, C = jnp.split(xbc, [di, di + s.state], axis=-1)
+
+    # SSD parameters: scalar decay per head, B/C shared across heads (ngroups=1)
+    a_log = p["A_log"].value if isinstance(p["A_log"], Logical) else p["A_log"]
+    dt_b = p["dt_bias"].value if isinstance(p["dt_bias"], Logical) else p["dt_bias"]
+    dparm = p["D"].value if isinstance(p["D"], Logical) else p["D"]
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + dt_b)      # (B,T,nh)
+    decay = -jnp.exp(a_log)[None, None, :] * dt               # log a_t <= 0
+
+    v = xs.reshape(b, t, nh, s.head_dim)                      # values
+    k = jnp.broadcast_to(B[:, :, None, :], (b, t, nh, s.state))
+    q = jnp.broadcast_to(C[:, :, None, :], (b, t, nh, s.state))
+    # dt scales the input (ZOH discretization of B x_t):
+    v_in = (v.astype(jnp.float32) * dt[..., None]).astype(cd)
+    log_w = jnp.broadcast_to(decay[..., None], (b, t, nh, s.state))
+
+    if state is None or t > 1:
+        # train / prefill: chunked scan (optionally continuing from a state)
+        s0 = state["ssd"] if state is not None else None
+        y, ssd_fin = chunked_gla(q, k, v_in, log_w, inclusive=True,
+                                 chunk=s.chunk, s0=s0, remat=cfg.remat)
+    else:
+        yv, ssd_fin = gla_decode_step(q[:, 0], k[:, 0], v_in[:, 0],
+                                      log_w[:, 0], state["ssd"],
+                                      inclusive=True)
+        y = yv[:, None]
+    y = y + v.astype(y.dtype) * dparm[None, None, :, None]    # skip (D term)
+    y = y.reshape(b, t, di)
+    y = L.rmsnorm_apply(p["ln_y"], y * jax.nn.silu(z))
+    out = lin(p["out_proj"], y, out_ax="embed")
+    new_state = {"conv": new_conv, "ssd": ssd_fin}
+    return xin + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid stack
+# ---------------------------------------------------------------------------
+
+
+def _segments(cfg) -> list[int]:
+    """Mamba-layer counts between shared-attention invocations."""
+    k = cfg.attn_every or cfg.n_layers
+    full, rem = divmod(cfg.n_layers, k)
+    return [k] * full + ([rem] if rem else [])
+
+
+def init_params(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": L.embedding_init(ks[1], cfg.vocab_padded, cfg.d_model, dtype),
+        "mamba": stack_init(partial(mamba_block_init, cfg=cfg, dtype=dtype),
+                            layer_keys),
+        "shared_attn": attn_block_init(ks[2], cfg, dtype),   # ONE shared block
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+        "unembed": {"w": param(ks[3], (cfg.d_model, cfg.vocab_padded),
+                               ("embed", "vocab"), dtype)},
+    }
+
+
+def _slice_stack(tree, lo: int, hi: int):
+    from ..parallel.logical import is_logical
+    return jax.tree.map(
+        lambda l: Logical(lax.slice_in_dim(l.value, lo, hi, axis=0), l.axes)
+        if isinstance(l, Logical) else lax.slice_in_dim(l, lo, hi, axis=0),
+        tree, is_leaf=is_logical)
+
+
+def forward_train(p, cfg, batch):
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], batch["tokens"], cd)
+    b, t, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def mblk(h, bp):
+        h2, _ = mamba_block_apply(bp, h, cfg)
+        return h2, 0
+
+    lo = 0
+    for seg in _segments(cfg):
+        seg_params = _slice_stack(p["mamba"], lo, lo + seg)
+        x, _ = scan_layers(mblk, seg_params, x, remat=cfg.remat)
+        lo += seg
+        # shared attention block after every segment (weights shared)
+        x, _ = attn_block_apply(p["shared_attn"], x, cfg, positions=pos)
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    return L.mask_padded_vocab(L.constrain_logits(jnp.matmul(x.astype(cd), p["unembed"]["w"].astype(cd))), cfg.vocab)
+
+
+def init_decode_state(cfg, batch: int, cache_len: int):
+    cd = L.dt(cfg.compute_dtype)
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_dim = di + 2 * s.state
+    n_attn = len(_segments(cfg))
+    return {
+        "conv": Logical(jnp.zeros((cfg.n_layers, batch, s.conv_kernel - 1,
+                                   conv_dim), cd),
+                        ("layer", "batch", None, "act_ff")),
+        "ssd": Logical(jnp.zeros((cfg.n_layers, batch, nh, s.state,
+                                  s.head_dim), jnp.float32),
+                       ("layer", "batch", "act_heads", None, None)),
+        # shared attention block: one KV cache per invocation site
+        "k": Logical(jnp.zeros((n_attn, batch, cache_len, cfg.n_kv_heads,
+                                cfg.hd), cd),
+                     ("layer", "batch", "kv_seq", "cache_heads", None)),
+        "v": Logical(jnp.zeros((n_attn, batch, cache_len, cfg.n_kv_heads,
+                                cfg.hd), cd),
+                     ("layer", "batch", "kv_seq", "cache_heads", None)),
+        "pos": Logical(jnp.zeros((), jnp.int32), ()),
+    }
+
+
+def _run_stack(p, cfg, x, state, *, prefill_mode: bool):
+    """Shared serve path: mamba segments with state + shared attn w/ caches.
+    ``state`` is a PLAIN array tree."""
+    b, t, _ = x.shape
+    pos0 = state["pos"]
+    positions = jnp.broadcast_to(pos0 + jnp.arange(t), (b, t))
+    conv_all, ssd_all = state["conv"], state["ssd"]
+    k_all, v_all = state["k"], state["v"]
+
+    def mblk(h, xs):
+        bp, (cv, sd) = xs
+        h2, ns = mamba_block_apply(bp, h, cfg, state={"conv": cv, "ssd": sd})
+        return h2, (ns["conv"].astype(cv.dtype), ns["ssd"])
+
+    new_conv, new_ssd, new_k, new_v = [], [], [], []
+    lo = 0
+    for i, seg in enumerate(_segments(cfg)):
+        seg_params = _slice_stack(p["mamba"], lo, lo + seg)
+        seg_state = (lax.slice_in_dim(conv_all, lo, lo + seg, axis=0),
+                     lax.slice_in_dim(ssd_all, lo, lo + seg, axis=0))
+        x, (nc, nsd) = scan_layers(mblk, seg_params, x,
+                                   remat=cfg.remat and prefill_mode,
+                                   extra=seg_state)
+        new_conv.append(nc)
+        new_ssd.append(nsd)
+        lo += seg
+        kc = k_all[i]
+        vc = v_all[i]
+        x, cache = attn_block_apply(
+            p["shared_attn"], x, cfg, positions=positions,
+            kv_cache={"k": kc, "v": vc},
+            cache_pos=jnp.zeros((), jnp.int32) if prefill_mode else pos0,
+            prefill_fill=prefill_mode)
+        new_k.append(cache["k"])
+        new_v.append(cache["v"])
+
+    new_state = dict(state)
+    new_state["conv"] = jnp.concatenate(new_conv, 0)
+    new_state["ssd"] = jnp.concatenate(new_ssd, 0)
+    new_state["k"] = jnp.stack(new_k, 0)
+    new_state["v"] = jnp.stack(new_v, 0)
+    new_state["pos"] = pos0 + t
+    return x, new_state
+
+
+def decode_step(p, cfg, state, tokens, frontend=None):
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    x, new_state = _run_stack(p, cfg, x, state, prefill_mode=False)
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = L.mask_padded_vocab(jnp.matmul(x.astype(cd), p["unembed"]["w"].astype(cd)), cfg.vocab)
+    return logits, new_state
+
+
+def prefill(p, cfg, tokens, cache_len: int, frontend=None):
+    from ..parallel.logical import values_of
+    cd = L.dt(cfg.compute_dtype)
+    x = L.embedding_apply(p["embed"], tokens, cd)
+    state = values_of(init_decode_state(cfg, tokens.shape[0], cache_len))
+    x, new_state = _run_stack(p, cfg, x, state, prefill_mode=True)
+    x = L.rmsnorm_apply(p["ln_f"], x)
+    logits = L.mask_padded_vocab(jnp.matmul(x.astype(cd), p["unembed"]["w"].astype(cd)), cfg.vocab)
+    new_state["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, new_state

@@ -1,0 +1,9 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedules import constant_lr, cosine_schedule, linear_warmup_cosine
+from .compression import (compress_int8, decompress_int8,
+                          compressed_allreduce_spec, ef_state_init)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "constant_lr", "cosine_schedule", "linear_warmup_cosine",
+           "compress_int8", "decompress_int8", "compressed_allreduce_spec",
+           "ef_state_init"]

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(peak * (final_frac + (1 - final_frac) * cos),
+                           jnp.float32)
+    return f
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(peak, max(1, total_steps - warmup), final_frac)
+
+    def f(step):
+        warm = peak * jnp.minimum(1.0, step / max(1, warmup))
+        return jnp.where(step < warmup, warm, cos(step - warmup)) \
+            .astype(jnp.float32)
+    return f

@@ -1,0 +1,6 @@
+from .logical import Logical, param, split_logical, spec_of
+from .sharding import (MESH_RULES, logical_to_spec, shard_batch_spec,
+                       with_sharding)
+
+__all__ = ["Logical", "param", "split_logical", "spec_of", "MESH_RULES",
+           "logical_to_spec", "shard_batch_spec", "with_sharding"]

@@ -1,0 +1,98 @@
+"""Logical-axis parameter trees.
+
+Model init functions build pytrees of :class:`Logical` leaves — an array (or
+ShapeDtypeStruct during abstract init) tagged with *logical* axis names
+("embed", "heads", "ff", "experts", ...).  :func:`split_logical` separates the
+tree into (values, PartitionSpecs) given the logical->mesh rules in
+``repro.parallel.sharding``; the specs drive pjit in/out shardings so the same
+model definition runs on any mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Logical(NamedTuple):
+    value: Any                       # jnp.ndarray | ShapeDtypeStruct
+    axes: tuple[str | None, ...]     # one logical name (or None) per dim
+
+
+def param(key, shape: tuple[int, ...], axes: tuple[str | None, ...],
+          dtype=jnp.float32, init: str = "normal", scale: float | None = None
+          ) -> Logical:
+    """Create an initialized, logically-tagged parameter."""
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+        s = scale if scale is not None else fan_in ** -0.5
+        v = (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+    return Logical(v, tuple(axes))
+
+
+def is_logical(x) -> bool:
+    return isinstance(x, Logical)
+
+
+def split_logical(tree, rules: dict[str, Any]):
+    """(tree of Logical) -> (tree of arrays, tree of PartitionSpec)."""
+    from jax.sharding import PartitionSpec as P
+
+    def val(leaf):
+        return leaf.value
+
+    def spec(leaf):
+        return P(*(rules.get(a, None) if a is not None else None
+                   for a in leaf.axes))
+
+    values = jax.tree.map(val, tree, is_leaf=is_logical)
+    specs = jax.tree.map(spec, tree, is_leaf=is_logical)
+    return values, specs
+
+
+def spec_of(tree, rules: dict[str, Any]):
+    return split_logical(tree, rules)[1]
+
+
+def values_of(tree):
+    """Strip Logical wrappers -> plain array tree (jit-traceable)."""
+    return jax.tree.map(lambda l: l.value if is_logical(l) else l, tree,
+                        is_leaf=is_logical)
+
+
+_AXIS_SEP = "\x1f"
+_NONE_AXIS = "\x00"
+
+
+def abstract_init(init_fn, *args):
+    """Trace ``init_fn`` (a Logical-tree builder) without allocating anything:
+    returns a Logical tree whose values are ShapeDtypeStructs.
+
+    Axes are static metadata; they're smuggled out of the eval_shape trace as
+    encoded strings (strings are pytree *leaves* in JAX)."""
+    box = {}
+
+    def run(*a):
+        tree = init_fn(*a)
+        box["axes"] = jax.tree.map(
+            lambda l: _AXIS_SEP.join(x if x is not None else _NONE_AXIS
+                                     for x in l.axes),
+            tree, is_leaf=is_logical)
+        return values_of(tree)
+
+    vals = jax.eval_shape(run, *args)
+    axes_tree = box["axes"]
+
+    def rewrap(v, enc):
+        axes = tuple(None if a == _NONE_AXIS else a
+                     for a in enc.split(_AXIS_SEP)) if enc else ()
+        return Logical(v, axes)
+
+    return jax.tree.map(rewrap, vals, axes_tree)

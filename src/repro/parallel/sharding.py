@@ -1,0 +1,130 @@
+"""Logical-axis -> mesh-axis rules (the distribution strategy).
+
+Default layout is 2-D FSDP x TP (GSPMD/ZeRO-3 style), proven at 256-512 chips
+and the standard layout for this scale (MaxText/GSPMD lineage):
+
+  * ``embed`` (the d_model dim of weight matrices)  -> sharded over ``data``
+    — this is the FSDP/ZeRO-3 axis: XLA all-gathers each layer's weights just
+    before use and reduce-scatters gradients, so per-chip parameter+optimizer
+    memory divides by |data| (123B fits; see DESIGN.md §6).
+  * ``heads`` / ``ff`` / ``experts`` / ``vocab``     -> sharded over ``model``
+    — the tensor/expert-parallel axis.
+  * ``batch``  -> ('pod', 'data'): pure data parallelism across pods.
+  * ``kv_seq`` -> 'data' for long-context cached decode (sequence parallel).
+
+`layer` (the scan axis over stacked per-layer params) is never sharded.
+Alternative layouts used by the perf hillclimb are expressed as rule
+overrides per arch config (``cfg.sharding_overrides``).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Logical axis -> mesh axis (or tuple of mesh axes).
+MESH_RULES: dict[str, Any] = {
+    # weights
+    "embed": "data",          # FSDP / ZeRO-3 axis
+    "embed_no_fsdp": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "vocab": "model",
+    "layer": None,
+    "conv": None,
+    "state": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    # KV caches carry (batch, kv_seq, cache_heads) together: batch takes the
+    # data axes, the cache sequence dim takes 'model' (context parallelism),
+    # heads stay local (GQA head counts rarely divide 16):
+    "kv_seq": "model",
+    "cache_heads": None,
+    "act_embed": None,
+    # K/V tensors entering blockwise attention: force the (possibly
+    # seq-sharded) K/V to gather ONCE per layer instead of once per q-block
+    # (sequence-parallel prefill, §Perf iteration 3):
+    "attn_kv_seq": None,
+    "act_heads": "model",
+    "act_ff": "model",
+    "act_vocab": "model",
+}
+
+
+def rules_for_mesh(mesh: Mesh, overrides: dict[str, Any] | None = None
+                   ) -> dict[str, Any]:
+    """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
+    names = set(mesh.axis_names)
+    out = {}
+    merged = dict(MESH_RULES)
+    if overrides:
+        merged.update(overrides)
+    for k, v in merged.items():
+        if isinstance(v, list):
+            v = tuple(v)
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in names)
+            out[k] = kept if len(kept) > 1 else (kept[0] if kept else None)
+        else:
+            out[k] = v if (v is None or v in names) else None
+    return out
+
+
+def logical_to_spec(axes: tuple[str | None, ...], rules: dict[str, Any]) -> P:
+    return P(*(rules.get(a, None) if a is not None else None for a in axes))
+
+
+def shard_batch_spec(rules: dict[str, Any]) -> P:
+    return P(rules.get("batch"), None)
+
+
+def with_sharding(x, mesh: Mesh, spec: P):
+    """Sharding constraint helper (no-op outside jit on un-committed arrays)."""
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (the §Perf iteration-1 fix)
+# ---------------------------------------------------------------------------
+#
+# Without explicit activation constraints GSPMD may satisfy the d_in('data')-
+# sharded weight contraction by partial-summing and ALL-REDUCING full
+# activations (measured: 3.6 TiB/chip/step on llama train_4k) instead of
+# all-gathering the (much smaller) FSDP-sharded weights.  Constraining every
+# linear's output to (batch->data axes, seq local, features->model-if-TP)
+# forces the weight-gather strategy.  Enabled per-arch via cfg.act_shard.
+
+import contextvars
+
+_ACT_RULES: contextvars.ContextVar = contextvars.ContextVar("act_rules",
+                                                            default=None)
+
+
+def activation_rules(rules: dict[str, Any] | None):
+    """Set the ambient logical->mesh rules used by constrain_act.  Returns a
+    reset token for ``reset_activation_rules``."""
+    return _ACT_RULES.set(rules)
+
+
+def reset_activation_rules(token) -> None:
+    _ACT_RULES.reset(token)
+
+
+def constrain_act(x, axes: tuple[str | None, ...]):
+    """Constrain an activation to the ambient rules (no-op when unset or when
+    rank mismatches / no mesh context is active)."""
+    rules = _ACT_RULES.get()
+    if rules is None or len(axes) != x.ndim:
+        return x
+    spec = P(*[rules.get(a) if a is not None else None for a in axes])
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

@@ -1,0 +1,107 @@
+"""Quantization substrate for DCIM execution semantics.
+
+The synthesized macros execute INT1/2/4/8 natively and FP4/FP8/BF16 through
+the FP&INT alignment unit (comparator tree finds the block-max exponent, then
+mantissas shift into integer alignment — [9], paper §II-B).  This module makes
+those semantics executable in JAX:
+
+  * ``quantize_int`` / ``dequantize``   — symmetric per-axis INT quantization
+  * ``block_fp_align``                  — the alignment unit: block floating
+    point (shared exponent + shifted integer mantissas), exactly the
+    transform the hardware applies before the adder tree
+  * ``fake_quant``                      — straight-through-estimator QAT node
+    used by DCIM linear layers during training
+  * ``fp8_e4m3_quant``                  — FP8 value grid (saturating)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Precision configuration of a DCIM-mapped layer (macro modes)."""
+
+    a_bits: int = 8          # activation (bit-serial input) precision
+    w_bits: int = 8          # weight (stored) precision
+    mode: str = "int"        # 'int' | 'fp8' | 'bf16' (alignment-unit modes)
+
+    def __post_init__(self):
+        assert self.a_bits in (1, 2, 4, 8, 16)
+        assert self.w_bits in (1, 2, 4, 8, 16)
+        assert self.mode in ("int", "fp8", "bf16")
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def quantize_int(x: jnp.ndarray, bits: int, axis: int | None = -1,
+                 eps: float = 1e-8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric linear quantization to signed ``bits`` integers.
+
+    Returns (q int8, scale f32) with x ≈ q * scale.  ``axis=None`` gives a
+    per-tensor scale; otherwise the scale is per-slice along ``axis``
+    (per-channel for weights, per-row for activations).
+    """
+    qmax = _qmax(bits)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(x: jnp.ndarray, bits: int, axis: int | None = -1) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through gradient (QAT)."""
+    q, s = quantize_int(x, bits, axis)
+    return (q.astype(x.dtype) * s.astype(x.dtype)).astype(x.dtype)
+
+
+def _fq_fwd(x, bits, axis):
+    return fake_quant(x, bits, axis), None
+
+
+def _fq_bwd(bits, axis, _res, g):
+    return (g,)   # straight-through
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def block_fp_align(x: jnp.ndarray, man_bits: int, block_axis: int = -1
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The FP&INT alignment unit, executable.
+
+    Per block (a slice along ``block_axis``): find the max exponent
+    (comparator tree), shift every mantissa right so all values share that
+    exponent (shifters), emit integer mantissas.  Returns
+    (mantissas int32, shared_scale f32) with x ≈ mantissas * shared_scale.
+    """
+    absx = jnp.abs(x)
+    bmax = jnp.max(absx, axis=block_axis, keepdims=True)
+    # shared exponent: smallest e with max(|x|) < 2^e
+    e = jnp.ceil(jnp.log2(jnp.maximum(bmax, 1e-30)))
+    shared_scale = jnp.exp2(e - man_bits)          # LSB weight after shift
+    man = jnp.clip(jnp.round(x / shared_scale),
+                   -(1 << man_bits), (1 << man_bits) - 1)
+    return man.astype(jnp.int32), shared_scale.astype(jnp.float32)
+
+
+def fp8_e4m3_quant(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the FP8 E4M3 grid (saturating at +-448) and back to f32."""
+    y = x.astype(jnp.float32)
+    y = jnp.clip(y, -448.0, 448.0)
+    return y.astype(jnp.float8_e4m3fn).astype(jnp.float32)

@@ -1,0 +1,504 @@
+"""HLO-text cost walker: trip-count-aware FLOPs / bytes / collective-bytes.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified on this jax build: an 8-step scan reports 1/8 the FLOPs of the
+unrolled version).  Since every model here scans over layers, that undercount
+would poison the roofline, so this module re-derives costs from
+``compiled.as_text()``:
+
+  * parses every computation and instruction (result shape, opcode, operands,
+    attributes),
+  * extracts while trip counts from the condition computation's s32 constant
+    (scan induction: ``i < L``),
+  * walks the call graph multiplying by trip counts:
+      - dot: 2 x |result| x contracted-dim product (from the lhs operand shape)
+      - elementwise/reduce: |result| FLOPs (minor terms)
+      - fusion: recurse for FLOPs; bytes only at the fusion boundary
+        (operands + results — the HBM-traffic proxy)
+      - collectives: per-chip ICI bytes with ring-algorithm multipliers
+        (all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+        collective-permute 1x), group size from replica_groups.
+
+Shapes in post-SPMD HLO are PER-DEVICE, so collective bytes are already
+per-chip quantities.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+@dataclass
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> float:
+        return self.elems * DTYPE_BYTES.get(self.dtype, 4)
+
+
+def parse_shapes(type_str: str) -> list[Shape]:
+    """'f32[64,256]' or '(s32[], f32[64,64])' -> list of Shapes."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = tuple(int(x) for x in m.group(2).split(",") if x)
+        out.append(Shape(m.group(1), dims))
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    shapes: list[Shape]
+    opcode: str
+    operands: list[str]
+    attrs: str
+    args: str = ""
+
+    @property
+    def result_bytes(self) -> float:
+        return sum(s.bytes for s in self.shapes)
+
+    @property
+    def result_elems(self) -> int:
+        return sum(s.elems for s in self.shapes)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    shape_table: dict[str, list[Shape]] = field(default_factory=dict)
+    instr_by_name: dict[str, Instr] = field(default_factory=dict)
+
+
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_TRIP_COUNT_BC = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_NEW = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                # parameter shapes from the header
+                if m.group(2):
+                    for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\]))",
+                                          m.group(2)):
+                        cur.shape_table[pm.group(1)] = parse_shapes(pm.group(2))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_str, opcode, args, attrs = m.groups()
+            shapes = parse_shapes(type_str)
+            operands = _OPERAND.findall(args)
+            ins = Instr(name, shapes, opcode, operands, attrs, args)
+            cur.instrs.append(ins)
+            cur.shape_table[name] = shapes
+            cur.instr_by_name[name] = ins
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# cost walking
+# ---------------------------------------------------------------------------
+
+FLOPS_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+              "copy", "reshape", "transpose", "broadcast", "iota", "slice",
+              "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+              "gather", "scatter", "convert", "reverse", "custom-call",
+              "partition-id", "replica-id", "after-all", "rng-bit-generator",
+              "select-and-scatter", "while", "conditional", "call", "fusion"}
+
+BYTES_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+              "partition-id", "replica-id", "after-all", "iota",
+              "copy"}  # loop-carried copies alias on real hardware
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0      # per-chip ICI traffic
+    coll_counts: dict = field(default_factory=dict)
+    bytes_by_op: dict = field(default_factory=dict)
+    flops_by_op: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", k: float = 1.0):
+        self.flops += other.flops * k
+        self.bytes += other.bytes * k
+        self.coll_bytes += other.coll_bytes * k
+        for op, (cnt, by) in other.coll_counts.items():
+            c0, b0 = self.coll_counts.get(op, (0.0, 0.0))
+            self.coll_counts[op] = (c0 + cnt * k, b0 + by * k)
+        for d_self, d_other in ((self.bytes_by_op, other.bytes_by_op),
+                                (self.flops_by_op, other.flops_by_op)):
+            for op, v in d_other.items():
+                d_self[op] = d_self.get(op, 0.0) + v * k
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = _GROUPS_NEW.search(attrs)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_OLD.search(attrs)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return default
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = ins.result_elems
+    cdims = []
+    m = _LHS_CDIMS.search(ins.attrs)
+    if m and m.group(1):
+        cdims = [int(x) for x in m.group(1).split(",")]
+    csize = 1
+    if ins.operands:
+        lhs_shapes = comp.shape_table.get(ins.operands[0])
+        if lhs_shapes:
+            lhs = lhs_shapes[0]
+            for c in cdims:
+                if c < len(lhs.dims):
+                    csize *= lhs.dims[c]
+    return 2.0 * out_elems * max(1, csize)
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    # rough: 2 * |out| * (kernel elems / out-channels)
+    if len(ins.operands) >= 2:
+        ksh = comp.shape_table.get(ins.operands[1])
+        if ksh:
+            k = ksh[0]
+            return 2.0 * ins.result_elems * max(1, k.elems // max(1, k.dims[-1]))
+    return 2.0 * ins.result_elems
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 scalar constant in the condition region (scan: i < L)."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant" and ins.shapes and \
+                ins.shapes[0].dtype == "s32" and not ins.shapes[0].dims:
+            m = re.match(r"\s*(\d+)\s*$", ins.args)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _instr_coll_bytes(ins: Instr, comp: Computation, n_devices: int) -> float:
+    g = _group_size(ins.attrs, n_devices)
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if ins.opcode == "all-reduce":
+        return 2.0 * ins.result_bytes * frac
+    if ins.opcode == "all-gather":
+        return ins.result_bytes * frac          # result is the gathered tensor
+    if ins.opcode == "reduce-scatter":
+        return ins.result_bytes * (g - 1)       # operand = g x result
+    if ins.opcode == "all-to-all":
+        return ins.result_bytes * frac
+    if ins.opcode == "collective-permute":
+        return ins.result_bytes
+    return 0.0
+
+
+class CostWalker:
+    def __init__(self, comps: dict[str, Computation], n_devices: int,
+                 bf16_normalize: bool = False):
+        self.comps = comps
+        self.n_devices = n_devices
+        self.bf16_normalize = bf16_normalize
+        self._memo: dict[tuple[str, bool], Cost] = {}
+        self._dus_memo: dict[str, bool] = {}
+        self.trip_counts: dict[str, int] = {}
+
+    def _comp_has_dus(self, name: str) -> bool:
+        if name in self._dus_memo:
+            return self._dus_memo[name]
+        self._dus_memo[name] = False   # cycle guard
+        comp = self.comps.get(name)
+        found = False
+        if comp is not None:
+            for ins in comp.instrs:
+                if ins.opcode == "dynamic-update-slice":
+                    found = True
+                    break
+                if ins.opcode == "fusion":
+                    m = _CALLS.search(ins.attrs)
+                    if m and self._comp_has_dus(m.group(1)):
+                        found = True
+                        break
+        self._dus_memo[name] = found
+        return found
+
+    def _is_inplace_update(self, ins: Instr) -> bool:
+        if ins.opcode == "dynamic-update-slice":
+            return True
+        if ins.opcode == "fusion":
+            m = _CALLS.search(ins.attrs)
+            if m:
+                return self._comp_has_dus(m.group(1))
+        return False
+
+    HEAVY = {"dot", "convolution", "reduce", "reduce-window", "sort",
+             "rng-bit-generator"}
+
+    def _comp_has_heavy(self, name: str) -> bool:
+        key = "H:" + name
+        if key in self._dus_memo:
+            return self._dus_memo[key]
+        self._dus_memo[key] = False
+        comp = self.comps.get(name)
+        found = False
+        if comp is not None:
+            for ins in comp.instrs:
+                if ins.opcode in self.HEAVY or \
+                        ins.opcode in ("gather", "scatter",
+                                       "dynamic-update-slice"):
+                    found = True
+                    break
+                if ins.opcode == "fusion":
+                    m = _CALLS.search(ins.attrs)
+                    if m and self._comp_has_heavy(m.group(1)):
+                        found = True
+                        break
+        self._dus_memo[key] = found
+        return found
+
+    def _operand_bytes(self, ins: Instr, comp: Computation,
+                       through_convert: bool = False) -> list[float]:
+        """Operand byte sizes; with ``through_convert`` an operand produced by
+        a dtype convert is counted at its SOURCE size — XLA:CPU upcasts bf16
+        dots to f32 (convert -> f32 dot), which a TPU would read natively in
+        bf16, so the roofline must charge the pre-convert bytes."""
+        out = []
+        for o in ins.operands:
+            sh = comp.shape_table.get(o)
+            if not sh:
+                continue
+            if through_convert and self.bf16_normalize:
+                src = comp.instr_by_name.get(o)
+                if src is not None and src.opcode == "convert" and src.operands:
+                    ssh = comp.shape_table.get(src.operands[0])
+                    if ssh:
+                        out.append(sum(s.bytes for s in ssh))
+                        continue
+                if src is not None and src.opcode == "fusion" and \
+                        "convert" in src.name and src.operands:
+                    # convert-only fusions keep the converted tensor name
+                    ssh = comp.shape_table.get(src.operands[0])
+                    if ssh and abs(sum(s.bytes for s in ssh) * 2
+                                   - sum(s.bytes for s in sh)) < 1:
+                        out.append(sum(s.bytes for s in ssh))
+                        continue
+            out.append(sum(s.bytes for s in sh))
+        return out
+
+    def _norm_f32(self, bytes_: float, shapes: list[Shape]) -> float:
+        """Halve f32 tensor bytes under bf16 normalization (TPU projection:
+        partial sums / collectives of bf16 dots stay bf16 on TPU)."""
+        if not self.bf16_normalize:
+            return bytes_
+        if shapes and all(s.dtype == "f32" for s in shapes if s.elems > 1):
+            return bytes_ * 0.5
+        return bytes_
+
+    def _heavy_bytes(self, ins: Instr, comp: Computation) -> float:
+        op = ins.opcode
+        if op in BYTES_FREE:
+            return 0.0
+        if op in ("dot", "convolution"):
+            opbs = self._operand_bytes(ins, comp, through_convert=True)
+            return sum(opbs) + self._norm_f32(ins.result_bytes, ins.shapes)
+        opbs = self._operand_bytes(ins, comp)
+        if op in ("reduce", "reduce-window", "sort", "rng-bit-generator"):
+            return sum(opbs) + ins.result_bytes
+        if op in COLLECTIVES:
+            return self._norm_f32(sum(opbs) + ins.result_bytes, ins.shapes)
+        if self._is_inplace_update(ins):
+            # In-place (cache) updates: on TPU the destination aliases the
+            # result (donated buffers), nested scan-carried DUS chains alias
+            # transitively, and the update payload was already charged at its
+            # producer (the K/V projection dot results).  Charging the
+            # boundary here would double-count the whole cache per layer per
+            # step (verified on the llama decode HLO), so in-place updates
+            # contribute no independent HBM traffic.  Cache *reads* are fully
+            # charged at the attention dots' operands.
+            return 0.0
+        if op in ("gather", "dynamic-slice"):
+            return 2.0 * ins.result_bytes          # read slice + write
+        if op == "scatter":
+            return sum(opbs) - (max(opbs) if opbs else 0.0) + ins.result_elems * 0
+        if op == "fusion":
+            m = _CALLS.search(ins.attrs)
+            if m and self._comp_has_heavy(m.group(1)):
+                return self._norm_f32(sum(opbs) + ins.result_bytes, ins.shapes)
+            return 0.0                             # elementwise fusion: fused
+        return 0.0                                 # raw elementwise: fused
+
+    def total(self, entry: str | None = None) -> Cost:
+        if entry is None:
+            entry = next((n for n in self.comps if "main" in n),
+                         next(iter(self.comps)))
+        return self.comp_cost(entry, fused=False)
+
+    def comp_cost(self, name: str, fused: bool) -> Cost:
+        key = (name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        cost = Cost()
+        self._memo[key] = cost  # break cycles defensively
+        if comp is None:
+            return cost
+        for ins in comp.instrs:
+            self._instr_cost(ins, comp, cost, fused)
+        return cost
+
+    def _instr_cost(self, ins: Instr, comp: Computation, cost: Cost,
+                    fused: bool):
+        op = ins.opcode
+        # FLOPs
+        fl = 0.0
+        if op == "dot":
+            fl = _dot_flops(ins, comp)
+        elif op == "convolution":
+            fl = _conv_flops(ins, comp)
+        elif op in ("reduce", "reduce-window"):
+            fl = ins.result_elems * 2
+        elif op == "sort":
+            n = ins.result_elems
+            fl = n * max(1, math.log2(max(2, n)))
+        elif op not in FLOPS_FREE and op not in COLLECTIVES:
+            fl = ins.result_elems               # elementwise & friends
+        if fl:
+            cost.flops += fl
+            key = op if op in ("dot", "convolution", "reduce", "sort") else "elementwise"
+            cost.flops_by_op[key] = cost.flops_by_op.get(key, 0.0) + fl
+
+        # bytes: HBM-traffic model assuming TPU-grade fusion — only "heavy"
+        # ops inherently touch HBM (matmuls/conv read operands + write
+        # results; gathers/reduces/collectives likewise; cache updates write
+        # the update).  Pure elementwise chains are assumed fused into their
+        # heavy neighbors (XLA:TPU behavior), so they contribute FLOPs but no
+        # independent traffic.  The CPU-backend HLO fuses far less, which is
+        # why boundary-counting overestimates ~50x (see DESIGN.md §8 notes).
+        if not fused:
+            by = self._heavy_bytes(ins, comp)
+            if by:
+                cost.bytes += by
+                cost.bytes_by_op[op] = cost.bytes_by_op.get(op, 0.0) + by
+
+        # collectives
+        if op in COLLECTIVES:
+            cb = self._norm_f32(
+                _instr_coll_bytes(ins, comp, self.n_devices), ins.shapes)
+            cost.coll_bytes += cb
+            c0, b0 = cost.coll_counts.get(op, (0.0, 0.0))
+            cost.coll_counts[op] = (c0 + 1, b0 + cb)
+
+        # control flow / calls
+        if op == "while":
+            bm = _BODY.search(ins.attrs)
+            cm = _COND.search(ins.attrs)
+            tc = _TRIP_COUNT_BC.search(ins.attrs)
+            if tc:
+                trips = int(tc.group(1))        # XLA's own known_trip_count
+            elif cm and cm.group(1) in self.comps:
+                trips = _trip_count(self.comps[cm.group(1)])
+            else:
+                trips = 1
+            self.trip_counts[ins.name] = trips
+            if bm:
+                cost.add(self.comp_cost(bm.group(1), fused=False), trips)
+            if cm:
+                cost.add(self.comp_cost(cm.group(1), fused=False), trips)
+        elif op == "conditional":
+            bm = _BRANCHES.search(ins.attrs)
+            if bm:
+                branches = _OPERAND.findall(bm.group(1)) or \
+                    [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                sub = [self.comp_cost(b, fused=False) for b in branches
+                       if b in self.comps]
+                if sub:
+                    worst = max(sub, key=lambda c: c.flops)
+                    cost.add(worst)
+        elif op in ("fusion", "call", "custom-call", "map"):
+            m = _CALLS.search(ins.attrs) or re.search(r"to_apply=%?([\w.\-]+)",
+                                                      ins.attrs)
+            if m and m.group(1) in self.comps:
+                # fusion internals: flops yes, boundary bytes already counted
+                cost.add(self.comp_cost(m.group(1), fused=True))
+
+
+def analyze_hlo_text(text: str, n_devices: int,
+                     bf16_normalize: bool = True) -> dict:
+    """``bf16_normalize``: project CPU-backend f32-upcast dots/collectives
+    back to their TPU-native bf16 sizes (see DESIGN.md §8 notes).  Genuine
+    f32 tensors (optimizer moments, CE) are halved too — a <=2x error on
+    terms that are <1% of traffic in these models."""
+    comps = parse_hlo(text)
+    walker = CostWalker(comps, n_devices, bf16_normalize=bf16_normalize)
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+    c = walker.total(entry)
+    top_bytes = dict(sorted(c.bytes_by_op.items(), key=lambda kv: -kv[1])[:8])
+    top_flops = dict(sorted(c.flops_by_op.items(), key=lambda kv: -kv[1])[:8])
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "coll_bytes_per_device": c.coll_bytes,
+        "coll_counts": {k: {"count": v[0], "bytes": v[1]}
+                        for k, v in c.coll_counts.items()},
+        "bytes_by_op": top_bytes,
+        "flops_by_op": top_flops,
+        "n_computations": len(comps),
+        "while_trip_counts": walker.trip_counts,
+    }

@@ -1,0 +1,23 @@
+"""TPU v5e hardware constants for the roofline model (per task spec)."""
+
+PEAK_BF16_FLOPS = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link
+ICI_LINKS_PER_CHIP = 4          # 2D torus: 4 links usable per chip (v5e)
+HBM_PER_CHIP = 16 * 2**30       # 16 GiB
+
+# Inter-pod (DCN) for the multi-pod mesh's 'pod' axis:
+DCN_BW_PER_CHIP = 6.25e9        # bytes/s per chip (50 Gbit/s NIC share)
+
+
+def compute_time_s(flops: float, chips: int) -> float:
+    return flops / (chips * PEAK_BF16_FLOPS)
+
+
+def memory_time_s(bytes_: float, chips: int) -> float:
+    return bytes_ / (chips * HBM_BW)
+
+
+def collective_time_s(coll_bytes_per_chip: float) -> float:
+    """coll_bytes_per_chip: ICI traffic already normalized per chip."""
+    return coll_bytes_per_chip / (ICI_LINKS_PER_CHIP * ICI_LINK_BW)

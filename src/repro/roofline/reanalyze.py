@@ -1,0 +1,29 @@
+"""Recompute the cost block of dry-run artifacts from their stored HLO
+(no recompilation):  PYTHONPATH=src python -m repro.roofline.reanalyze <dir>
+"""
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+from .hlo_parse import analyze_hlo_text
+
+
+def main():
+    d = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    for j in sorted(d.glob("*.json")):
+        rec = json.loads(j.read_text())
+        hlo = j.with_suffix("").with_suffix("")  # strip .json
+        hz = d / (j.stem + ".hlo.gz")
+        if not rec.get("ok") or not hz.exists():
+            continue
+        txt = gzip.open(hz, "rt").read()
+        rec["cost_raw"] = rec.get("cost_raw", rec.get("cost"))
+        rec["cost"] = analyze_hlo_text(txt, rec["devices"], bf16_normalize=True)
+        j.write_text(json.dumps(rec, indent=1))
+        print("reanalyzed", j.stem)
+
+
+if __name__ == "__main__":
+    main()

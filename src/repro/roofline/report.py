@@ -1,0 +1,127 @@
+"""EXPERIMENTS.md §Dry-run + §Roofline table generation from dry-run
+artifacts.  Regenerate after any sweep/hillclimb with:
+
+    PYTHONPATH=src python -m repro.roofline.report artifacts/dryrun
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from ..configs import SHAPES, applicable_shapes, get_config, list_archs
+from . import hw
+
+
+def model_flops_per_step(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def load_records(artdir: Path) -> dict[tuple, dict]:
+    out = {}
+    for p in sorted(artdir.glob("*.json")):
+        rec = json.loads(p.read_text())
+        out[(rec.get("arch"), rec.get("shape"), rec.get("mesh"))] = rec
+    return out
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}M"
+    return f"{b / 1e3:.0f}K"
+
+
+def roofline_terms(rec: dict) -> dict:
+    c = rec["cost"]
+    t_c = c["flops_per_device"] / hw.PEAK_BF16_FLOPS
+    t_m = c["bytes_per_device"] / hw.HBM_BW
+    t_x = hw.collective_time_s(c["coll_bytes_per_device"])
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops_per_step(rec["arch"], rec["shape"])
+    chips = rec["devices"]
+    useful = mf / (c["flops_per_device"] * chips) if c["flops_per_device"] else 0
+    bound = max(t_c, t_m, t_x)
+    mfu = (mf / chips / hw.PEAK_BF16_FLOPS) / bound if bound else 0.0
+    return {"t_c": t_c, "t_m": t_m, "t_x": t_x, "dom": dom, "mf": mf,
+            "useful": useful, "mfu_bound": mfu, "bound_s": bound}
+
+
+def dryrun_table(records: dict) -> str:
+    lines = ["| arch | shape | mesh | compile_s | HBM/chip (analysis) | "
+             "HLO GFLOP/chip | HBM GB/chip | coll MB/chip | top collectives |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), rec in sorted(records.items()):
+        if not rec.get("ok"):
+            lines.append(f"| {arch} | {shape} | {mesh} | FAILED | | | | | "
+                         f"{rec.get('error', '')[:60]} |")
+            continue
+        c = rec["cost"]
+        mem = rec.get("memory", {})
+        cc = sorted(c["coll_counts"].items(),
+                    key=lambda kv: -kv[1]["bytes"])[:2]
+        ccs = "; ".join(f"{k}x{int(v['count'])}={fmt_bytes(v['bytes'])}"
+                        for k, v in cc)
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {rec.get('compile_s', '?')} | "
+            f"{fmt_bytes(mem.get('total_bytes_per_device', 0))} | "
+            f"{c['flops_per_device'] / 1e9:.1f} | "
+            f"{c['bytes_per_device'] / 1e9:.2f} | "
+            f"{c['coll_bytes_per_device'] / 1e6:.1f} | {ccs} |")
+    return "\n".join(lines)
+
+
+def roofline_table(records: dict, mesh: str = "single") -> str:
+    lines = ["| arch | shape | t_compute | t_memory | t_collective | "
+             "bottleneck | MODEL_FLOPS | useful/HLO | roofline-MFU bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), rec in sorted(records.items()):
+        if m != mesh or not rec.get("ok"):
+            continue
+        r = roofline_terms(rec)
+        lines.append(
+            f"| {arch} | {shape} | {r['t_c'] * 1e3:.2f} ms | "
+            f"{r['t_m'] * 1e3:.2f} ms | {r['t_x'] * 1e3:.2f} ms | "
+            f"**{r['dom']}** | {r['mf']:.2e} | {r['useful']:.3f} | "
+            f"{r['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def skip_table() -> str:
+    lines = ["| arch | skipped shape | reason |", "|---|---|---|"]
+    for arch in list_archs():
+        cfg = get_config(arch)
+        have = set(applicable_shapes(cfg))
+        for s in SHAPES:
+            if s not in have:
+                lines.append(f"| {arch} | {s} | full-attention arch: 500k "
+                             f"dense-KV decode is quadratic-history; spec "
+                             f"says skip (DESIGN.md §5) |")
+    return "\n".join(lines)
+
+
+def main():
+    artdir = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    records = load_records(artdir)
+    n_ok = sum(1 for r in records.values() if r.get("ok"))
+    print(f"## Dry-run matrix ({n_ok}/{len(records)} cells compiled)\n")
+    print(dryrun_table(records))
+    print("\n### Skipped cells\n")
+    print(skip_table())
+    print("\n## Roofline (single-pod 16x16 = 256 chips)\n")
+    print(roofline_table(records, "single"))
+    print("\n## Roofline (multi-pod 2x16x16 = 512 chips)\n")
+    print(roofline_table(records, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Serving steps: prefill + cached decode, mesh-agnostic.
+
+decode donates the state buffers (in-place KV-cache update on device — at
+32k x 128 batch the cache is the dominant resident tensor and must not be
+double-buffered).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import ModelApi
+
+
+def make_prefill(api: ModelApi, cache_len: int) -> Callable:
+    def prefill(params, tokens, frontend=None):
+        return api.prefill(params, tokens, cache_len, frontend=frontend)
+    return prefill
+
+
+def make_decode_step(api: ModelApi) -> Callable:
+    def decode_step(params, state, tokens):
+        return api.decode_step(params, state, tokens)
+    return decode_step
+
+
+def greedy_generate(api: ModelApi, params, prompt_tokens, n_steps: int,
+                    cache_len: int | None = None, frontend=None):
+    """Host-side loop: prefill the prompt then greedy-decode ``n_steps``."""
+    b, s = prompt_tokens.shape
+    cache_len = cache_len or (s + n_steps)
+    prefill = jax.jit(make_prefill(api, cache_len))
+    decode = jax.jit(make_decode_step(api), donate_argnums=(1,))
+    logits, state = prefill(params, prompt_tokens, frontend)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    out = [tok]
+    for _ in range(n_steps - 1):
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train-grad / prefill+decode step on CPU; assert shapes + finiteness.
+
+The FULL configs are exercised only via the dry-run (launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import applicable_shapes, get_config, list_archs, smoke_config
+from repro.models import cross_entropy_loss, get_model
+from repro.parallel.logical import split_logical, values_of
+from repro.parallel.sharding import MESH_RULES
+
+ARCHS = list_archs()
+B, S = 2, 64
+
+
+def _batch(cfg, b=B, s=S, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))}
+    if cfg.frontend is not None:
+        batch["frontend"] = jnp.asarray(
+            rng.normal(size=(b, cfg.frontend.n_tokens,
+                             cfg.frontend.d_frontend)), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    """init each smoke model once per test session."""
+    out = {}
+    for name in ARCHS:
+        cfg = smoke_config(name)
+        api = get_model(cfg)
+        params_l = api.init_params(jax.random.PRNGKey(0))
+        params, specs = split_logical(params_l, MESH_RULES)
+        out[name] = (cfg, api, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(zoo, name):
+    cfg, api, params = zoo[name]
+    batch = _batch(cfg)
+    logits, aux = jax.jit(api.forward_train)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab), logits.shape
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), "NaN/inf logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_grad_step(zoo, name):
+    cfg, api, params = zoo[name]
+    batch = _batch(cfg)
+
+    def loss_fn(p):
+        logits, aux = api.forward_train(p, batch)
+        return cross_entropy_loss(logits, batch["labels"]) + 0.01 * aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert flat, "no grads"
+    sq = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32)))) for g in flat)
+    assert np.isfinite(sq) and sq > 0.0, "grads vanished or NaN"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_then_decode(zoo, name):
+    cfg, api, params = zoo[name]
+    batch = _batch(cfg)
+    cache_len = S + 4
+    logits, state = jax.jit(
+        lambda p, t, f: api.prefill(p, t, cache_len, frontend=f),
+        static_argnames=())(params, batch["tokens"],
+                            batch.get("frontend"))
+    assert logits.shape == (B, S, cfg.vocab)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    logits2, state2 = jax.jit(api.decode_step)(params, state, tok)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+    assert int(state2["pos"]) == int(state["pos"]) + 1
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_full_config_matches_assignment(name):
+    """The full (non-smoke) configs carry the exact assigned dimensions."""
+    cfg = get_config(name)
+    expect = {
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }[name]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expect, (got, expect)
+    if name.startswith("granite"):
+        assert cfg.moe.top_k == 8
+        assert cfg.moe.n_experts == (32 if "1b" in name else 40)
+    if name == "zamba2-1.2b":
+        assert cfg.ssm.state == 64
+    if name == "qwen3-4b":
+        assert cfg.qk_norm
+
+
+def test_shape_classes():
+    from repro.configs import SHAPES
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    # long_500k only for sub-quadratic families
+    for name in ARCHS:
+        cfg = get_config(name)
+        shapes = applicable_shapes(cfg)
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes

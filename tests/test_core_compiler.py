@@ -1,0 +1,306 @@
+"""Unit + property tests for the SynDCIM core compiler (the paper's Alg. 1,
+Fig. 4 CSA family, SCL, Pareto search, and silicon-calibration anchors)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CSADesign, FAMILY, GemmShape, MacroSpec,
+                        MemCellKind, MultMuxKind, SubcircuitLibrary,
+                        accelerator_report, at_voltage, build_netlist,
+                        calibrated_tech_for_reference, characterize,
+                        emit_verilog, mso_search, pareto_experiment_spec,
+                        pareto_front, reference_chip_design,
+                        reference_chip_ppa, reference_chip_spec, rollup,
+                        simulate, synthesize_one, timing_paths, tree_netlist,
+                        verify_tree)
+from repro.core import tech as tech_mod
+from repro.core.searcher import max_crit_rel
+
+
+@pytest.fixture(scope="module")
+def tech():
+    return calibrated_tech_for_reference()
+
+
+@pytest.fixture(scope="module")
+def scl(tech):
+    return SubcircuitLibrary(tech).build()
+
+
+# ---------------------------------------------------------------------------
+# Silicon calibration anchors (paper Fig. 9 / Fig. 10 / Table II)
+# ---------------------------------------------------------------------------
+
+
+class TestSiliconAnchors:
+    def test_fmax_1p1ghz_at_1p2v(self):
+        ppa = reference_chip_ppa()
+        assert ppa.fmax_hz == pytest.approx(1.1e9, rel=1e-6)
+
+    def test_fmax_300mhz_at_0p7v(self):
+        # Not a calibration knob — follows from the alpha-power law fit.
+        ppa = reference_chip_ppa(vdd=0.7)
+        assert ppa.fmax_hz == pytest.approx(300e6, rel=0.05)
+
+    def test_9tops_at_1p2v(self):
+        ppa = reference_chip_ppa()
+        assert ppa.tops_1b == pytest.approx(9.0, rel=0.01)
+
+    def test_area_0p112mm2(self):
+        ppa = reference_chip_ppa()
+        assert ppa.area_um2 / 1e6 == pytest.approx(0.112, rel=1e-3)
+
+    def test_1921_tops_per_w_at_0p7v(self):
+        ppa = reference_chip_ppa(vdd=0.7)
+        assert ppa.tops_per_w_1b["int_lo"] == pytest.approx(1921.0, rel=0.01)
+
+    def test_80p5_tops_per_mm2(self):
+        ppa = reference_chip_ppa()
+        assert ppa.tops_per_mm2_1b == pytest.approx(80.5, rel=0.01)
+
+    def test_fp_overhead_fig7(self, tech):
+        """FP8 ~ +10% power vs INT4; BF16 ~ +20% vs INT8 (Fig. 7)."""
+        spec = dataclasses.replace(reference_chip_spec(),
+                                   int_precisions=(4, 8),
+                                   fp_precisions=("FP8", "BF16"))
+        d = dataclasses.replace(reference_chip_design(), spec=spec)
+        e = rollup(d, tech).e_cycle_fj
+        fp8 = e["FP8"] / e["int_lo"] - 1
+        bf16 = e["BF16"] / e["int_hi"] - 1
+        assert 0.05 < fp8 < 0.18
+        assert 0.12 < bf16 < 0.30
+        assert bf16 > fp8
+
+    def test_energy_efficiency_scales_with_dimension(self, tech):
+        """Fig. 7: larger arrays amortize peripherals -> higher TOPS/W."""
+        effs = []
+        for dim in (32, 64, 128, 256):
+            spec = dataclasses.replace(reference_chip_spec(), h=dim, w=dim,
+                                       vdd=0.7)
+            d = dataclasses.replace(reference_chip_design(), spec=spec)
+            effs.append(rollup(d, tech).tops_per_w_1b["int_lo"])
+        assert all(b > a for a, b in zip(effs, effs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# CSA family (Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+class TestCSA:
+    def test_fa_substitution_shortens_critical_path(self, tech):
+        """rho↓ (more FAs) -> faster, but more energy+area (paper §III-B)."""
+        prev = None
+        for rho in (1.0, 0.75, 0.5, 0.25, 0.0):
+            rep = characterize(CSADesign(rho=rho), 64, 2, tech)
+            if prev is not None:
+                assert rep.crit_path_rel < prev.crit_path_rel
+                assert rep.energy_rel > prev.energy_rel
+                assert rep.area_um2 > prev.area_um2
+            prev = rep
+
+    def test_reorder_speedup(self, tech):
+        base = characterize(CSADesign(rho=1.0), 64, 2, tech)
+        ro = characterize(CSADesign(rho=1.0, reorder=True), 64, 2, tech)
+        assert ro.crit_path_rel < base.crit_path_rel
+        assert ro.energy_rel == base.energy_rel  # rewiring is free in energy
+
+    def test_retiming_moves_rca_off_path(self, tech):
+        base = characterize(CSADesign(rho=1.0), 64, 2, tech)
+        rt = characterize(CSADesign(rho=1.0, retimed=True), 64, 2, tech)
+        assert rt.crit_path_rel < base.crit_path_rel
+        assert rt.latency_cycles == base.latency_cycles + 1
+
+    def test_split_shortens_tree(self, tech):
+        base = characterize(CSADesign(rho=1.0, retimed=True), 256, 2, tech)
+        sp = characterize(CSADesign(rho=1.0, retimed=True, split=2), 256, 2, tech)
+        assert sp.crit_path_rel < base.crit_path_rel
+        assert sp.latency_cycles == base.latency_cycles + 1
+
+    @given(h=st.sampled_from([4, 8, 16, 32, 64, 128, 256]),
+           rho=st.sampled_from([0.0, 0.25, 0.5, 0.75, 1.0]))
+    @settings(max_examples=30, deadline=None)
+    def test_characterize_is_sane(self, tech, h, rho):
+        rep = characterize(CSADesign(rho=rho), h, 2, tech)
+        assert rep.crit_path_rel > 0
+        assert rep.energy_rel > 0
+        assert rep.area_um2 > 0
+        assert rep.acc_width >= 2 + int(np.ceil(np.log2(h)))
+
+
+# ---------------------------------------------------------------------------
+# Gate-level functional simulation (post-synthesis verification stage)
+# ---------------------------------------------------------------------------
+
+
+class TestGateSim:
+    @given(h=st.sampled_from([4, 8, 16, 32, 64]),
+           rho=st.sampled_from([0.0, 0.25, 0.5, 0.75, 1.0]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_synthesized_tree_sums_exactly(self, h, rho, seed):
+        nl = build_netlist(CSADesign(rho=rho), h)
+        rng = np.random.default_rng(seed)
+        ops = rng.integers(-2**20, 2**20, size=(h, 8))
+        out = simulate(nl, ops)
+        np.testing.assert_array_equal(out, ops.sum(axis=0))
+
+    def test_whole_macro_tree_netlist(self, tech):
+        ppa = reference_chip_ppa()
+        nl = tree_netlist(ppa.design)
+        rng = np.random.default_rng(0)
+        ops = rng.integers(0, 2, size=(nl.n_inputs, 33))  # bitwise products
+        assert verify_tree(nl, ops)
+
+    def test_verilog_emission_mentions_design_choices(self):
+        ppa = reference_chip_ppa()
+        v = emit_verilog(ppa)
+        assert "dcim_macro" in v
+        assert ppa.design.memcell.value in v
+        assert "adder tree" in v
+
+
+# ---------------------------------------------------------------------------
+# MSO searcher (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+class TestSearcher:
+    def test_pareto_spec_frontier(self, tech, scl):
+        res = mso_search(pareto_experiment_spec(), scl, tech)
+        assert res.n_evaluated >= 4
+        assert len(res.frontier) >= 3
+        # Every frontier design meets the 800 MHz @ 0.9 V constraint.
+        for p in res.frontier:
+            assert p.meets_timing
+            assert p.fmax_hz >= 800e6 * 0.999
+        # The frontier spans an energy-efficient and a fast corner.
+        fmaxes = [p.fmax_hz for p in res.frontier]
+        effs = [p.tops_per_w_1b["int_lo"] for p in res.frontier]
+        assert max(fmaxes) / min(fmaxes) > 1.1
+        assert max(effs) / min(effs) > 1.05
+
+    def test_objective_tops_exceeds_spec(self, tech, scl):
+        """Alg. 1 objective: TOPS(Macro) > TOPS(SPEC)."""
+        spec = pareto_experiment_spec()
+        ppa = synthesize_one(spec, scl, tech, prefs=(1.0, 0.0, 0.0))
+        spec_tops = 2 * spec.h * spec.w * spec.f_mac_hz / 1e12
+        assert ppa.tops_1b >= spec_tops * 0.999
+
+    def test_hard_spec_uses_column_split(self, tech, scl):
+        hard = dataclasses.replace(pareto_experiment_spec(), h=256, w=256,
+                                   f_mac_hz=1.0e9)
+        res = mso_search(hard, scl, tech)
+        assert any(p.design.csa.split > 1 for p in res.frontier)
+        assert all(p.meets_timing for p in res.frontier)
+
+    def test_infeasible_spec_reports_unmet(self, tech, scl):
+        impossible = dataclasses.replace(pareto_experiment_spec(),
+                                         f_mac_hz=10e9)
+        ppa = synthesize_one(impossible, scl, tech, prefs=(0, 0, 1.0))
+        assert not ppa.meets_timing
+        assert any("UNMET" in a for a in ppa.design.audit)
+
+    def test_mcr_constraint_respected(self, tech, scl):
+        """OAI22 fused mult/mux must never be selected for MCR > 2."""
+        spec = dataclasses.replace(pareto_experiment_spec(), mcr=4)
+        res = mso_search(spec, scl, tech)
+        for p in res.explored:
+            assert p.design.multmux is not MultMuxKind.OAI22_FUSED
+
+    def test_audit_trail_records_techniques(self, tech, scl):
+        hard = dataclasses.replace(pareto_experiment_spec(), f_mac_hz=1.2e9)
+        ppa = synthesize_one(hard, scl, tech, prefs=(0, 0, 1.0))
+        joined = " ".join(ppa.design.audit)
+        assert "tt1" in joined or "tt2" in joined or "tt3" in joined
+
+
+# ---------------------------------------------------------------------------
+# Pareto utilities
+# ---------------------------------------------------------------------------
+
+
+class TestPareto:
+    @given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                    min_size=1, max_size=40))
+    @settings(max_examples=50, deadline=None)
+    def test_front_is_nondominated(self, pts):
+        front = pareto_front(pts, lambda p: p)
+        assert front, "front never empty"
+        for f in front:
+            for p in pts:
+                assert not (p[0] < f[0] - 1e-12 and p[1] < f[1] - 1e-12)
+
+    def test_front_subset_and_sorted(self):
+        pts = [(1, 5), (2, 2), (5, 1), (3, 3), (6, 6)]
+        front = pareto_front(pts, lambda p: p)
+        assert front == [(1, 5), (2, 2), (5, 1)]
+
+
+# ---------------------------------------------------------------------------
+# Spec validation + SCL
+# ---------------------------------------------------------------------------
+
+
+class TestSpecAndSCL:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            MacroSpec(h=48, w=64)  # not power of two
+        with pytest.raises(ValueError):
+            MacroSpec(fp_precisions=("FP13",))
+        with pytest.raises(ValueError):
+            MacroSpec(int_precisions=())
+
+    def test_scl_lut_hit_and_offgrid_scaling(self, scl):
+        d = CSADesign(rho=0.5)
+        on = scl.adder_tree(d, 64)     # on grid
+        off = scl.adder_tree(d, 96)    # off grid -> model fallback
+        assert on.delay_rel > 0 and off.delay_rel > 0
+        assert off.energy_rel > on.energy_rel  # more rows, more energy
+
+    def test_query_sorted_by_energy(self, scl):
+        rows = scl.query_adder_trees(64)
+        energies = [r.energy_rel for _, r in rows]
+        assert energies == sorted(energies)
+
+    def test_fastest_tree_is_fa_heavy(self, scl):
+        design, rec = scl.fastest_adder_tree(64)
+        assert design.rho <= 0.25
+        assert design.retimed
+
+
+# ---------------------------------------------------------------------------
+# System DSE (workload -> macro array)
+# ---------------------------------------------------------------------------
+
+
+class TestDSE:
+    def test_gemm_mapping_conservation(self):
+        ppa = reference_chip_ppa()
+        g = GemmShape("ffn", m=128, k=512, n=2048)
+        rep = accelerator_report([g], ppa, n_macros=16, ib=8, wb=8)
+        assert rep.total_cycles > 0
+        assert rep.effective_tops > 0
+        assert 0 < rep.avg_util <= 1.0
+        assert rep.area_mm2 == pytest.approx(16 * 0.112, rel=1e-3)
+
+    def test_more_macros_fewer_cycles(self):
+        ppa = reference_chip_ppa()
+        g = GemmShape("big", m=256, k=4096, n=4096)
+        slow = accelerator_report([g], ppa, n_macros=4)
+        fast = accelerator_report([g], ppa, n_macros=64)
+        assert fast.total_cycles < slow.total_cycles
+
+    def test_mcr_reduces_weight_reloads(self, tech):
+        g = GemmShape("ffn", m=64, k=2048, n=2048)
+        spec1 = dataclasses.replace(reference_chip_spec(), mcr=1)
+        spec4 = dataclasses.replace(reference_chip_spec(), mcr=4)
+        d1 = dataclasses.replace(reference_chip_design(), spec=spec1)
+        d4 = dataclasses.replace(reference_chip_design(), spec=spec4)
+        r1 = accelerator_report([g], rollup(d1, tech), n_macros=8)
+        r4 = accelerator_report([g], rollup(d4, tech), n_macros=8)
+        assert (r4.reports[0].weight_reloads < r1.reports[0].weight_reloads)

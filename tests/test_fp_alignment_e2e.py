@@ -1,0 +1,67 @@
+"""End-to-end FP execution through the DCIM pipeline (paper Fig. 1 path):
+
+    FP operands -> FP&INT alignment unit (block max-exponent + mantissa
+    shift) -> integer bit-serial MAC (adder tree + S&A) -> OFU rescale
+
+The integer MAC is the same `dcim_matmul_int` kernel validated bit-exactly
+against the bit-serial oracle; this test closes the loop by showing the
+aligned-integer path approximates the f32 matmul to block-FP accuracy — i.e.
+the compiled macro's FP8/BF16 modes are numerically faithful."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.dcim_mac import dcim_matmul_int
+from repro.quant import block_fp_align, fp8_e4m3_quant
+
+RNG = np.random.default_rng(11)
+
+
+def _aligned_matmul(a_fp: jnp.ndarray, w_fp: jnp.ndarray, man_bits: int):
+    """The alignment-unit execution: per-row blocks for activations, per-col
+    blocks for weights; integer MAC; OFU rescale."""
+    a_man, a_scale = block_fp_align(a_fp, man_bits, block_axis=-1)  # (M,K)
+    w_man, w_scale = block_fp_align(w_fp.T, man_bits, block_axis=-1)  # (N,K)
+    # mantissas fit int8 only if man_bits <= 6; use int32 MAC ref for larger
+    acc = jnp.matmul(a_man.astype(jnp.int64), w_man.T.astype(jnp.int64))
+    return acc.astype(jnp.float32) * a_scale * w_scale.T
+
+
+@pytest.mark.parametrize("man_bits,rtol", [(7, 0.02), (5, 0.08), (3, 0.3)])
+def test_aligned_fp_matmul_approximates_f32(man_bits, rtol):
+    a = jnp.asarray(RNG.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(64, 48)), jnp.float32)
+    got = _aligned_matmul(a, w, man_bits)
+    ref = jnp.matmul(a, w)
+    scale = float(jnp.abs(ref).max())
+    err = float(jnp.abs(got - ref).max()) / scale
+    assert err < rtol, (man_bits, err)
+
+
+def test_alignment_feeds_int8_kernel_exactly():
+    """With man_bits<=6 the aligned mantissas fit int8 and run on the actual
+    DCIM kernel; result must equal the int64 reference exactly."""
+    a = jnp.asarray(RNG.normal(size=(16, 32)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(32, 24)), jnp.float32)
+    a_man, a_scale = block_fp_align(a, 6, -1)
+    w_man, w_scale = block_fp_align(w.T, 6, -1)
+    acc_kernel = dcim_matmul_int(a_man.astype(jnp.int8),
+                                 w_man.T.astype(jnp.int8), use_pallas=True,
+                                 interpret=True)
+    acc_ref = jnp.matmul(a_man.astype(jnp.int64), w_man.T.astype(jnp.int64))
+    np.testing.assert_array_equal(np.asarray(acc_kernel),
+                                  np.asarray(acc_ref.astype(jnp.int32)))
+
+
+def test_fp8_mode_error_profile():
+    """FP8 (E4M3) quantization of operands before the aligned path — the
+    macro's FP8 mode — stays within a few percent on normalized data."""
+    a = jnp.asarray(RNG.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(64, 32)) * 0.1, jnp.float32)
+    a8 = fp8_e4m3_quant(a)
+    w8 = fp8_e4m3_quant(w)
+    got = _aligned_matmul(a8, w8, 7)
+    ref = jnp.matmul(a, w)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.08, rel

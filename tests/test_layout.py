@@ -1,0 +1,63 @@
+"""SDP floorplanner tests (paper §III-D): geometric invariants + DEF/SDP
+emission for searched designs."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (SubcircuitLibrary, calibrated_tech_for_reference,
+                        mso_search, pareto_experiment_spec, reference_chip_ppa)
+from repro.core.layout import emit_def, emit_sdp_script, place
+
+
+@pytest.fixture(scope="module")
+def chip_fp():
+    return place(reference_chip_ppa())
+
+
+class TestFloorplan:
+    def test_no_overlaps(self, chip_fp):
+        rs = chip_fp.regions
+        for i, a in enumerate(rs):
+            for b in rs[i + 1:]:
+                assert not a.overlaps(b), (a.name, b.name)
+
+    def test_regions_inside_die(self, chip_fp):
+        for r in chip_fp.regions:
+            assert r.x >= -1e-6 and r.y >= -1e-6
+            assert r.x + r.w <= chip_fp.die_w + 1e-6
+            assert r.y + r.h <= chip_fp.die_h + 1e-6
+
+    def test_total_area_matches_macro(self, chip_fp):
+        ppa = reference_chip_ppa()
+        placed = sum(r.area for r in chip_fp.regions)
+        assert placed == pytest.approx(ppa.area_um2, rel=0.02)
+
+    def test_die_matches_fig10_footprint(self, chip_fp):
+        # 455x246 um fabricated macro: same area, similar aspect
+        assert chip_fp.die_w * chip_fp.die_h == pytest.approx(0.112e6, rel=0.02)
+        assert 1.2 < chip_fp.die_w / chip_fp.die_h < 2.6
+
+    def test_structure(self, chip_fp):
+        names = [r.name for r in chip_fp.regions]
+        assert "wl_drivers" in names and "bl_drivers" in names
+        assert any(n.startswith("sram_bank") for n in names)
+        assert any(n.startswith("adder_strip") for n in names)
+        # interleaved banks and adder strips (SDP pattern)
+        banks = [n for n in names if n.startswith(("sram_bank", "adder_strip"))]
+        assert banks[0].startswith("sram_bank")
+        assert banks[1].startswith("adder_strip")
+
+    def test_def_and_sdp_emission(self, chip_fp):
+        d = emit_def(chip_fp)
+        assert "DIEAREA" in d and "REGIONS" in d
+        s = emit_sdp_script(reference_chip_ppa())
+        assert "sdpCreateGroup" in s and "set H 64" in s
+
+    def test_every_frontier_design_places(self):
+        tech = calibrated_tech_for_reference()
+        scl = SubcircuitLibrary(tech).build()
+        res = mso_search(pareto_experiment_spec(), scl, tech)
+        for ppa in res.frontier:
+            fp = place(ppa)
+            assert fp.utilization > 0.9
