@@ -1,7 +1,9 @@
 """System-level DSE (the paper's §I framing): map each assigned
 architecture's GEMM inventory onto arrays of SynDCIM macros and report
 accelerator throughput/energy — including the MCR/weight-update angle for
-MoE (expert weights swap per batch)."""
+MoE (expert weights swap per batch), plus the batched cross-scenario
+co-design sweep (every model-zoo workload x every candidate design point in
+one fused pass, Fig. 8-style frontier across vision/language/MoE)."""
 
 from __future__ import annotations
 
@@ -9,10 +11,14 @@ import dataclasses
 
 from repro.configs import get_config, list_archs
 from repro.core import (GemmShape, accelerator_report,
-                        calibrated_tech_for_reference, reference_chip_design,
+                        calibrated_tech_for_reference, cross_workload_codesign,
+                        design_space_sweep, mso_search_batched,
+                        pareto_experiment_spec, reference_chip_design,
                         reference_chip_ppa, rollup)
 
 from .common import timed
+
+N_MACROS = 256
 
 
 def gemm_inventory(cfg, seq: int = 256) -> list[GemmShape]:
@@ -38,6 +44,29 @@ def gemm_inventory(cfg, seq: int = 256) -> list[GemmShape]:
     return gs
 
 
+def candidate_designs(tech, n_extra: int = 96) -> list:
+    """Co-design candidate pool: the silicon reference, the MSO-explored
+    designs, and a slice of the exhaustive-lattice frontier + neighborhood."""
+    ppas = [reference_chip_ppa()]
+    res = mso_search_batched(pareto_experiment_spec(), None, tech,
+                             resolution=5)
+    ppas += list(res.explored)
+    sweep = design_space_sweep(pareto_experiment_spec(), tech)
+    idx = list(sweep.frontier_indices())
+    # pad with a deterministic stride through the valid feasible lattice
+    import numpy as np
+    feas = np.flatnonzero(sweep.lattice.valid & sweep.ppa.meets)
+    stride = max(1, len(feas) // n_extra)
+    idx += [int(i) for i in feas[::stride][:n_extra]]
+    seen = {p.design.name() for p in ppas}
+    for i in idx:
+        p = sweep.materialize(i)
+        if p.design.name() not in seen:
+            seen.add(p.design.name())
+            ppas.append(p)
+    return ppas
+
+
 def run() -> list[tuple]:
     ppa = reference_chip_ppa()
     tech = calibrated_tech_for_reference()
@@ -45,12 +74,35 @@ def run() -> list[tuple]:
     for arch in list_archs():
         cfg = get_config(arch)
         gemms = gemm_inventory(cfg)
-        rep, us = timed(lambda: accelerator_report(gemms, ppa, n_macros=256,
+        rep, us = timed(lambda: accelerator_report(gemms, ppa,
+                                                   n_macros=N_MACROS,
                                                    ib=8, wb=8), iters=1)
         s = rep.summary()
-        rows.append((f"dse/{arch}/256macros", us,
+        rows.append((f"dse/{arch}/{N_MACROS}macros", us,
                      f"eff_tops={s['effective_tops']};util={s['avg_util']};"
                      f"energy_uj={s['energy_uj']};area_mm2={s['area_mm2']}"))
+
+    # ---- batched cross-scenario co-design ----------------------------------
+    workloads = {a: gemm_inventory(get_config(a)) for a in list_archs()}
+    ppas = candidate_designs(tech)
+
+    def scalar_codesign():
+        return [[accelerator_report(g, p, n_macros=N_MACROS)
+                 for p in ppas] for g in workloads.values()]
+
+    _, us_scalar = timed(scalar_codesign, warmup=0, iters=1)
+    report, us_batched = timed(
+        lambda: cross_workload_codesign(workloads, ppas, n_macros=N_MACROS),
+        iters=1)
+    s = report.summary()
+    rows.append((f"dse/codesign/{len(workloads)}x{len(ppas)}", us_batched,
+                 f"frontier={len(report.frontier)};"
+                 f"wall_spread={s['wallclock_spread']:.3f};"
+                 f"energy_spread={s['energy_spread']:.3f}"))
+    rows.append(("dse/codesign_speedup", us_batched,
+                 f"speedup={us_scalar / us_batched:.2f}x;"
+                 f"pairs={len(workloads) * len(ppas)}"))
+
     # MCR sensitivity on the MoE arch: higher MCR -> fewer weight reloads
     cfg = get_config("granite-moe-1b-a400m")
     gemms = gemm_inventory(cfg)

@@ -22,3 +22,20 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
 def emit(rows: list[tuple]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def rows_to_dicts(module: str, rows: list[tuple]) -> list[dict]:
+    """Machine-readable form of the CSV rows for the --json perf artifact.
+    The ``derived`` field's ``k=v;k=v`` pairs are split out so trajectory
+    tooling can track individual metrics across PRs."""
+    out = []
+    for name, us, derived in rows:
+        metrics = {}
+        for part in str(derived).split(";"):
+            if "=" in part:
+                k, _, v = part.partition("=")
+                metrics[k] = v
+        out.append({"module": module, "name": name,
+                    "us_per_call": round(us, 1), "derived": derived,
+                    "metrics": metrics})
+    return out

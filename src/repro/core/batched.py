@@ -1,0 +1,735 @@
+"""Batched design-space evaluation engine (vectorized Algorithm 1).
+
+The scalar compiler path (:mod:`repro.core.searcher`) evaluates one preference
+point at a time, re-running the full subcircuit characterization on every
+candidate it probes.  This module evaluates the *entire* discrete macro design
+space in one fused pass instead:
+
+  ``SpecTables``
+      per-spec subcircuit characterization, factored along the lattice axes —
+      the CSA family (rho x reorder x retimed x split), the mult/mux variants,
+      the OFU pipeline depths, plus the spec-constant blocks (WL/BL drivers,
+      S&A, alignment).  Every table entry is produced by the *same* scalar
+      model functions the reference path uses, so the two paths share one
+      ground truth.
+
+  ``DesignLattice``
+      structure-of-arrays enumeration of the discrete design space
+      (memcell x mult/mux x CSA x OFU pipe x retiming/fusion flags), with a
+      mixed-radix ``index_of`` so searches address points in O(1).
+
+  ``evaluate``
+      the PPA roll-up and timing-path checks of :mod:`repro.core.macro`
+      reimplemented as vectorized float64 JAX over the whole lattice.  Term
+      gathering and accumulation mirror the scalar arithmetic operation for
+      operation, so results are bit-identical to :func:`repro.core.macro.rollup`.
+
+  ``mso_search_batched``
+      Algorithm 1 (steps 1-4) layered on top as masked first-feasible
+      selection over the batched tensors: the tt1→tt3 critical-path walk, the
+      tt4/tt5 OFU walk, register fusion, and the ft1-ft3 preference
+      fine-tuning all become per-preference gathers into the precomputed
+      timing arrays.  The returned frontier is identical to the scalar
+      :func:`repro.core.searcher.mso_search`.
+
+  ``design_space_sweep`` / ``pareto_mask``
+      exhaustive sweeps with chunked vectorized Pareto extraction — the entry
+      point :mod:`repro.core.dse` uses for many-workload co-design.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from . import subcircuits as sc
+from .csa import CSADesign, CSAReport, characterize, valid_splits
+from .macro import (ACT_IN_MEAS, ACT_WT_MEAS, MacroDesign, MacroPPA,
+                    MacroSpec, PathReport, _mode_bits, _product_bits)
+from .pareto import pareto_indices, preference_grid
+from .searcher import (RHO_STEPS, SearchResult, _throughput_overdrive,
+                       max_crit_rel)
+from .tech import TechModel, delay_scale, energy_scale, leakage_scale
+
+MEMCELLS: tuple[sc.MemCellKind, ...] = tuple(sc.MemCellKind)
+MULTMUXES: tuple[sc.MultMuxKind, ...] = tuple(sc.MultMuxKind)
+PIPE_STEPS: tuple[int, ...] = (0, 1, 2, 3)
+BOOLS: tuple[bool, bool] = (False, True)
+
+_MM_INDEX = {k: i for i, k in enumerate(MULTMUXES)}
+
+
+# ---------------------------------------------------------------------------
+# Per-spec subcircuit tables
+# ---------------------------------------------------------------------------
+
+
+class SpecTables:
+    """Subcircuit PPA factored along the lattice axes for one spec.
+
+    All entries come from the scalar model functions (``characterize``,
+    ``multmux_ppa``, ``ofu_ppa``, ...) with exactly the arguments the scalar
+    roll-up would pass, and the derived per-term constants reproduce the
+    scalar accumulation expressions float-for-float.
+    """
+
+    def __init__(self, spec: MacroSpec, tech: TechModel):
+        self.spec = spec
+        self.tech = tech
+        self.splits = valid_splits(spec.h)
+        self.n_rho = len(RHO_STEPS)
+        self.n_sp = len(self.splits)
+
+        # --- CSA family axis (rho x reorder x retimed x split) --------------
+        self.csa_designs: list[CSADesign] = []
+        self.csa_reports: list[CSAReport] = []
+        for ri, rho in enumerate(RHO_STEPS):
+            for ro in BOOLS:
+                for rt in BOOLS:
+                    for sp in self.splits:
+                        d = CSADesign(rho=rho, reorder=ro, retimed=rt, split=sp)
+                        self.csa_designs.append(d)
+                        self.csa_reports.append(
+                            characterize(d, spec.h, _product_bits(spec),
+                                         tech))
+        self.csa_crit = np.array([r.crit_path_rel for r in self.csa_reports])
+        self.csa_energy = np.array([r.energy_rel for r in self.csa_reports])
+        self.csa_area = np.array([r.area_um2 for r in self.csa_reports])
+        self.csa_lat = np.array([r.latency_cycles for r in self.csa_reports])
+        self.acc_width = self.csa_reports[0].acc_width
+        self.out_w = self.acc_width + spec.max_input_bits
+
+        # --- mult/mux axis ---------------------------------------------------
+        self.mm_valid = np.array([sc.multmux_valid(k, spec.mcr)
+                                  for k in MULTMUXES])
+        mm_ppa = [sc.multmux_ppa(k, spec.mcr, tech) if v else None
+                  for k, v in zip(MULTMUXES, self.mm_valid)]
+        nanppa = sc.PPA(float("nan"), float("nan"), float("nan"))
+        self.mm_ppa = [p if p is not None else nanppa for p in mm_ppa]
+
+        # --- memcell axis (area only: timing/energy use the array drivers) --
+        self.cell_area = np.array([sc.memcell_ppa(k, tech).area_um2
+                                   for k in MEMCELLS])
+
+        # --- OFU pipeline axis ----------------------------------------------
+        self.ofu_ppa = [sc.ofu_ppa(spec.w, tuple(spec.int_precisions),
+                                   self.out_w, ps, tech) for ps in PIPE_STEPS]
+
+        # --- spec-constant subcircuits ---------------------------------------
+        self.wl = sc.wl_driver_ppa(spec.h, spec.w, spec.mcr, tech)
+        self.bl = sc.bl_driver_ppa(spec.h, spec.w, spec.mcr, tech)
+        # _mode_energy_rel uses base-unit BL constants (rel consts only):
+        self.bl_base = sc.bl_driver_ppa(spec.h, spec.w, spec.mcr, TechModel())
+        self.sa = sc.shift_adder_ppa(self.acc_width, spec.max_input_bits, tech)
+        self.align = sc.align_ppa(spec.w, tuple(spec.fp_precisions), tech)
+
+        self.modes = ["int_lo", "int_hi"] + list(spec.fp_precisions)
+        self._build_terms()
+
+    def csa_index(self, rho_i, ro, rt, sp_i):
+        """Flat index into the CSA axis (vectorized-friendly)."""
+        return ((np.asarray(rho_i) * 2 + np.asarray(ro)) * 2
+                + np.asarray(rt)) * self.n_sp + np.asarray(sp_i)
+
+    # -- per-term constants mirroring the scalar accumulation expressions ----
+    def _build_terms(self) -> None:
+        spec, tech = self.spec, self.tech
+        act_in, act_wt = ACT_IN_MEAS, ACT_WT_MEAS
+
+        # timing: scalar mac path is (wl + mm) + tree
+        self.t_wl_mm = np.array([self.wl.delay_rel + p.delay_rel
+                                 for p in self.mm_ppa])
+        self.t_ofu = np.array([p.delay_rel for p in self.ofu_ppa])
+        self.t_sa = self.sa.delay_rel
+
+        # area: scalar breakdown entries in roll-up order
+        n_cells = spec.h * spec.w * spec.mcr
+        self.a_array = np.array([n_cells * a for a in self.cell_area])
+        self.a_mult = np.array([spec.h * spec.w * p.area_um2
+                                for p in self.mm_ppa])
+        self.a_tree = np.array([a * spec.w for a in self.csa_area])
+        self.a_sa = self.sa.area_um2 * spec.w
+        self.a_ofu = np.array([p.area_um2 for p in self.ofu_ppa])
+        self.a_align = self.align.area_um2
+        self.a_drv = self.wl.area_um2 + self.bl.area_um2
+
+        # energy: term tables per _mode_energy_rel accumulation step
+        self.e_wl = self.wl.energy_rel * act_in
+        self.e_mm = np.array([spec.h * spec.w * p.energy_rel * act_in * act_wt
+                              for p in self.mm_ppa])
+        tree_act = min(1.0, act_in * act_wt + 0.02)
+        self.e_tree = np.array([(e * spec.w) * tree_act
+                                for e in self.csa_energy])
+        self.e_sa = (self.sa.energy_rel * spec.w) * 0.55
+        duty = (min(1.0, spec.f_wupdate_hz / max(spec.f_mac_hz, 1.0))
+                * 1.0 / (spec.h * spec.mcr))
+        self.e_bl = (self.bl_base.energy_rel / (spec.h * spec.mcr)) * duty
+        self.e_ofu: dict[str, np.ndarray] = {}
+        self.e_align: dict[str, float] = {}
+        for m in self.modes:
+            ib = _mode_bits(spec, m)
+            self.e_ofu[m] = np.array([p.energy_rel * (0.5 / max(1, ib))
+                                      for p in self.ofu_ppa])
+            if m in sc.FP_FORMATS:
+                exp, man = sc.FP_FORMATS[m]
+                emax = max(sc.FP_FORMATS[f][0] for f in spec.fp_precisions)
+                mmax = max(sc.FP_FORMATS[f][1] for f in spec.fp_precisions)
+                frac = (exp + 0.5 * man) / (emax + 0.5 * mmax)
+                self.e_align[m] = self.align.energy_rel * 0.62 * frac
+            else:
+                self.e_align[m] = self.align.energy_rel * 0.04
+
+        # latency components (ints)
+        self.l_csa = self.csa_lat
+        self.l_sa = self.sa.latency_cycles
+        self.l_ofu = np.array([p.latency_cycles for p in self.ofu_ppa])
+
+
+# ---------------------------------------------------------------------------
+# Design lattice (structure-of-arrays)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DesignLattice:
+    """Flattened enumeration of the discrete macro design space."""
+
+    spec: MacroSpec
+    memcells: tuple[sc.MemCellKind, ...]
+    splits: tuple[int, ...]
+    mem_i: np.ndarray
+    mm_i: np.ndarray
+    rho_i: np.ndarray
+    ro: np.ndarray
+    rt: np.ndarray
+    sp_i: np.ndarray
+    pipe_i: np.ndarray
+    ort: np.ndarray
+    fts: np.ndarray
+    fso: np.ndarray
+    valid: np.ndarray          # mult/mux validity for this spec's MCR
+
+    @classmethod
+    def enumerate(cls, spec: MacroSpec,
+                  memcells: tuple[sc.MemCellKind, ...] = MEMCELLS
+                  ) -> "DesignLattice":
+        splits = valid_splits(spec.h)
+        axes = [np.arange(len(memcells)), np.arange(len(MULTMUXES)),
+                np.arange(len(RHO_STEPS)), np.arange(2), np.arange(2),
+                np.arange(len(splits)), np.arange(len(PIPE_STEPS)),
+                np.arange(2), np.arange(2), np.arange(2)]
+        grids = np.meshgrid(*axes, indexing="ij")
+        flat = [g.ravel() for g in grids]
+        mem_i, mm_i, rho_i, ro, rt, sp_i, pipe_i, ort, fts, fso = flat
+        mm_valid = np.array([sc.multmux_valid(k, spec.mcr) for k in MULTMUXES])
+        return cls(spec=spec, memcells=tuple(memcells), splits=splits,
+                   mem_i=mem_i, mm_i=mm_i, rho_i=rho_i,
+                   ro=ro.astype(bool), rt=rt.astype(bool), sp_i=sp_i,
+                   pipe_i=pipe_i, ort=ort.astype(bool),
+                   fts=fts.astype(bool), fso=fso.astype(bool),
+                   valid=mm_valid[mm_i])
+
+    def __len__(self) -> int:
+        return self.mem_i.shape[0]
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return (len(self.memcells), len(MULTMUXES), len(RHO_STEPS), 2, 2,
+                len(self.splits), len(PIPE_STEPS), 2, 2, 2)
+
+    @property
+    def strides(self) -> tuple[int, ...]:
+        dims = self.dims
+        out = []
+        acc = 1
+        for n in reversed(dims):
+            out.append(acc)
+            acc *= n
+        return tuple(reversed(out))
+
+    def index_of(self, mem_i, mm_i, rho_i, ro, rt, sp_i, pipe_i, ort, fts,
+                 fso):
+        """Mixed-radix flat index — O(1) addressing for masked selection.
+        Bool flags participate directly (False=0/True=1)."""
+        s = self.strides
+        return (mem_i * s[0] + mm_i * s[1] + rho_i * s[2] + ro * s[3]
+                + rt * s[4] + sp_i * s[5] + pipe_i * s[6] + ort * s[7]
+                + fts * s[8] + fso * s[9])
+
+    def design_at(self, i: int, audit: tuple[str, ...] = ()) -> MacroDesign:
+        csa = CSADesign(rho=RHO_STEPS[self.rho_i[i]], reorder=bool(self.ro[i]),
+                        retimed=bool(self.rt[i]),
+                        split=self.splits[self.sp_i[i]])
+        return MacroDesign(spec=self.spec,
+                           memcell=self.memcells[self.mem_i[i]],
+                           multmux=MULTMUXES[self.mm_i[i]], csa=csa,
+                           ofu_pipe_stages=PIPE_STEPS[self.pipe_i[i]],
+                           ofu_retimed_into_sa=bool(self.ort[i]),
+                           fuse_tree_sa=bool(self.fts[i]),
+                           fuse_sa_ofu=bool(self.fso[i]), audit=audit)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized timing + PPA roll-up
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchedPPA:
+    """Roll-up of the whole lattice as structure-of-arrays (float64)."""
+
+    lattice: DesignLattice
+    tables: SpecTables
+    mac: np.ndarray
+    sa: np.ndarray
+    ofu: np.ndarray
+    crit: np.ndarray
+    fmax: np.ndarray
+    meets: np.ndarray
+    area: np.ndarray
+    breakdown: dict[str, np.ndarray]
+    e_cycle: dict[str, np.ndarray]
+    latency: np.ndarray
+    tops_1b: np.ndarray
+    tops_w: dict[str, np.ndarray]
+    tops_mm2: np.ndarray
+
+    def materialize(self, i: int, audit: tuple[str, ...] = ()) -> MacroPPA:
+        """Reconstruct the scalar MacroPPA view of lattice point ``i``."""
+        design = self.lattice.design_at(i, audit)
+        paths = PathReport(float(self.mac[i]), float(self.sa[i]),
+                           float(self.ofu[i]), float(self.crit[i]))
+        return MacroPPA(
+            design=design, paths=paths, fmax_hz=float(self.fmax[i]),
+            area_um2=float(self.area[i]),
+            area_breakdown={k: float(v[i])
+                            for k, v in self.breakdown.items()},
+            e_cycle_fj={m: float(v[i]) for m, v in self.e_cycle.items()},
+            latency_cycles=int(self.latency[i]),
+            tops_1b=float(self.tops_1b[i]),
+            tops_per_w_1b={m: float(v[i]) for m, v in self.tops_w.items()},
+            tops_per_mm2_1b=float(self.tops_mm2[i]),
+            meets_timing=bool(self.meets[i]),
+            csa_report=self.tables.csa_reports[
+                int(self.tables.csa_index(self.lattice.rho_i[i],
+                                          self.lattice.ro[i],
+                                          self.lattice.rt[i],
+                                          self.lattice.sp_i[i]))])
+
+
+# Scalar constants packed into one f64 argument so every (spec, tech) change
+# reaches the jitted kernel as data — never as a baked-in trace constant
+# (which would also expose literal divisors to reciprocal strength-reduction).
+_CONST_FIELDS = ("apr", "a_sa", "a_align", "a_drv", "e_wl", "e_sa", "e_bl",
+                 "eps_fj", "escale")
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _eval_kernel(idx, tabs, consts, e_ofu_m, e_align_m):
+    """Fused gather + area + per-mode-energy roll-up over the lattice
+    (float64 under x64).
+
+    Arithmetic mirrors macro.rollup operation for operation so results are
+    bit-identical to the scalar reference path.  Only contraction-safe
+    expressions live in here: gathers, additions of precomputed terms, and
+    multiplies that never feed an add (XLA's FMA contraction rewrites
+    mul-then-add chains even across an optimization_barrier, so the retiming
+    timing chain is computed eagerly by the caller instead).
+    """
+    mem_i, mm_i, csa_j, pipe_i, ort, fts, fso = idx
+    (t_wl_mm, csa_crit, t_ofu, a_array_t, a_mult_t, a_tree_t, a_ofu_t,
+     e_mm_t, e_tree_t) = tabs
+    c = {k: consts[i] for i, k in enumerate(_CONST_FIELDS)}
+    n = mm_i.shape[0]
+
+    # ---- raw timing components (the fixup chain runs in numpy) -------------
+    mac_base = t_wl_mm[mm_i] + csa_crit[csa_j]
+    ofu_base = t_ofu[pipe_i]
+
+    # ---- area (accumulated in the scalar breakdown order) -------------------
+    a_array = a_array_t[mem_i]
+    a_mult = a_mult_t[mm_i]
+    a_tree = a_tree_t[csa_j]
+    a_ofu = a_ofu_t[pipe_i]
+    placed = a_array + a_mult
+    placed = placed + a_tree
+    placed = placed + c["a_sa"]
+    placed = placed + a_ofu
+    placed = placed + c["a_align"]
+    placed = placed + c["a_drv"]
+    area = placed * c["apr"]
+    breakdown = {
+        "sram_array": a_array, "multmux": a_mult, "adder_tree": a_tree,
+        "shift_adder": jnp.broadcast_to(c["a_sa"], (n,)),
+        "ofu": a_ofu,
+        "align": jnp.broadcast_to(c["a_align"], (n,)),
+        "drivers": jnp.broadcast_to(c["a_drv"], (n,)),
+    }
+
+    # ---- per-cycle energy by mode (macro._mode_energy_rel order) ------------
+    n_modes = e_ofu_m.shape[0]
+    e_cycle = []
+    for m in range(n_modes):
+        e = 0.0 + c["e_wl"]
+        e = e + e_mm_t[mm_i]
+        e = e + e_tree_t[csa_j]
+        e = e + c["e_sa"]
+        e = e + e_ofu_m[m][pipe_i]
+        e = e + e_align_m[m]
+        e = e + c["e_bl"]
+        e_cycle.append((e * c["eps_fj"]) * c["escale"])
+    e_cycle = jnp.stack(e_cycle)                       # (M, n)
+
+    return {"mac_base": mac_base, "ofu_base": ofu_base, "area": area,
+            "breakdown": breakdown, "e_cycle": e_cycle}
+
+
+def evaluate(lattice: DesignLattice, tables: SpecTables) -> BatchedPPA:
+    """One fused (jitted) pass: timing paths + full PPA roll-up for every
+    lattice point, mirroring :func:`repro.core.macro.rollup` float-for-float."""
+    spec, tech = tables.spec, tables.tech
+    csa_i = np.asarray(tables.csa_index(lattice.rho_i, lattice.ro, lattice.rt,
+                                        lattice.sp_i))
+    consts = np.array([
+        tech.apr_overhead,
+        tables.a_sa, tables.a_align, tables.a_drv,
+        tables.e_wl, tables.e_sa, tables.e_bl,
+        tech.eps_fj,
+        energy_scale(spec.vdd),
+    ], dtype=np.float64)
+    with enable_x64():
+        f64 = lambda a: jnp.asarray(np.asarray(a, dtype=np.float64))  # noqa: E731
+        idx = (jnp.asarray(lattice.mem_i), jnp.asarray(lattice.mm_i),
+               jnp.asarray(csa_i), jnp.asarray(lattice.pipe_i),
+               jnp.asarray(lattice.ort), jnp.asarray(lattice.fts),
+               jnp.asarray(lattice.fso))
+        tabs = (f64(tables.t_wl_mm), f64(tables.csa_crit), f64(tables.t_ofu),
+                f64(tables.a_array), f64(tables.a_mult), f64(tables.a_tree),
+                f64(tables.a_ofu), f64(tables.e_mm), f64(tables.e_tree))
+        e_ofu_m = f64(np.stack([tables.e_ofu[m] for m in tables.modes]))
+        e_align_m = f64(np.array([tables.e_align[m] for m in tables.modes]))
+        out = _eval_kernel(idx, tabs, f64(consts), e_ofu_m, e_align_m)
+        out = jax.tree.map(np.asarray, out)
+
+    e_cycle = {m: out["e_cycle"][k] for k, m in enumerate(tables.modes)}
+    # The timing fixup chain and throughput derivations run in numpy: their
+    # multiply-add chains and constant divisors are FMA / reciprocal
+    # contraction targets for XLA, which would perturb the last ulp vs the
+    # scalar reference.  numpy f64 executes op-for-op; the op count is tiny.
+    ort, fts, fso = lattice.ort, lattice.fts, lattice.fso
+    mac = out["mac_base"]
+    sa_p = np.full(len(lattice), tables.t_sa)
+    ofu_p = out["ofu_base"]
+    moved = 0.3 * ofu_p
+    ofu_p = np.where(ort, ofu_p - moved, ofu_p)
+    sa_p = np.where(ort, sa_p + moved, sa_p)
+    mac = np.where(fts, mac + sa_p, mac)
+    sa_p = np.where(fts, 0.0, sa_p)
+    sa_p = np.where(fso, sa_p + ofu_p, sa_p)
+    ofu_p = np.where(fso, 0.0, ofu_p)
+    crit = np.maximum(mac, np.maximum(sa_p, ofu_p))
+
+    area = out["area"]
+    dscale = delay_scale(spec.vdd, tech.vth, tech.alpha)
+    fmax = 1e12 / ((crit * tech.tau_ps) * dscale)
+    meets = fmax >= spec.f_mac_hz * 0.999
+    f_rep = np.where(meets, np.minimum(fmax, spec.f_mac_hz), fmax)
+    tops_1b = ((2.0 * spec.h * spec.w) * f_rep) / 1e12
+    leak_mw = (area * tech.leak_mw_per_um2) * leakage_scale(spec.vdd)
+    tops_w = {}
+    for m, efj in e_cycle.items():
+        p_mw = ((efj * 1e-15) * f_rep) * 1e3 + leak_mw
+        tops_w[m] = np.where(p_mw > 0, tops_1b / (p_mw * 1e-3), np.inf)
+    tops_mm2 = tops_1b / (area / 1e6)
+
+    # latency is pure integer bookkeeping.
+    ib = max(spec.int_precisions)
+    pipe_lat = (tables.l_csa[csa_i] + tables.l_sa
+                + tables.l_ofu[lattice.pipe_i]
+                - lattice.fts.astype(np.int64)
+                - lattice.fso.astype(np.int64))
+    latency = ib + np.maximum(1, pipe_lat)
+
+    return BatchedPPA(lattice=lattice, tables=tables, mac=mac,
+                      sa=sa_p, ofu=ofu_p, crit=crit,
+                      fmax=fmax, meets=meets, area=area,
+                      breakdown=out["breakdown"], e_cycle=e_cycle,
+                      latency=latency, tops_1b=tops_1b, tops_w=tops_w,
+                      tops_mm2=tops_mm2)
+
+
+@functools.lru_cache(maxsize=32)
+def _evaluated(spec: MacroSpec, tech: TechModel,
+               memcells: tuple[sc.MemCellKind, ...]
+               ) -> tuple[DesignLattice, SpecTables, BatchedPPA]:
+    """Characterize-once cache (the SCL-LUT philosophy): the evaluated
+    lattice for a (spec, tech) pair is immutable and reused by every
+    preference sweep and co-design query against it."""
+    lattice = DesignLattice.enumerate(spec, memcells)
+    tables = SpecTables(spec, tech)
+    return lattice, tables, evaluate(lattice, tables)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized Pareto extraction
+# ---------------------------------------------------------------------------
+
+
+def pareto_mask(objs: np.ndarray, eps: float = 1e-12,
+                chunk: int = 512) -> np.ndarray:
+    """Non-dominated mask over an (n, k) objective matrix (minimization),
+    vectorized and chunked so lattice-sized sweeps stay in memory.  Dominance
+    semantics match :func:`repro.core.pareto.dominates`, including its
+    *absolute* eps band: an objective whose scale approaches eps (e.g. period
+    in seconds, ~1e-9) effectively gets a relative tolerance — identical to
+    what the scalar frontier applies, which is what keeps the two paths'
+    frontiers in exact agreement."""
+    objs = np.asarray(objs, dtype=np.float64)
+    n, k = objs.shape
+    keep = np.ones(n, dtype=bool)
+    with enable_x64():
+        all_o = jnp.asarray(objs)
+        for start in range(0, n, chunk):
+            blk = all_o[start:start + chunk]            # (c, k)
+            le = jnp.ones((blk.shape[0], n), dtype=bool)
+            lt = jnp.zeros((blk.shape[0], n), dtype=bool)
+            for d in range(k):
+                le = le & (all_o[None, :, d] <= blk[:, None, d] + eps)
+                lt = lt | (all_o[None, :, d] < blk[:, None, d] - eps)
+            dominated = (le & lt).any(axis=1)
+            keep[start:start + blk.shape[0]] = ~np.asarray(dominated)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive sweep
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchedSweep:
+    """A fully evaluated design space for one spec."""
+
+    lattice: DesignLattice
+    tables: SpecTables
+    ppa: BatchedPPA
+
+    def objectives(self) -> np.ndarray:
+        """(n, 3) frontier objectives — (energy/cycle INT-lo, area, period),
+        the scalar searcher's ordering."""
+        return np.stack([self.ppa.e_cycle["int_lo"], self.ppa.area,
+                         1.0 / self.ppa.fmax], axis=1)
+
+    def frontier_indices(self, feasible_only: bool = True) -> list[int]:
+        cand = np.flatnonzero(self.lattice.valid
+                              & (self.ppa.meets if feasible_only else True))
+        if cand.size == 0:
+            cand = np.flatnonzero(self.lattice.valid)
+        objs = self.objectives()[cand]
+        survivors = cand[pareto_mask(objs)]
+        # exact dedup + ordering on the (small) survivor set
+        order = pareto_indices([tuple(o) for o in
+                                self.objectives()[survivors]])
+        return [int(survivors[i]) for i in order]
+
+    def materialize(self, i: int) -> MacroPPA:
+        return self.ppa.materialize(i, audit=("batched: exhaustive sweep",))
+
+
+def design_space_sweep(spec: MacroSpec, tech: TechModel,
+                       memcells: tuple[sc.MemCellKind, ...] = MEMCELLS
+                       ) -> BatchedSweep:
+    """Evaluate every discrete design point for ``spec`` in one fused pass."""
+    lattice, tables, ppa = _evaluated(spec, tech, tuple(memcells))
+    return BatchedSweep(lattice=lattice, tables=tables, ppa=ppa)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 as masked selection over the batched tensors
+# ---------------------------------------------------------------------------
+
+
+def _first_feasible(values: np.ndarray, budget: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """For each row budget, index of the first chain entry meeting it; the
+    last entry (UNMET) when none does.  values: (n_chain,) or (P, n_chain)."""
+    if values.ndim == 1:
+        ok = values[None, :] <= budget[:, None]
+    else:
+        ok = values <= budget[:, None]
+    any_ok = ok.any(axis=1)
+    idx = np.where(any_ok, ok.argmax(axis=1), ok.shape[1] - 1)
+    return idx, any_ok
+
+
+def mso_search_batched(spec: MacroSpec, scl=None, tech: TechModel = None,
+                       resolution: int = 4) -> SearchResult:
+    """Multi-spec sweep with the hierarchical search replayed as masked
+    selection over the batched lattice tensors.  Frontier is identical to the
+    scalar :func:`repro.core.searcher.mso_search` (``scl`` is accepted for
+    signature parity; the batched path reads the same models directly)."""
+    if tech is None:
+        raise ValueError("tech model required")
+    memcell = sc.MemCellKind.SRAM_6T
+    lattice, tables, T = _evaluated(spec, tech, (memcell,))
+
+    prefs = preference_grid(resolution)
+    P = len(prefs)
+    base_budget = max_crit_rel(spec, tech)
+    budget = np.array([base_budget / _throughput_overdrive(p) for p in prefs])
+
+    mm_tg = _MM_INDEX[sc.MultMuxKind.TG_NOR]
+    zeros = np.zeros(P, dtype=np.int64)
+
+    def gather(arr, mm_i, rho_i, ro, rt, sp_i, pipe_i, ort, fts, fso):
+        idx = lattice.index_of(zeros, mm_i, rho_i, ro, rt, sp_i, pipe_i, ort,
+                               fts, fso)
+        return arr[idx]
+
+    # ---- step 2, MAC path: tt1 -> tt2 -> tt3 as a first-feasible chain -----
+    # cumulative transform chain from the step-1 state
+    chain: list[tuple[int, int, int, int]] = [(0, 0, 0, 0), (0, 1, 0, 0)]
+    for ri in range(1, len(RHO_STEPS)):
+        chain.append((ri, 1, 0, 0))
+    last_rho = len(RHO_STEPS) - 1
+    chain.append((last_rho, 1, 1, 0))
+    for sp_i in range(1, len(tables.splits)):
+        chain.append((last_rho, 1, 1, sp_i))
+    chain_arr = np.array(chain, dtype=np.int64)
+    mac_chain = np.array([
+        T.mac[lattice.index_of(0, mm_tg, r, ro, rt, s, 0, 0, 0, 0)]
+        for r, ro, rt, s in chain])
+    pick, mac_ok = _first_feasible(mac_chain, budget)
+    rho_i = chain_arr[pick, 0]
+    ro = chain_arr[pick, 1]
+    rt = chain_arr[pick, 2]
+    sp_i = chain_arr[pick, 3]
+    unmet_mac = ~mac_ok
+
+    # tt1-relax: cheapest adder mix (highest rho) still meeting timing.
+    mac_rho = np.stack([gather(T.mac, np.full(P, mm_tg), np.full(P, j), ro,
+                               rt, sp_i, zeros, zeros, zeros, zeros)
+                        for j in range(len(RHO_STEPS))], axis=1)
+    elig = (np.arange(len(RHO_STEPS))[None, :] < rho_i[:, None]) \
+        & (mac_rho <= budget[:, None])
+    has_relax = elig.any(axis=1) & mac_ok
+    rho_i = np.where(has_relax, elig.argmax(axis=1), rho_i)
+
+    # ---- step 2, OFU path: tt4 -> tt5 as a first-feasible chain ------------
+    ofu_states = [(0, 0), (1, 0), (1, 1), (1, 2), (1, 3)]
+    ofu_chain = np.array([
+        max(T.ofu[lattice.index_of(0, mm_tg, 0, 0, 0, 0, p, o, 0, 0)],
+            T.sa[lattice.index_of(0, mm_tg, 0, 0, 0, 0, p, o, 0, 0)])
+        for o, p in ofu_states])
+    opick, ofu_ok = _first_feasible(ofu_chain, budget)
+    ostates = np.array(ofu_states, dtype=np.int64)
+    ort = ostates[opick, 0]
+    pipe = ostates[opick, 1]
+    unmet_ofu = ~ofu_ok
+
+    # ---- step 3: register fusion as masked selection -----------------------
+    mm_cur = np.full(P, mm_tg, dtype=np.int64)
+    ones = np.ones(P, dtype=np.int64)
+    crit_full = gather(T.crit, mm_cur, rho_i, ro, rt, sp_i, pipe, ort, ones,
+                       ones)
+    crit_part = gather(T.crit, mm_cur, rho_i, ro, rt, sp_i, pipe, ort, zeros,
+                       ones)
+    full_ok = crit_full <= budget
+    part_ok = crit_part <= budget
+    fts = np.where(full_ok, 1, 0).astype(np.int64)
+    fso = np.where(full_ok | part_ok, 1, 0).astype(np.int64)
+
+    # ---- step 4: preference-oriented fine-tuning ---------------------------
+    # preference masks evaluated with the scalar searcher's exact comparisons
+    power_pref = np.array([p[0] >= max(p[1], p[2]) * 0.999 for p in prefs])
+    area_any = np.array([p[1] > 0 for p in prefs])
+    area_dom = np.array([p[1] > max(p[0], p[2]) for p in prefs])
+    area_ge = np.array([p[1] >= max(p[0], p[2]) for p in prefs])
+    area_ge_power = np.array([p[1] >= p[0] for p in prefs])
+
+    def meets(mm_i_, rho_i_, ro_, rt_, sp_i_, pipe_, ort_, fts_, fso_):
+        return gather(T.crit, mm_i_, rho_i_, ro_, rt_, sp_i_, pipe_, ort_,
+                      fts_, fso_) <= budget
+
+    # ft1 (power): rho back up, then un-split, then drop OFU pipe stages.
+    crit_rho = np.stack([meets(mm_cur, np.full(P, j), ro, rt, sp_i, pipe, ort,
+                               fts, fso)
+                         for j in range(len(RHO_STEPS))], axis=1)
+    elig = (np.arange(len(RHO_STEPS))[None, :] < rho_i[:, None]) & crit_rho
+    take = elig.any(axis=1) & power_pref
+    rho_i = np.where(take, elig.argmax(axis=1), rho_i)
+
+    active = power_pref.copy()
+    for _ in range(len(tables.splits) - 1):
+        can = active & (sp_i > 0)
+        ok = meets(mm_cur, rho_i, ro, rt, np.maximum(sp_i - 1, 0), pipe, ort,
+                   fts, fso)
+        apply_ = can & ok
+        sp_i = np.where(apply_, sp_i - 1, sp_i)
+        active = apply_     # a failed halving stops the walk
+
+    active = power_pref.copy()
+    for _ in range(len(PIPE_STEPS) - 1):
+        can = active & (pipe > 0)
+        ok = meets(mm_cur, rho_i, ro, rt, sp_i, np.maximum(pipe - 1, 0), ort,
+                   fts, fso)
+        apply_ = can & ok
+        pipe = np.where(apply_, pipe - 1, pipe)
+        active = apply_
+
+    # ft2 (area): OAI22 substitution (MCR permitting), 1T pass-gate mux,
+    # un-split columns.
+    if spec.mcr <= 2:
+        mm_oai = _MM_INDEX[sc.MultMuxKind.OAI22_FUSED]
+        ok = meets(np.full(P, mm_oai), rho_i, ro, rt, sp_i, pipe, ort, fts,
+                   fso)
+        apply_ = area_any & ok & area_ge_power
+        mm_cur = np.where(apply_, mm_oai, mm_cur)
+    mm_pass = _MM_INDEX[sc.MultMuxKind.PASS_1T]
+    ok = meets(np.full(P, mm_pass), rho_i, ro, rt, sp_i, pipe, ort, fts, fso)
+    apply_ = area_any & area_dom & (mm_cur != mm_pass) & ok
+    mm_cur = np.where(apply_, mm_pass, mm_cur)
+
+    active = area_any & area_ge
+    for _ in range(len(tables.splits) - 1):
+        can = active & (sp_i > 0)
+        ok = meets(mm_cur, rho_i, ro, rt, np.maximum(sp_i - 1, 0), pipe, ort,
+                   fts, fso)
+        apply_ = can & ok
+        sp_i = np.where(apply_, sp_i - 1, sp_i)
+        active = apply_
+
+    # ---- materialize + frontier (same dedup/pool/objectives as scalar) -----
+    final_idx = lattice.index_of(zeros, mm_cur, rho_i, ro, rt, sp_i, pipe,
+                                 ort, fts, fso)
+    explored: list[MacroPPA] = []
+    seen: set[str] = set()
+    seen_idx: set[int] = set()
+    for p in range(P):
+        i = int(final_idx[p])
+        if i in seen_idx:        # distinct lattice points can share a name;
+            continue             # same point never needs re-materializing
+        seen_idx.add(i)
+        audit = ("batched: Alg. 1 replay",)
+        if unmet_mac[p]:
+            audit += ("tt: MAC path UNMET (exhausted techniques)",)
+        if unmet_ofu[p]:
+            audit += ("tt: OFU path UNMET (exhausted techniques)",)
+        ppa = T.materialize(i, audit=audit)
+        if ppa.design.name() not in seen:
+            seen.add(ppa.design.name())
+            explored.append(ppa)
+
+    feasible = [p for p in explored if p.meets_timing]
+    pool = feasible if feasible else explored
+    objs = [(p.e_cycle_fj["int_lo"], p.area_um2, 1.0 / p.fmax_hz)
+            for p in pool]
+    frontier = [pool[i] for i in pareto_indices(objs)]
+    return SearchResult(spec=spec, frontier=tuple(frontier),
+                        explored=tuple(explored), n_evaluated=len(explored))

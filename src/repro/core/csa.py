@@ -189,6 +189,16 @@ FAMILY: tuple[CSADesign, ...] = tuple(
     for rt in (False, True)
 )
 
+# Column-split factors reachable by Alg. 1's tt3 transform (split < 4 guard).
+SPLIT_STEPS: tuple[int, ...] = (1, 2, 4)
+
+
+def valid_splits(h_rows: int) -> tuple[int, ...]:
+    """Splits for which ``characterize`` does not clamp and tt3's
+    ``h // (split) >= 4`` feasibility holds — the discrete split axis of the
+    batched design lattice."""
+    return tuple(s for s in SPLIT_STEPS if s == 1 or h_rows // s >= 4)
+
 
 # ---------------------------------------------------------------------------
 # Gate-level netlist construction (for repro.core.gatesim)

@@ -14,8 +14,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import numpy as np
 
 from .macro import MacroPPA
+from .pareto import pareto_indices
 
 
 @dataclass(frozen=True)
@@ -109,6 +113,175 @@ def map_gemm(g: GemmShape, ppa: MacroPPA, n_macros: int, ib: int, wb: int
     return MappingReport(gemm=g, tiles=tiles, passes=passes, cycles=cycles,
                          weight_reloads=weight_reloads, energy_pj=energy_pj,
                          util=util)
+
+
+# ---------------------------------------------------------------------------
+# Batched workload x design mapping (vectorized map_gemm / accelerator_report)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkloadMatrix:
+    """All (GEMM, design) mappings of one workload in structure-of-arrays.
+
+    Row g, column d mirrors ``map_gemm(gemms[g], ppas[d], ...)`` exactly; the
+    per-design totals mirror ``accelerator_report``.  Produced in one
+    vectorized float64 numpy pass executing op-for-op, so values are
+    bit-identical to the scalar path (see batched_workload_matrix for why
+    this map must not be jitted)."""
+
+    designs: tuple[str, ...]
+    n_macros: int
+    ib: int
+    wb: int
+    # All arrays are float64 computed op-for-op like the scalar path, so
+    # integer-valued quantities (cycles, reloads) are exact.
+    cycles: np.ndarray            # (G, D)
+    energy_pj: np.ndarray         # (G, D)
+    weight_reloads: np.ndarray    # (G, D)
+    tiles: np.ndarray             # (G, D)
+    util: np.ndarray              # (G, D)
+    total_cycles: np.ndarray      # (D,)
+    total_energy_pj: np.ndarray   # (D,)
+    wallclock_s: np.ndarray       # (D,)
+    effective_tops: np.ndarray    # (D,)
+    avg_util: np.ndarray          # (D,)
+    area_mm2: np.ndarray          # (D,)
+
+
+def batched_workload_matrix(gemms: Sequence[GemmShape],
+                            ppas: Sequence[MacroPPA], n_macros: int,
+                            ib: int = 8, wb: int = 8) -> WorkloadMatrix:
+    """Map every GEMM of a workload onto every candidate design point in one
+    fused pass — the batched counterpart of calling ``accelerator_report``
+    per design.  Arithmetic mirrors :func:`map_gemm` operation for operation
+    (float ceils included) so totals are bit-identical.  Runs on vectorized
+    float64 numpy: at these shapes per-op dispatch dominates, so the
+    lattice-scale JAX kernel lives in :mod:`repro.core.batched` while this
+    map stays dispatch-free."""
+    G, D = len(gemms), len(ppas)
+    m = np.array([g.m for g in gemms], dtype=np.float64)[:, None]
+    k = np.array([g.k for g in gemms], dtype=np.float64)[:, None]
+    n = np.array([g.n for g in gemms], dtype=np.float64)[:, None]
+    count = np.array([g.count for g in gemms], dtype=np.float64)[:, None]
+
+    h = np.array([p.design.spec.h for p in ppas], dtype=np.float64)[None, :]
+    w = np.array([p.design.spec.w for p in ppas], dtype=np.float64)[None, :]
+    mcr = np.array([p.design.spec.mcr for p in ppas],
+                   dtype=np.float64)[None, :]
+    cpo = np.array([max(1, p.design.spec.w // wb) for p in ppas],
+                   dtype=np.float64)[None, :]
+    e_cyc = np.array([p.e_cycle_fj["int_hi" if ib > 4 else "int_lo"]
+                      for p in ppas], dtype=np.float64)[None, :]
+
+    tiles_k = np.ceil(k / h)
+    tiles_n = np.ceil(n / cpo)
+    tiles = tiles_k * tiles_n
+    resident = n_macros * mcr
+    weight_reloads = np.maximum(0.0, tiles - resident) * count
+    cpt = m * ib
+    active_waves = np.ceil(tiles / np.minimum(tiles, resident))
+    cycles = cpt * active_waves * count
+    reload_cycles = weight_reloads * h
+    cycles = cycles + reload_cycles
+    active_macros = np.minimum(tiles, float(n_macros))
+    energy_pj = (cycles - reload_cycles) * e_cyc * active_macros / 1e3
+    energy_pj = energy_pj + (weight_reloads * h * w * 3.6 * mcr / 1e3)
+    lanes = (np.minimum(k, tiles_k * h) / (tiles_k * h)) \
+        * (np.minimum(n, tiles_n * cpo) / (tiles_n * cpo))
+    util = lanes * np.minimum(1.0, tiles / resident)
+
+    # per-design totals, accumulated in scalar summation order
+    total_cycles = np.zeros(D)
+    total_energy = np.zeros(D)
+    util_cycles = np.zeros(D)
+    for g in range(G):
+        total_cycles = total_cycles + cycles[g]
+        total_energy = total_energy + energy_pj[g]
+        util_cycles = util_cycles + util[g] * cycles[g]
+
+    fmax = np.array([p.fmax_hz for p in ppas])
+    f_mac = np.array([p.design.spec.f_mac_hz for p in ppas])
+    meets = np.array([p.meets_timing for p in ppas])
+    f = np.where(meets, np.minimum(fmax, f_mac), fmax)
+    wall = total_cycles / f
+    macs = sum(g.macs for g in gemms)
+    tops = np.where(wall > 0, 2.0 * macs / wall / 1e12, 0.0)
+    avg_util = np.where(total_cycles != 0, util_cycles / total_cycles, 0.0)
+    area_mm2 = np.array([n_macros * p.area_um2 / 1e6 for p in ppas])
+
+    return WorkloadMatrix(
+        designs=tuple(p.design.name() for p in ppas), n_macros=n_macros,
+        ib=ib, wb=wb, cycles=cycles, energy_pj=energy_pj,
+        weight_reloads=weight_reloads, tiles=tiles,
+        util=util, total_cycles=total_cycles,
+        total_energy_pj=total_energy, wallclock_s=wall,
+        effective_tops=tops, avg_util=avg_util, area_mm2=area_mm2)
+
+
+@dataclass(frozen=True)
+class CodesignReport:
+    """Cross-scenario co-design: every workload of the model zoo mapped onto
+    every candidate macro design point (paper Fig. 8 extended across
+    vision/language/MoE scenarios).  Frontier indices minimize
+    (total wallclock, total energy, array area) across the whole inventory."""
+
+    workloads: tuple[str, ...]
+    designs: tuple[str, ...]
+    n_macros: int
+    wallclock_s: np.ndarray       # (W, D)
+    energy_pj: np.ndarray         # (W, D)
+    effective_tops: np.ndarray    # (W, D)
+    avg_util: np.ndarray          # (W, D)
+    area_mm2: np.ndarray          # (D,)
+    total_wallclock_s: np.ndarray   # (D,)
+    total_energy_pj: np.ndarray     # (D,)
+    frontier: tuple[int, ...]       # design indices on the co-design frontier
+
+    def best_for(self, workload: str) -> int:
+        """Design index with the lowest wallclock for one workload."""
+        wi = self.workloads.index(workload)
+        return int(np.argmin(self.wallclock_s[wi]))
+
+    def summary(self) -> dict:
+        return {
+            "workloads": len(self.workloads),
+            "designs": len(self.designs),
+            "frontier": [self.designs[i] for i in self.frontier],
+            "wallclock_spread": float(self.total_wallclock_s.max()
+                                      / self.total_wallclock_s.min()),
+            "energy_spread": float(self.total_energy_pj.max()
+                                   / self.total_energy_pj.min()),
+        }
+
+
+def cross_workload_codesign(workloads: Mapping[str, Sequence[GemmShape]],
+                            ppas: Sequence[MacroPPA], n_macros: int = 256,
+                            ib: int = 8, wb: int = 8) -> CodesignReport:
+    """Batch-map a whole GEMM inventory (workload x design) and extract the
+    cross-scenario Pareto frontier over (latency, energy, area)."""
+    if not workloads:
+        raise ValueError("need at least one workload")
+    if not ppas:
+        raise ValueError("need at least one candidate design point")
+    names = tuple(workloads)
+    mats = [batched_workload_matrix(workloads[nm], ppas, n_macros, ib, wb)
+            for nm in names]
+    wall = np.stack([m.wallclock_s for m in mats])
+    energy = np.stack([m.total_energy_pj for m in mats])
+    tops = np.stack([m.effective_tops for m in mats])
+    util = np.stack([m.avg_util for m in mats])
+    area = mats[0].area_mm2
+    total_wall = wall.sum(axis=0)
+    total_energy = energy.sum(axis=0)
+    objs = [(float(total_wall[d]), float(total_energy[d]), float(area[d]))
+            for d in range(len(ppas))]
+    frontier = tuple(pareto_indices(objs))
+    return CodesignReport(
+        workloads=names, designs=mats[0].designs, n_macros=n_macros,
+        wallclock_s=wall, energy_pj=energy, effective_tops=tops,
+        avg_util=util, area_mm2=area, total_wallclock_s=total_wall,
+        total_energy_pj=total_energy, frontier=frontier)
 
 
 def accelerator_report(gemms: list[GemmShape], ppa: MacroPPA, n_macros: int,

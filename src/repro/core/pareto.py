@@ -20,21 +20,32 @@ def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
     return le and lt
 
 
+def pareto_indices(objs: Sequence[Sequence[float]]) -> list[int]:
+    """Indices of the non-dominated, deduplicated members of ``objs``, sorted
+    by objective tuple.  This is the single source of truth for frontier
+    semantics: :func:`pareto_front` and the batched engine's vectorized
+    extraction both reduce to it, so scalar and batched sweeps agree exactly."""
+    pts = list(enumerate(objs))
+    front: list[tuple[Sequence[float], int]] = []
+    for i, obj in pts:
+        if any(dominates(o2, obj) for _, o2 in pts):
+            continue
+        # drop exact duplicates
+        if any(all(abs(x - y) < 1e-12 for x, y in zip(obj, o2))
+               for o2, _ in front):
+            continue
+        front.append((obj, i))
+    front.sort(key=lambda oi: tuple(oi[0]))
+    return [i for _, i in front]
+
+
 def pareto_front(items: Iterable[T], objectives: Callable[[T], Sequence[float]]
                  ) -> list[T]:
     """Filter ``items`` to the non-dominated set, stably ordered by the first
     objective."""
-    pts = [(objectives(it), it) for it in items]
-    front: list[tuple[Sequence[float], T]] = []
-    for obj, it in pts:
-        if any(dominates(o2, obj) for o2, _ in pts):
-            continue
-        # drop exact duplicates
-        if any(all(abs(x - y) < 1e-12 for x, y in zip(obj, o2)) for o2, _ in front):
-            continue
-        front.append((obj, it))
-    front.sort(key=lambda oi: tuple(oi[0]))
-    return [it for _, it in front]
+    items = list(items)
+    objs = [objectives(it) for it in items]
+    return [items[i] for i in pareto_indices(objs)]
 
 
 def scalarize(weights: Sequence[float], objectives: Sequence[float],

@@ -266,9 +266,20 @@ def synthesize_one(spec: MacroSpec, scl: SubcircuitLibrary, tech: TechModel,
 
 
 def mso_search(spec: MacroSpec, scl: SubcircuitLibrary, tech: TechModel,
-               resolution: int = 4) -> SearchResult:
+               resolution: int = 4, backend: str = "scalar") -> SearchResult:
     """Sweep the PPA-preference simplex, synthesize each corner, and return
-    the Pareto frontier over (energy/op, area, period)."""
+    the Pareto frontier over (energy/op, area, period).
+
+    ``backend="scalar"`` runs the reference per-point hierarchy (this module);
+    ``backend="batched"`` evaluates the whole design lattice in one fused pass
+    and replays the hierarchy as masked selection (identical frontier, see
+    :mod:`repro.core.batched`).
+    """
+    if backend == "batched":
+        from .batched import mso_search_batched
+        return mso_search_batched(spec, scl, tech, resolution)
+    if backend != "scalar":
+        raise ValueError(f"unknown mso_search backend: {backend!r}")
     explored: list[MacroPPA] = []
     seen: set[str] = set()
     for prefs in preference_grid(resolution):

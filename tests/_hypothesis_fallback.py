@@ -1,0 +1,238 @@
+"""Deterministic fallback for ``hypothesis`` when the real package is absent.
+
+The tier-1 suite property-tests with hypothesis, but the pinned runtime image
+does not ship it (and the suite must stay runnable offline).  This module
+implements the small strategy surface the tests use — ``given``, ``settings``,
+``integers``, ``floats``, ``booleans``, ``just``, ``sampled_from``, ``lists``,
+``tuples`` — with a seeded PRNG per test so runs are reproducible.  CI installs
+the real hypothesis from requirements-dev.txt and this file is never imported
+there; ``conftest.install_hypothesis_fallback`` only registers it when
+``import hypothesis`` fails.
+
+Semantics intentionally kept: boundary values are drawn first (min/max for
+integers and floats, min/max sizes for lists), then uniform samples.  No
+shrinking — a failing example is reported verbatim by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """Base class: a strategy is anything with ``example(rng, i)`` where ``i``
+    is the example index (used to emit boundary cases first)."""
+
+    def example(self, rng: random.Random, i: int):
+        raise NotImplementedError
+
+    def map(self, fn):
+        return _MappedStrategy(self, fn)
+
+
+class _MappedStrategy(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rng, i):
+        return self.fn(self.base.example(rng, i))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2**31) if min_value is None else min_value
+        self.hi = 2**31 - 1 if max_value is None else max_value
+
+    def example(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None, allow_nan=False,
+                 allow_infinity=False, width=64):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+
+    def example(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng, i):
+        if i < 2:
+            return bool(i)
+        return rng.random() < 0.5
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng, i):
+        return self.value
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty collection")
+
+    def example(self, rng, i):
+        if i < len(self.elements):
+            return self.elements[i]
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None, unique=False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = min_size + 10 if max_size is None else max_size
+        self.unique = unique
+
+    def example(self, rng, i):
+        if i == 0:
+            size = self.min_size
+        elif i == 1:
+            size = self.max_size
+        else:
+            size = rng.randint(self.min_size, self.max_size)
+        out, guard = [], 0
+        while len(out) < size and guard < size * 20 + 20:
+            guard += 1
+            v = self.elements.example(rng, 2 + len(out) + guard)
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng, i):
+        return tuple(s.example(rng, i) for s in self.strategies)
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng, i):
+        if i < len(self.strategies):
+            return self.strategies[i].example(rng, i)
+        return rng.choice(self.strategies).example(rng, i)
+
+
+def _make_strategies_module() -> types.ModuleType:
+    st = types.ModuleType("hypothesis.strategies")
+    st.SearchStrategy = SearchStrategy
+    st.integers = _Integers
+    st.floats = _Floats
+    st.booleans = _Booleans
+    st.just = _Just
+    st.sampled_from = _SampledFrom
+    st.lists = _Lists
+    st.tuples = _Tuples
+    st.one_of = _OneOf
+    return st
+
+
+def settings(*args, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **kwargs):
+    """Decorator recording ``max_examples``; other knobs are accepted and
+    ignored (no shrinking/deadline enforcement in the fallback)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        bound = dict(kw_strategies)
+        if pos_strategies:
+            # Hypothesis maps positional strategies onto the rightmost
+            # parameters (after self/fixtures).
+            tail = names[len(names) - len(pos_strategies):]
+            bound.update(zip(tail, pos_strategies))
+        remaining = [p for p in sig.parameters.values()
+                     if p.name not in bound]
+        max_examples = getattr(fn, "_fallback_max_examples", None)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_fallback_max_examples", None)
+                 or max_examples or DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = {k: s.example(rng, i) for k, s in bound.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _UnsatisfiedAssumption:
+                    continue
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (draw {i}): {drawn!r}") from exc
+
+        # pytest must only see the non-strategy parameters (fixtures/self).
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return deco
+
+
+def assume(condition) -> bool:
+    """Real hypothesis aborts the example; the fallback treats a failed
+    assumption as a no-op pass for that draw."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+def install() -> types.ModuleType:
+    """Register the fallback as ``hypothesis`` in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    st = _make_strategies_module()
+    mod.strategies = st
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.__fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return mod

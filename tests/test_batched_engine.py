@@ -1,0 +1,245 @@
+"""Batched design-space engine vs the scalar reference oracle.
+
+The contract under test (repro.core.batched): the vectorized lattice roll-up
+is bit-identical to macro.rollup, the masked-selection replay of Algorithm 1
+returns exactly the scalar mso_search frontier, the vectorized Pareto
+extraction agrees with pareto.pareto_front, and the batched workload x design
+DSE map equals per-design accelerator_report."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (GemmShape, SubcircuitLibrary, accelerator_report,
+                        batched_workload_matrix, calibrated_tech_for_reference,
+                        cross_workload_codesign, design_space_sweep,
+                        mso_search, mso_search_batched,
+                        pareto_experiment_spec, pareto_front, pareto_indices,
+                        pareto_mask, reference_chip_ppa, reference_chip_spec,
+                        rollup)
+
+
+@pytest.fixture(scope="module")
+def tech():
+    return calibrated_tech_for_reference()
+
+
+@pytest.fixture(scope="module")
+def scl(tech):
+    return SubcircuitLibrary(tech).build()
+
+
+def assert_ppa_equal(a, b):
+    """Bit-exact equality of every scalar field of two MacroPPAs."""
+    assert a.design.name() == b.design.name()
+    assert a.paths == b.paths
+    assert a.fmax_hz == b.fmax_hz
+    assert a.area_um2 == b.area_um2
+    assert a.area_breakdown == b.area_breakdown
+    assert a.e_cycle_fj == b.e_cycle_fj
+    assert a.latency_cycles == b.latency_cycles
+    assert a.tops_1b == b.tops_1b
+    assert a.tops_per_w_1b == b.tops_per_w_1b
+    assert a.tops_per_mm2_1b == b.tops_per_mm2_1b
+    assert a.meets_timing == b.meets_timing
+
+
+# ---------------------------------------------------------------------------
+# Frontier identity (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+class TestFrontierIdentity:
+    @pytest.mark.parametrize("resolution", [5, 6])
+    def test_identical_to_scalar_on_pareto_spec(self, tech, scl, resolution):
+        spec = pareto_experiment_spec()
+        a = mso_search(spec, scl, tech, resolution=resolution)
+        b = mso_search_batched(spec, scl, tech, resolution=resolution)
+        assert a.n_evaluated == b.n_evaluated
+        assert [p.design.name() for p in a.explored] == \
+               [p.design.name() for p in b.explored]
+        assert len(a.frontier) == len(b.frontier)
+        for x, y in zip(a.frontier, b.frontier):
+            assert_ppa_equal(x, y)
+
+    @pytest.mark.parametrize("variant", ["mcr4", "hard", "lowv", "small"])
+    def test_identical_on_spec_variants(self, tech, scl, variant):
+        spec = {
+            "mcr4": dataclasses.replace(pareto_experiment_spec(), mcr=4),
+            "hard": dataclasses.replace(pareto_experiment_spec(), h=256,
+                                        w=256, f_mac_hz=1.0e9),
+            "lowv": dataclasses.replace(pareto_experiment_spec(), vdd=0.7,
+                                        f_mac_hz=300e6),
+            "small": dataclasses.replace(pareto_experiment_spec(), h=8, w=16),
+        }[variant]
+        a = mso_search(spec, scl, tech, resolution=5)
+        b = mso_search_batched(spec, scl, tech, resolution=5)
+        assert [p.design.name() for p in a.explored] == \
+               [p.design.name() for p in b.explored]
+        for x, y in zip(a.frontier, b.frontier):
+            assert_ppa_equal(x, y)
+
+    def test_backend_dispatch(self, tech, scl):
+        spec = pareto_experiment_spec()
+        res = mso_search(spec, scl, tech, resolution=5, backend="batched")
+        assert res.n_evaluated >= 4
+        with pytest.raises(ValueError):
+            mso_search(spec, scl, tech, backend="quantum")
+
+
+# ---------------------------------------------------------------------------
+# Vectorized roll-up == scalar rollup across the lattice
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedRollup:
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_lattice_matches_scalar_rollup(self, tech, seed):
+        spec = pareto_experiment_spec()
+        sweep = design_space_sweep(spec, tech)
+        rng = np.random.default_rng(seed)
+        for i in rng.choice(len(sweep.lattice), 8, replace=False):
+            i = int(i)
+            if not sweep.lattice.valid[i]:
+                continue
+            batched = sweep.ppa.materialize(i)
+            scalar = rollup(batched.design, tech)
+            assert_ppa_equal(batched, scalar)
+
+    def test_reference_chip_point(self, tech):
+        """The silicon-calibrated reference design lives on the lattice of
+        its spec and rolls up to the measured anchors."""
+        ref = reference_chip_ppa()
+        sweep = design_space_sweep(reference_chip_spec(), tech)
+        lat = sweep.lattice
+        match = [i for i in range(len(lat))
+                 if lat.design_at(i).name() == ref.design.name()
+                 and bool(lat.ort[i]) == ref.design.ofu_retimed_into_sa]
+        assert match
+        b = sweep.ppa.materialize(match[0])
+        assert b.fmax_hz == pytest.approx(1.1e9, rel=1e-6)
+        assert b.area_um2 / 1e6 == pytest.approx(0.112, rel=1e-3)
+
+    def test_sweep_frontier_feasible_and_nondominated(self, tech):
+        sweep = design_space_sweep(pareto_experiment_spec(), tech)
+        idx = sweep.frontier_indices()
+        assert idx, "frontier never empty"
+        objs = sweep.objectives()
+        valid = np.flatnonzero(sweep.lattice.valid & sweep.ppa.meets)
+        for i in idx:
+            assert sweep.ppa.meets[i]
+            for j in valid:
+                assert not (np.all(objs[j] <= objs[i] - 1e-12)
+                            and np.any(objs[j] < objs[i] - 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized Pareto extraction == scalar pareto_front
+# ---------------------------------------------------------------------------
+
+
+class TestVectorizedPareto:
+    @given(pts=st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10),
+                                  st.floats(0.1, 10)),
+                        min_size=1, max_size=60))
+    @settings(max_examples=40, deadline=None)
+    def test_mask_agrees_with_pareto_front(self, pts):
+        objs = np.asarray(pts, dtype=np.float64)
+        mask = pareto_mask(objs)
+        front = pareto_front(pts, lambda p: p)
+        # every scalar-front member survives the vectorized mask
+        front_set = {tuple(p) for p in front}
+        kept = {tuple(objs[i]) for i in np.flatnonzero(mask)}
+        assert front_set <= kept
+        # and every masked survivor is non-dominated
+        for i in np.flatnonzero(mask):
+            for j in range(len(pts)):
+                assert not (np.all(objs[j] <= objs[i] + 1e-12)
+                            and np.any(objs[j] < objs[i] - 1e-12))
+
+    @given(pts=st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                        min_size=1, max_size=40))
+    @settings(max_examples=40, deadline=None)
+    def test_pareto_indices_matches_pareto_front(self, pts):
+        front = pareto_front(pts, lambda p: p)
+        via_idx = [pts[i] for i in pareto_indices(pts)]
+        assert front == via_idx
+
+    def test_chunking_invariant(self):
+        rng = np.random.default_rng(0)
+        objs = rng.uniform(0.1, 10.0, size=(300, 3))
+        m1 = pareto_mask(objs, chunk=7)
+        m2 = pareto_mask(objs, chunk=512)
+        assert np.array_equal(m1, m2)
+
+
+# ---------------------------------------------------------------------------
+# Batched DSE == scalar accelerator_report
+# ---------------------------------------------------------------------------
+
+
+def _toy_workloads():
+    return {
+        "vision": [GemmShape("conv_as_gemm", 196, 512, 512, 4),
+                   GemmShape("head", 196, 512, 1000)],
+        "language": [GemmShape("qkv", 128, 2048, 6144, 16),
+                     GemmShape("mlp", 128, 2048, 8192, 16)],
+        "moe": [GemmShape("router", 64, 1024, 8),
+                GemmShape("expert", 64, 1024, 4096, 8)],
+    }
+
+
+class TestBatchedDSE:
+    @pytest.fixture(scope="class")
+    def ppas(self, tech):
+        res = mso_search_batched(pareto_experiment_spec(), None, tech,
+                                 resolution=5)
+        return [reference_chip_ppa()] + list(res.explored)
+
+    def test_matrix_matches_scalar_reports(self, ppas):
+        for name, gemms in _toy_workloads().items():
+            mat = batched_workload_matrix(gemms, ppas, n_macros=64)
+            for d, ppa in enumerate(ppas):
+                rep = accelerator_report(list(gemms), ppa, n_macros=64)
+                assert mat.total_cycles[d] == rep.total_cycles
+                assert mat.total_energy_pj[d] == rep.total_energy_pj
+                assert mat.wallclock_s[d] == rep.wallclock_s
+                assert mat.effective_tops[d] == rep.effective_tops
+                assert mat.avg_util[d] == rep.avg_util
+                assert mat.area_mm2[d] == rep.area_mm2
+                for g, r in enumerate(rep.reports):
+                    assert mat.cycles[g, d] == r.cycles
+                    assert mat.energy_pj[g, d] == r.energy_pj
+                    assert mat.weight_reloads[g, d] == r.weight_reloads
+                    assert mat.util[g, d] == r.util
+
+    @given(m=st.integers(1, 512), k=st.integers(1, 8192),
+           n=st.integers(1, 8192), count=st.integers(1, 64),
+           n_macros=st.sampled_from([4, 64, 256]))
+    @settings(max_examples=25, deadline=None)
+    def test_single_gemm_property(self, ppas, m, k, n, count, n_macros):
+        g = GemmShape("rand", m, k, n, count)
+        mat = batched_workload_matrix([g], ppas, n_macros=n_macros)
+        for d, ppa in enumerate(ppas):
+            rep = accelerator_report([g], ppa, n_macros=n_macros)
+            assert mat.total_cycles[d] == rep.total_cycles
+            assert mat.total_energy_pj[d] == rep.total_energy_pj
+            assert mat.effective_tops[d] == rep.effective_tops
+
+    def test_codesign_frontier(self, ppas):
+        report = cross_workload_codesign(_toy_workloads(), ppas, n_macros=64)
+        assert report.workloads == ("vision", "language", "moe")
+        assert len(report.frontier) >= 1
+        objs = [(report.total_wallclock_s[d], report.total_energy_pj[d],
+                 report.area_mm2[d]) for d in range(len(ppas))]
+        expect = tuple(pareto_indices(objs))
+        assert report.frontier == expect
+        # best_for picks the fastest design per workload
+        for w in report.workloads:
+            d = report.best_for(w)
+            wi = report.workloads.index(w)
+            assert report.wallclock_s[wi, d] == report.wallclock_s[wi].min()
