@@ -10,38 +10,15 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs import get_config, list_archs
-from repro.core import (GemmShape, accelerator_report,
-                        calibrated_tech_for_reference, cross_workload_codesign,
-                        design_space_sweep, mso_search_batched,
+from repro.core import (accelerator_report, calibrated_tech_for_reference,
+                        cross_workload_codesign, design_space_sweep,
+                        gemm_inventory, mso_search_batched,
                         pareto_experiment_spec, reference_chip_design,
                         reference_chip_ppa, rollup)
 
 from .common import timed
 
 N_MACROS = 256
-
-
-def gemm_inventory(cfg, seq: int = 256) -> list[GemmShape]:
-    """Per-token-batch GEMMs of one decoder layer x n_layers (weight-side
-    inventory; attention score/value matmuls are activation-activation and
-    stay outside the weight-stationary CIM mapping)."""
-    d, hd = cfg.d_model, cfg.hd
-    gs = [
-        GemmShape("wq", seq, d, cfg.n_heads * hd, cfg.n_layers),
-        GemmShape("wk", seq, d, cfg.n_kv_heads * hd, cfg.n_layers),
-        GemmShape("wv", seq, d, cfg.n_kv_heads * hd, cfg.n_layers),
-        GemmShape("wo", seq, cfg.n_heads * hd, d, cfg.n_layers),
-    ]
-    if cfg.family == "moe":
-        e_active = cfg.moe.top_k
-        gs += [GemmShape("moe_up", seq, d, 2 * cfg.moe.d_expert,
-                         cfg.n_layers * e_active),
-               GemmShape("moe_down", seq, cfg.moe.d_expert, d,
-                         cfg.n_layers * e_active)]
-    else:
-        gs += [GemmShape("mlp_up", seq, d, 2 * cfg.d_ff, cfg.n_layers),
-               GemmShape("mlp_down", seq, cfg.d_ff, d, cfg.n_layers)]
-    return gs
 
 
 def candidate_designs(tech, n_extra: int = 96) -> list:

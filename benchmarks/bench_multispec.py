@@ -1,0 +1,90 @@
+"""Multi-spec vmapped co-synthesis: N scenario specs synthesized in one fused
+pass (repro.core.multispec.mso_search_many) vs the per-spec batched loop.
+
+The tracked row is ``multispec/vmap_speedup``: the fused pass must beat
+looping ``mso_search(backend="batched")`` over the same specs while returning
+bit-identical frontiers.  Also times the serving-time macro-selection step
+(multi-spec frontier -> cross-workload co-design -> per-workload macro)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import batched as B
+from repro.core import calibrated_tech_for_reference
+from repro.core.dse import gemm_inventory
+from repro.core.multispec import mso_search_many, scenario_specs
+from repro.serve.select import select_macros
+
+from .common import timed
+
+GRID_RESOLUTION = 5
+SELECT_ARCHS = ("qwen3-4b", "internvl2-1b", "granite-moe-1b-a400m")
+
+
+def _spec_set() -> list:
+    """The §I scenario specs plus constraint variants — a realistic
+    multi-macro co-synthesis request."""
+    scen = scenario_specs()
+    specs = list(scen.values())
+    specs.append(dataclasses.replace(scen["vision"], f_mac_hz=600e6,
+                                     f_wupdate_hz=600e6))
+    specs.append(dataclasses.replace(scen["cloud"], mcr=4))
+    specs.append(dataclasses.replace(scen["wearable"], vdd=0.8,
+                                     f_mac_hz=400e6, f_wupdate_hz=400e6))
+    specs.append(dataclasses.replace(scen["language"], h=128, w=128))
+    return specs
+
+
+def run() -> list[tuple]:
+    tech = calibrated_tech_for_reference()
+    specs = _spec_set()
+
+    def per_spec_loop():
+        # A fresh multi-spec request: the characterize-once cache holds no
+        # evaluated lattices for these specs.
+        B._evaluated.cache_clear()
+        return [B.mso_search_batched(s, None, tech,
+                                     resolution=GRID_RESOLUTION)
+                for s in specs]
+
+    def fused():
+        return mso_search_many(specs, None, tech,
+                               resolution=GRID_RESOLUTION)
+
+    loop_res, us_loop = timed(per_spec_loop, iters=3)
+    many_res, us_many = timed(fused, iters=3)
+
+    identical = all(
+        len(a.frontier) == len(b.frontier)
+        and all(x.design.name() == y.design.name()
+                and x.e_cycle_fj == y.e_cycle_fj
+                and x.area_um2 == y.area_um2 and x.fmax_hz == y.fmax_hz
+                for x, y in zip(a.frontier, b.frontier))
+        for a, b in zip(loop_res, many_res))
+    frontier_pts = sum(len(r.frontier) for r in many_res)
+
+    rows = [
+        (f"multispec/search_loop/{len(specs)}specs", us_loop,
+         f"frontier_pts={frontier_pts}"),
+        (f"multispec/search_vmap/{len(specs)}specs", us_many,
+         f"frontier_pts={frontier_pts}"),
+        ("multispec/vmap_speedup", us_many,
+         f"speedup={us_loop / us_many:.2f}x;identical={identical};"
+         f"specs={len(specs)}"),
+    ]
+
+    # ---- serving-time macro selection over the multi-spec frontier ---------
+    workloads = {a: gemm_inventory(get_config(a)) for a in SELECT_ARCHS}
+    sel, us_sel = timed(lambda: select_macros(workloads, tech=tech,
+                                              resolution=GRID_RESOLUTION),
+                        iters=1)
+    s = sel.summary()
+    rows.append((f"multispec/select/{len(workloads)}workloads", us_sel,
+                 f"candidates={s['candidates']};"
+                 f"codesign_frontier={s['codesign_frontier']}"))
+    for w in sel.workloads:
+        rows.append((f"multispec/select/{w}", us_sel,
+                     f"macro={sel.label_for(w)}"))
+    return rows

@@ -12,8 +12,8 @@ import time
 import traceback
 
 from . import (bench_csa, bench_dse, bench_fig7_energy, bench_fig8_pareto,
-               bench_fig9_shmoo, bench_kernels, bench_roofline,
-               bench_table1_features, bench_table2_sota)
+               bench_fig9_shmoo, bench_kernels, bench_multispec,
+               bench_roofline, bench_table1_features, bench_table2_sota)
 from .common import emit, rows_to_dicts
 
 MODULES = [
@@ -25,6 +25,7 @@ MODULES = [
     ("csa", bench_csa),
     ("kernels", bench_kernels),
     ("dse", bench_dse),
+    ("multispec", bench_multispec),
     ("roofline", bench_roofline),
 ]
 

@@ -7,12 +7,11 @@ want different PPA corners).
 """
 
 import argparse
-import dataclasses
 
-from benchmarks.bench_dse import gemm_inventory
 from repro.configs import get_config, list_archs
 from repro.core import (MacroSpec, SubcircuitLibrary, accelerator_report,
-                        calibrated_tech_for_reference, mso_search)
+                        calibrated_tech_for_reference, gemm_inventory,
+                        mso_search)
 
 
 def main():

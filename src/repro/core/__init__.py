@@ -16,47 +16,60 @@ Layers (paper Fig. 2):
 from .csa import CSADesign, CSAReport, FAMILY, build_netlist, characterize
 from .dse import (AcceleratorReport, CodesignReport, GemmShape,
                   WorkloadMatrix, accelerator_report,
-                  batched_workload_matrix, cross_workload_codesign, map_gemm)
+                  batched_workload_matrix, cross_workload_codesign,
+                  gemm_inventory, map_gemm)
 from .gatesim import simulate, verify_tree
 from .macro import (MacroDesign, MacroPPA, MacroSpec, at_voltage,
                     calibrated_tech_for_reference, pareto_experiment_spec,
                     reference_chip_design, reference_chip_ppa,
-                    reference_chip_spec, rollup, timing_paths)
+                    reference_chip_spec, reporting_frequency, rollup,
+                    timing_paths)
 from .netlist import emit_verilog, tree_netlist
-from .pareto import pareto_front, pareto_indices, preference_grid
+from .pareto import (PARETO_EPS, dominates, nondominated_mask, pareto_front,
+                     pareto_chunk_size, pareto_indices, preference_grid)
 from .scl import SubcircuitLibrary
 from .searcher import SearchResult, mso_search, synthesize_one
 from .subcircuits import SC, MemCellKind, MultMuxKind, PPA
 from .tech import TechModel, delay_scale, energy_scale
 
-# The batched engine is the only core module that needs jax; re-export its
-# names lazily (PEP 562) so the scalar compiler layer stays import-light.
+# The batched/multispec engines are the only core modules that need jax;
+# re-export their names lazily (PEP 562) so the scalar compiler layer stays
+# import-light.
 _BATCHED_EXPORTS = ("BatchedPPA", "BatchedSweep", "DesignLattice",
                     "SpecTables", "design_space_sweep", "mso_search_batched",
                     "pareto_mask")
+_MULTISPEC_EXPORTS = ("design_space_sweep_many", "evaluate_many",
+                      "frontier_union", "mso_search_many", "scenario_specs")
 
 
 def __getattr__(name: str):
     if name in _BATCHED_EXPORTS:
         from . import batched
         return getattr(batched, name)
+    if name in _MULTISPEC_EXPORTS:
+        from . import multispec
+        return getattr(multispec, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
     "BatchedPPA", "BatchedSweep", "DesignLattice", "SpecTables",
     "design_space_sweep", "mso_search_batched", "pareto_mask",
+    "design_space_sweep_many", "evaluate_many", "frontier_union",
+    "mso_search_many", "pareto_chunk_size", "scenario_specs",
     "CSADesign", "CSAReport", "FAMILY", "build_netlist", "characterize",
     "AcceleratorReport", "CodesignReport", "GemmShape", "WorkloadMatrix",
     "accelerator_report", "batched_workload_matrix",
-    "cross_workload_codesign", "map_gemm",
+    "cross_workload_codesign", "gemm_inventory", "map_gemm",
+    "reporting_frequency",
     "simulate", "verify_tree",
     "MacroDesign", "MacroPPA", "MacroSpec", "at_voltage",
     "calibrated_tech_for_reference", "pareto_experiment_spec",
     "reference_chip_design", "reference_chip_ppa", "reference_chip_spec",
     "rollup", "timing_paths",
     "emit_verilog", "tree_netlist",
-    "pareto_front", "pareto_indices", "preference_grid",
+    "PARETO_EPS", "dominates", "nondominated_mask", "pareto_front",
+    "pareto_indices", "preference_grid",
     "SubcircuitLibrary",
     "SearchResult", "mso_search", "synthesize_one",
     "SC", "MemCellKind", "MultMuxKind", "PPA",

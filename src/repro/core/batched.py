@@ -51,11 +51,18 @@ from jax.experimental import enable_x64
 from . import subcircuits as sc
 from .csa import CSADesign, CSAReport, characterize, valid_splits
 from .macro import (ACT_IN_MEAS, ACT_WT_MEAS, MacroDesign, MacroPPA,
-                    MacroSpec, PathReport, _mode_bits, _product_bits)
-from .pareto import pareto_indices, preference_grid
+                    MacroSpec, PathReport, _mode_bits, _product_bits,
+                    reporting_frequency)
+from .pareto import (PARETO_EPS, chunk_dominated, pareto_chunk_size,
+                     pareto_indices, preference_grid)
 from .searcher import (RHO_STEPS, SearchResult, _throughput_overdrive,
                        max_crit_rel)
 from .tech import TechModel, delay_scale, energy_scale, leakage_scale
+
+# CSA characterization is pure in (design, rows, product_bits, tech); memoize
+# it so multi-spec table builds sharing an H re-use one family characterization
+# instead of re-walking the analytical model per spec.
+_characterize = functools.lru_cache(maxsize=None)(characterize)
 
 MEMCELLS: tuple[sc.MemCellKind, ...] = tuple(sc.MemCellKind)
 MULTMUXES: tuple[sc.MultMuxKind, ...] = tuple(sc.MultMuxKind)
@@ -96,8 +103,8 @@ class SpecTables:
                         d = CSADesign(rho=rho, reorder=ro, retimed=rt, split=sp)
                         self.csa_designs.append(d)
                         self.csa_reports.append(
-                            characterize(d, spec.h, _product_bits(spec),
-                                         tech))
+                            _characterize(d, spec.h, _product_bits(spec),
+                                          tech))
         self.csa_crit = np.array([r.crit_path_rel for r in self.csa_reports])
         self.csa_energy = np.array([r.energy_rel for r in self.csa_reports])
         self.csa_area = np.array([r.area_um2 for r in self.csa_reports])
@@ -390,12 +397,13 @@ def _eval_kernel(idx, tabs, consts, e_ofu_m, e_align_m):
             "breakdown": breakdown, "e_cycle": e_cycle}
 
 
-def evaluate(lattice: DesignLattice, tables: SpecTables) -> BatchedPPA:
-    """One fused (jitted) pass: timing paths + full PPA roll-up for every
-    lattice point, mirroring :func:`repro.core.macro.rollup` float-for-float."""
+def _kernel_inputs(tables: SpecTables
+                   ) -> tuple[tuple[np.ndarray, ...], np.ndarray,
+                              np.ndarray, np.ndarray]:
+    """numpy-side operands for :func:`_eval_kernel`, in argument order
+    (tabs, consts, e_ofu_m, e_align_m).  The multi-spec engine stacks these
+    along a leading spec axis and vmaps the same kernel over them."""
     spec, tech = tables.spec, tables.tech
-    csa_i = np.asarray(tables.csa_index(lattice.rho_i, lattice.ro, lattice.rt,
-                                        lattice.sp_i))
     consts = np.array([
         tech.apr_overhead,
         tables.a_sa, tables.a_align, tables.a_drv,
@@ -403,20 +411,36 @@ def evaluate(lattice: DesignLattice, tables: SpecTables) -> BatchedPPA:
         tech.eps_fj,
         energy_scale(spec.vdd),
     ], dtype=np.float64)
+    tabs = (tables.t_wl_mm, tables.csa_crit, tables.t_ofu,
+            tables.a_array, tables.a_mult, tables.a_tree,
+            tables.a_ofu, tables.e_mm, tables.e_tree)
+    e_ofu_m = np.stack([tables.e_ofu[m] for m in tables.modes])
+    e_align_m = np.array([tables.e_align[m] for m in tables.modes])
+    return tabs, consts, e_ofu_m, e_align_m
+
+
+def evaluate(lattice: DesignLattice, tables: SpecTables) -> BatchedPPA:
+    """One fused (jitted) pass: timing paths + full PPA roll-up for every
+    lattice point, mirroring :func:`repro.core.macro.rollup` float-for-float."""
+    csa_i = np.asarray(tables.csa_index(lattice.rho_i, lattice.ro, lattice.rt,
+                                        lattice.sp_i))
+    tabs_np, consts, e_ofu_np, e_align_np = _kernel_inputs(tables)
     with enable_x64():
         f64 = lambda a: jnp.asarray(np.asarray(a, dtype=np.float64))  # noqa: E731
         idx = (jnp.asarray(lattice.mem_i), jnp.asarray(lattice.mm_i),
                jnp.asarray(csa_i), jnp.asarray(lattice.pipe_i),
                jnp.asarray(lattice.ort), jnp.asarray(lattice.fts),
                jnp.asarray(lattice.fso))
-        tabs = (f64(tables.t_wl_mm), f64(tables.csa_crit), f64(tables.t_ofu),
-                f64(tables.a_array), f64(tables.a_mult), f64(tables.a_tree),
-                f64(tables.a_ofu), f64(tables.e_mm), f64(tables.e_tree))
-        e_ofu_m = f64(np.stack([tables.e_ofu[m] for m in tables.modes]))
-        e_align_m = f64(np.array([tables.e_align[m] for m in tables.modes]))
-        out = _eval_kernel(idx, tabs, f64(consts), e_ofu_m, e_align_m)
+        out = _eval_kernel(idx, tuple(f64(t) for t in tabs_np), f64(consts),
+                           f64(e_ofu_np), f64(e_align_np))
         out = jax.tree.map(np.asarray, out)
+    return _finish(lattice, tables, csa_i, out)
 
+
+def _finish(lattice: DesignLattice, tables: SpecTables, csa_i: np.ndarray,
+            out: dict) -> BatchedPPA:
+    """numpy tail of the roll-up, applied to one spec's kernel outputs."""
+    spec, tech = tables.spec, tables.tech
     e_cycle = {m: out["e_cycle"][k] for k, m in enumerate(tables.modes)}
     # The timing fixup chain and throughput derivations run in numpy: their
     # multiply-add chains and constant divisors are FMA / reciprocal
@@ -439,7 +463,7 @@ def evaluate(lattice: DesignLattice, tables: SpecTables) -> BatchedPPA:
     dscale = delay_scale(spec.vdd, tech.vth, tech.alpha)
     fmax = 1e12 / ((crit * tech.tau_ps) * dscale)
     meets = fmax >= spec.f_mac_hz * 0.999
-    f_rep = np.where(meets, np.minimum(fmax, spec.f_mac_hz), fmax)
+    f_rep = reporting_frequency(fmax, spec.f_mac_hz, meets)
     tops_1b = ((2.0 * spec.h * spec.w) * f_rep) / 1e12
     leak_mw = (area * tech.leak_mw_per_um2) * leakage_scale(spec.vdd)
     tops_w = {}
@@ -481,28 +505,23 @@ def _evaluated(spec: MacroSpec, tech: TechModel,
 # ---------------------------------------------------------------------------
 
 
-def pareto_mask(objs: np.ndarray, eps: float = 1e-12,
+def pareto_mask(objs: np.ndarray, eps: float = PARETO_EPS,
                 chunk: int = 512) -> np.ndarray:
     """Non-dominated mask over an (n, k) objective matrix (minimization),
-    vectorized and chunked so lattice-sized sweeps stay in memory.  Dominance
-    semantics match :func:`repro.core.pareto.dominates`, including its
-    *absolute* eps band: an objective whose scale approaches eps (e.g. period
-    in seconds, ~1e-9) effectively gets a relative tolerance — identical to
-    what the scalar frontier applies, which is what keeps the two paths'
-    frontiers in exact agreement."""
+    vectorized and chunked so lattice-sized sweeps stay in memory (size the
+    chunk for the accelerator with :func:`repro.core.pareto.
+    pareto_chunk_size`).  Dominance semantics match
+    :func:`repro.core.pareto.dominates` through the shared
+    :data:`repro.core.pareto.PARETO_EPS` band — near-tie objectives land on
+    the same frontier in the scalar and batched paths by construction."""
     objs = np.asarray(objs, dtype=np.float64)
-    n, k = objs.shape
+    n, _k = objs.shape
     keep = np.ones(n, dtype=bool)
     with enable_x64():
         all_o = jnp.asarray(objs)
         for start in range(0, n, chunk):
             blk = all_o[start:start + chunk]            # (c, k)
-            le = jnp.ones((blk.shape[0], n), dtype=bool)
-            lt = jnp.zeros((blk.shape[0], n), dtype=bool)
-            for d in range(k):
-                le = le & (all_o[None, :, d] <= blk[:, None, d] + eps)
-                lt = lt | (all_o[None, :, d] < blk[:, None, d] - eps)
-            dominated = (le & lt).any(axis=1)
+            dominated = chunk_dominated(all_o, blk, eps, xp=jnp)
             keep[start:start + blk.shape[0]] = ~np.asarray(dominated)
     return keep
 
@@ -526,16 +545,19 @@ class BatchedSweep:
         return np.stack([self.ppa.e_cycle["int_lo"], self.ppa.area,
                          1.0 / self.ppa.fmax], axis=1)
 
-    def frontier_indices(self, feasible_only: bool = True) -> list[int]:
+    def frontier_indices(self, feasible_only: bool = True,
+                         chunk: int | None = None) -> list[int]:
         cand = np.flatnonzero(self.lattice.valid
                               & (self.ppa.meets if feasible_only else True))
         if cand.size == 0:
             cand = np.flatnonzero(self.lattice.valid)
         objs = self.objectives()[cand]
-        survivors = cand[pareto_mask(objs)]
+        if chunk is None:       # size for the device-memory budget
+            chunk = pareto_chunk_size(len(objs), objs.shape[1])
+        mask = pareto_mask(objs, chunk=chunk)
+        survivors = cand[mask]
         # exact dedup + ordering on the (small) survivor set
-        order = pareto_indices([tuple(o) for o in
-                                self.objectives()[survivors]])
+        order = pareto_indices([tuple(o) for o in objs[mask]])
         return [int(survivors[i]) for i in order]
 
     def materialize(self, i: int) -> MacroPPA:
@@ -578,6 +600,16 @@ def mso_search_batched(spec: MacroSpec, scl=None, tech: TechModel = None,
         raise ValueError("tech model required")
     memcell = sc.MemCellKind.SRAM_6T
     lattice, tables, T = _evaluated(spec, tech, (memcell,))
+    return _alg1_replay(lattice, tables, T, resolution)
+
+
+def _alg1_replay(lattice: DesignLattice, tables: SpecTables, T: BatchedPPA,
+                 resolution: int) -> SearchResult:
+    """Algorithm 1 (steps 1-4) as masked first-feasible selection over an
+    already-evaluated lattice.  Split out of :func:`mso_search_batched` so the
+    multi-spec engine can run one fused evaluation for N specs and replay the
+    hierarchy per spec against it."""
+    spec, tech = tables.spec, tables.tech
 
     prefs = preference_grid(resolution)
     P = len(prefs)

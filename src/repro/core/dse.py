@@ -18,7 +18,10 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from .macro import MacroPPA
+# reporting_frequency is defined next to rollup (which also applies it); the
+# scalar and batched reports below clamp through that one definition so the
+# two paths can never drift.
+from .macro import MacroPPA, reporting_frequency
 from .pareto import pareto_indices
 
 
@@ -36,6 +39,31 @@ class GemmShape:
     @property
     def macs(self) -> int:
         return self.m * self.k * self.n * self.count
+
+
+def gemm_inventory(cfg, seq: int = 256) -> list[GemmShape]:
+    """Model-zoo GEMM inventory: the per-token-batch weight-side GEMMs of one
+    decoder layer x n_layers for an assigned architecture config (attention
+    score/value matmuls are activation-activation and stay outside the
+    weight-stationary CIM mapping).  This is the workload description the
+    co-design sweep and serving-time macro selection map onto macro arrays."""
+    d, hd = cfg.d_model, cfg.hd
+    gs = [
+        GemmShape("wq", seq, d, cfg.n_heads * hd, cfg.n_layers),
+        GemmShape("wk", seq, d, cfg.n_kv_heads * hd, cfg.n_layers),
+        GemmShape("wv", seq, d, cfg.n_kv_heads * hd, cfg.n_layers),
+        GemmShape("wo", seq, cfg.n_heads * hd, d, cfg.n_layers),
+    ]
+    if cfg.family == "moe":
+        e_active = cfg.moe.top_k
+        gs += [GemmShape("moe_up", seq, d, 2 * cfg.moe.d_expert,
+                         cfg.n_layers * e_active),
+               GemmShape("moe_down", seq, cfg.moe.d_expert, d,
+                         cfg.n_layers * e_active)]
+    else:
+        gs += [GemmShape("mlp_up", seq, d, 2 * cfg.d_ff, cfg.n_layers),
+               GemmShape("mlp_down", seq, cfg.d_ff, d, cfg.n_layers)]
+    return gs
 
 
 @dataclass(frozen=True)
@@ -200,10 +228,10 @@ def batched_workload_matrix(gemms: Sequence[GemmShape],
         total_energy = total_energy + energy_pj[g]
         util_cycles = util_cycles + util[g] * cycles[g]
 
-    fmax = np.array([p.fmax_hz for p in ppas])
-    f_mac = np.array([p.design.spec.f_mac_hz for p in ppas])
-    meets = np.array([p.meets_timing for p in ppas])
-    f = np.where(meets, np.minimum(fmax, f_mac), fmax)
+    f = reporting_frequency(
+        np.array([p.fmax_hz for p in ppas]),
+        np.array([p.design.spec.f_mac_hz for p in ppas]),
+        np.array([p.meets_timing for p in ppas]))
     wall = total_cycles / f
     macs = sum(g.macs for g in gemms)
     tops = np.where(wall > 0, 2.0 * macs / wall / 1e12, 0.0)
@@ -272,8 +300,14 @@ def cross_workload_codesign(workloads: Mapping[str, Sequence[GemmShape]],
     tops = np.stack([m.effective_tops for m in mats])
     util = np.stack([m.avg_util for m in mats])
     area = mats[0].area_mm2
-    total_wall = wall.sum(axis=0)
-    total_energy = energy.sum(axis=0)
+    # Totals accumulate in canonical (name-sorted) order so the frontier is
+    # invariant under permutation of the workloads mapping — dict-insertion
+    # order must never move a design on or off the co-design frontier.
+    total_wall = np.zeros(len(ppas))
+    total_energy = np.zeros(len(ppas))
+    for wi in sorted(range(len(names)), key=lambda i: names[i]):
+        total_wall = total_wall + wall[wi]
+        total_energy = total_energy + energy[wi]
     objs = [(float(total_wall[d]), float(total_energy[d]), float(area[d]))
             for d in range(len(ppas))]
     frontier = tuple(pareto_indices(objs))
@@ -289,7 +323,8 @@ def accelerator_report(gemms: list[GemmShape], ppa: MacroPPA, n_macros: int,
     reports = tuple(map_gemm(g, ppa, n_macros, ib, wb) for g in gemms)
     total_cycles = sum(r.cycles for r in reports)
     total_energy = sum(r.energy_pj for r in reports)
-    f = min(ppa.fmax_hz, ppa.design.spec.f_mac_hz) if ppa.meets_timing else ppa.fmax_hz
+    f = float(reporting_frequency(ppa.fmax_hz, ppa.design.spec.f_mac_hz,
+                                  ppa.meets_timing))
     wall = total_cycles / f
     macs = sum(r.gemm.macs for r in reports)
     tops = 2.0 * macs / wall / 1e12 if wall > 0 else 0.0

@@ -19,6 +19,8 @@ import functools
 import math
 from dataclasses import dataclass, field, replace
 
+import numpy as np
+
 from . import subcircuits as sc
 from .csa import CSADesign, CSAReport, characterize
 from .tech import TechModel, calibrated_tech
@@ -163,6 +165,22 @@ def _product_bits(spec: MacroSpec) -> int:
     return 2
 
 
+def reporting_frequency(fmax_hz, f_mac_hz, meets_timing):
+    """The clock a deployed macro is *reported* (and served) at.
+
+    A design that meets timing is down-clocked to the spec'd MAC frequency
+    (``min(fmax, f_mac)``); a timing-missing design reports its raw ``fmax``.
+    This is the single clamp shared by :func:`rollup`, the scalar
+    ``dse.accelerator_report``, the batched ``dse.batched_workload_matrix``,
+    the lattice engine's throughput roll-up, and multi-spec serving selection
+    — so the same design is never clocked differently by different reporting
+    paths.  Accepts scalars or arrays."""
+    fmax_hz = np.asarray(fmax_hz, dtype=np.float64)
+    f_mac_hz = np.asarray(f_mac_hz, dtype=np.float64)
+    meets = np.asarray(meets_timing, dtype=bool)
+    return np.where(meets, np.minimum(fmax_hz, f_mac_hz), fmax_hz)
+
+
 def timing_paths(design: MacroDesign, tech: TechModel) -> tuple[PathReport, CSAReport, dict]:
     spec = design.spec
     wl = sc.wl_driver_ppa(spec.h, spec.w, spec.mcr, tech)
@@ -289,7 +307,7 @@ def rollup(design: MacroDesign, tech: TechModel,
     latency = ib + max(1, pipe)
 
     # ---- throughput -------------------------------------------------------------
-    f_rep = min(fmax, spec.f_mac_hz) if meets else fmax
+    f_rep = float(reporting_frequency(fmax, spec.f_mac_hz, meets))
     tops_1b = 2.0 * spec.h * spec.w * f_rep / 1e12
     leak_mw = tech.leakage_mw(area, spec.vdd)
     tops_w = {}

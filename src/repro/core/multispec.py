@@ -1,0 +1,199 @@
+"""Spec-batched co-synthesis engine (multi-spec-oriented synthesis at scale).
+
+The paper's pitch is *multi-spec-oriented* synthesis: one compiler run serves
+many deployment scenarios (§I names vision, language, cloud and wearable
+workloads with distinct PPA postures).  :mod:`repro.core.batched` evaluates
+the full design lattice for ONE spec; this module stacks the per-spec
+subcircuit tables (:class:`~repro.core.batched.SpecTables`) along a leading
+spec axis and runs the same jitted float64 roll-up kernel under ``jax.vmap``,
+so N macro specs are synthesized in one fused device pass:
+
+  ``evaluate_many``
+      group specs by lattice signature (same dims / split axis / mode count),
+      stack each group's tables, and run the vmapped kernel once per group.
+      The kernel and the numpy roll-up tail are the *same code* the
+      single-spec engine runs, so per-spec results are bit-identical to
+      :func:`repro.core.batched.evaluate`.
+
+  ``mso_search_many``
+      Algorithm 1 replayed per spec against the fused evaluation — frontiers
+      are bit-identical to looping ``mso_search(backend="batched")`` over the
+      specs, at a fraction of the dispatch cost.
+
+  ``design_space_sweep_many`` / ``pareto_chunk_size``
+      exhaustive multi-spec sweeps with chunked Pareto extraction sized for
+      the accelerator's memory budget.
+
+  ``scenario_specs``
+      the §I deployment scenarios as concrete :class:`MacroSpec` values — the
+      default multi-spec synthesis set for serving-time macro selection
+      (:mod:`repro.serve.select`).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from . import batched as B
+from . import subcircuits as sc
+from .batched import BatchedPPA, BatchedSweep, DesignLattice, SpecTables
+from .macro import MacroSpec
+# Chunk sizing lives with the shared Pareto predicate; re-exported here
+# because multi-spec sweeps are where accelerator-sized chunking matters.
+from .pareto import DEFAULT_PARETO_BUDGET_BYTES, pareto_chunk_size  # noqa: F401
+from .searcher import SearchResult
+from .tech import TechModel
+
+# The single-spec kernel, vmapped over a leading spec axis: the gather-index
+# tuple is shared (in_axes=None) while every table, constant and mode array
+# carries one row per spec.  Gathers and adds are elementwise under batching,
+# so per-spec lanes compute bit-identically to the unbatched kernel.
+_eval_kernel_many = jax.jit(
+    jax.vmap(B._eval_kernel, in_axes=(None, 0, 0, 0, 0)))
+
+
+def scenario_specs() -> dict[str, MacroSpec]:
+    """The paper's §I deployment scenarios as compiler inputs.
+
+    One shared geometry (64x64, INT + FP4/FP8) with scenario-specific
+    postures, so all four land in one vmap group:
+
+      vision    edge camera pipelines — the Fig. 8 balanced spec.
+      language  LLM decode — MCR=4 buys weight residency for big GEMMs.
+      cloud     datacenter throughput — 1.1 GHz at nominal-high voltage.
+      wearable  always-on low power — 250 MHz at 0.7 V.
+    """
+    return {
+        "vision": MacroSpec(h=64, w=64, mcr=2, int_precisions=(4, 8),
+                            fp_precisions=("FP4", "FP8"), f_mac_hz=800e6,
+                            f_wupdate_hz=800e6, vdd=0.9),
+        "language": MacroSpec(h=64, w=64, mcr=4, int_precisions=(4, 8),
+                              fp_precisions=("FP4", "FP8"), f_mac_hz=800e6,
+                              f_wupdate_hz=100e6, vdd=0.9),
+        "cloud": MacroSpec(h=64, w=64, mcr=2, int_precisions=(4, 8),
+                           fp_precisions=("FP4", "FP8"), f_mac_hz=1.1e9,
+                           f_wupdate_hz=1.1e9, vdd=1.2),
+        "wearable": MacroSpec(h=64, w=64, mcr=2, int_precisions=(2, 4),
+                              fp_precisions=("FP4", "FP8"), f_mac_hz=250e6,
+                              f_wupdate_hz=250e6, vdd=0.7),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-spec evaluation
+# ---------------------------------------------------------------------------
+
+
+def _group_key(lattice: DesignLattice, tables: SpecTables):
+    """Specs share a vmap group iff their lattices address identically and
+    their mode axes have equal length (mode *names* may differ per spec)."""
+    return (lattice.dims, lattice.splits, len(tables.modes))
+
+
+def _evaluate_group(lattices: Sequence[DesignLattice],
+                    tables_list: Sequence[SpecTables]) -> list[BatchedPPA]:
+    """One vmapped kernel launch for a group of same-shape specs, then the
+    shared single-spec numpy tail per spec (bit-identity by construction)."""
+    lat0, t0 = lattices[0], tables_list[0]
+    csa_i = np.asarray(t0.csa_index(lat0.rho_i, lat0.ro, lat0.rt, lat0.sp_i))
+    packed = [B._kernel_inputs(t) for t in tables_list]
+    tabs_s = tuple(np.stack([p[0][j] for p in packed], dtype=np.float64)
+                   for j in range(len(packed[0][0])))
+    consts_s = np.stack([p[1] for p in packed], dtype=np.float64)
+    e_ofu_s = np.stack([p[2] for p in packed], dtype=np.float64)
+    e_align_s = np.stack([p[3] for p in packed], dtype=np.float64)
+    with enable_x64():
+        idx = (jnp.asarray(lat0.mem_i), jnp.asarray(lat0.mm_i),
+               jnp.asarray(csa_i), jnp.asarray(lat0.pipe_i),
+               jnp.asarray(lat0.ort), jnp.asarray(lat0.fts),
+               jnp.asarray(lat0.fso))
+        out = _eval_kernel_many(idx, tuple(jnp.asarray(t) for t in tabs_s),
+                                jnp.asarray(consts_s), jnp.asarray(e_ofu_s),
+                                jnp.asarray(e_align_s))
+        out = jax.tree.map(np.asarray, out)
+    return [B._finish(lattices[s], tables_list[s], csa_i,
+                      jax.tree.map(lambda a: a[s], out))
+            for s in range(len(lattices))]
+
+
+def evaluate_many(specs: Sequence[MacroSpec], tech: TechModel,
+                  memcells: tuple[sc.MemCellKind, ...] = B.MEMCELLS
+                  ) -> list[tuple[DesignLattice, SpecTables, BatchedPPA]]:
+    """Evaluate every design point of every spec, batching same-shape specs
+    through one vmapped kernel launch.  Results are returned in input order
+    and are bit-identical per spec to :func:`repro.core.batched.evaluate`."""
+    specs = list(specs)
+    lattices = [DesignLattice.enumerate(s, tuple(memcells)) for s in specs]
+    tables = [SpecTables(s, tech) for s in specs]
+    groups: dict[tuple, list[int]] = {}
+    for i, (lat, tab) in enumerate(zip(lattices, tables)):
+        groups.setdefault(_group_key(lat, tab), []).append(i)
+    out: list = [None] * len(specs)
+    for members in groups.values():
+        ppas = _evaluate_group([lattices[i] for i in members],
+                               [tables[i] for i in members])
+        for i, ppa in zip(members, ppas):
+            out[i] = (lattices[i], tables[i], ppa)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-spec search + sweep entry points
+# ---------------------------------------------------------------------------
+
+
+def mso_search_many(specs: Sequence[MacroSpec], scl=None,
+                    tech: TechModel = None,
+                    resolution: int = 4) -> list[SearchResult]:
+    """Synthesize N macro specs in one fused pass.
+
+    Per-spec results (explored set, frontier, every PPA field) are
+    bit-identical to looping ``mso_search(spec, backend="batched")`` — the
+    vmapped kernel and shared roll-up tail compute the same float64
+    arithmetic; only the dispatch is fused.  ``scl`` is accepted for
+    signature parity with :func:`repro.core.searcher.mso_search`."""
+    if tech is None:
+        raise ValueError("tech model required")
+    evals = evaluate_many(specs, tech, memcells=(sc.MemCellKind.SRAM_6T,))
+    return [B._alg1_replay(lat, tab, T, resolution)
+            for lat, tab, T in evals]
+
+
+def design_space_sweep_many(specs: Sequence[MacroSpec], tech: TechModel,
+                            memcells: tuple[sc.MemCellKind, ...] = B.MEMCELLS
+                            ) -> list[BatchedSweep]:
+    """Exhaustive sweeps for N specs in one fused pass (the multi-spec
+    counterpart of :func:`repro.core.batched.design_space_sweep`)."""
+    return [BatchedSweep(lattice=lat, tables=tab, ppa=T)
+            for lat, tab, T in evaluate_many(specs, tech, memcells)]
+
+
+def frontier_union(results: Iterable[SearchResult],
+                   names: Sequence[str] | None = None):
+    """Union of per-spec frontiers, deduplicated by (spec, design name) — the
+    serving-time candidate pool for cross-workload co-design.  Points from
+    different specs always stay distinct (a design name does not encode its
+    spec's geometry or constraints).
+
+    With ``names`` (one label per result), returns ``(pool, labels)`` where
+    each pool entry is labeled ``"<name>/<design name>"`` by the first result
+    that contributed it; without, returns the pool alone."""
+    results = list(results)
+    if names is not None and len(names) != len(results):
+        raise ValueError("names must match results one-to-one")
+    pool, labels, seen = [], [], set()
+    for ri, res in enumerate(results):
+        for p in res.frontier:
+            key = (p.design.spec, p.design.name())
+            if key not in seen:
+                seen.add(key)
+                pool.append(p)
+                if names is not None:
+                    labels.append(f"{names[ri]}/{p.design.name()}")
+    return pool if names is None else (pool, labels)

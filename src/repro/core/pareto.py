@@ -9,32 +9,111 @@ from __future__ import annotations
 
 from typing import Callable, Iterable, Sequence, TypeVar
 
+import numpy as np
+
 T = TypeVar("T")
 
+#: Shared tie/epsilon band for dominance comparisons and duplicate collapse.
+#: Every frontier in the repo — the scalar :func:`dominates` /
+#: :func:`pareto_indices` path, the batched engine's chunked
+#: ``pareto_mask``, and the multi-spec extraction — compares through this one
+#: constant, so near-tie objectives land on the *same* frontier no matter
+#: which path evaluated them.  The band is absolute: an objective whose scale
+#: approaches it (e.g. period in seconds, ~1e-9) effectively gets a relative
+#: tolerance.
+PARETO_EPS = 1e-12
 
-def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
-    """True if objective vector ``a`` Pareto-dominates ``b`` (all <=, one <).
-    Objectives are minimized."""
-    le = all(x <= y + 1e-12 for x, y in zip(a, b))
-    lt = any(x < y - 1e-12 for x, y in zip(a, b))
+
+def dominates(a: Sequence[float], b: Sequence[float],
+              eps: float = PARETO_EPS) -> bool:
+    """True if objective vector ``a`` Pareto-dominates ``b`` (all <=, one <,
+    with the shared ``eps`` tie band).  Objectives are minimized."""
+    le = all(x <= y + eps for x, y in zip(a, b))
+    lt = any(x < y - eps for x, y in zip(a, b))
     return le and lt
+
+
+def chunk_dominated(all_o, blk, eps, xp=np):
+    """Eps-band dominance verdicts for one chunk: entry ``i`` is True iff
+    some row of ``all_o`` dominates ``blk[i]`` under exactly the
+    :func:`dominates` semantics.  This is the *single* implementation of the
+    vectorized predicate — :func:`nondominated_mask` runs it on numpy and the
+    batched engine's ``pareto_mask`` passes ``xp=jax.numpy`` to run the same
+    comparisons on device."""
+    c, k = blk.shape
+    n = all_o.shape[0]
+    le = xp.ones((c, n), dtype=bool)
+    lt = xp.zeros((c, n), dtype=bool)
+    for d in range(k):
+        le = le & (all_o[None, :, d] <= blk[:, None, d] + eps)
+        lt = lt | (all_o[None, :, d] < blk[:, None, d] - eps)
+    return (le & lt).any(axis=1)
+
+
+def nondominated_mask(objs, eps: float = PARETO_EPS,
+                      chunk: int = 1024) -> np.ndarray:
+    """Boolean non-dominated mask over an (n, k) objective matrix
+    (minimization), vectorized and chunked.  Entry ``i`` is True iff no row
+    dominates row ``i`` under exactly the :func:`dominates` semantics — this
+    is the single dominance predicate :func:`pareto_indices` and the batched
+    engine's ``pareto_mask`` both reduce to."""
+    objs = np.asarray(objs, dtype=np.float64)
+    if objs.ndim == 1:
+        objs = objs[:, None]
+    n = objs.shape[0]
+    keep = np.ones(n, dtype=bool)
+    for start in range(0, n, chunk):
+        blk = objs[start:start + chunk]                 # (c, k)
+        dominated = chunk_dominated(objs, blk, eps)
+        keep[start:start + blk.shape[0]] = ~dominated
+    return keep
+
+
+#: Default device-memory budget for one Pareto chunk's comparison masks.
+DEFAULT_PARETO_BUDGET_BYTES = 256 * 1024 * 1024
+
+
+def pareto_chunk_size(n_points: int, n_objectives: int = 3,
+                      budget_bytes: int = DEFAULT_PARETO_BUDGET_BYTES) -> int:
+    """Chunk size for the chunked Pareto masks such that the peak comparison
+    footprint fits the accelerator budget.
+
+    One chunk row holds the ``le``/``lt`` masks plus one comparison temp per
+    objective against all ``n_points`` columns (~1 byte each), so a chunk
+    costs about ``chunk * n_points * (2 + n_objectives)`` bytes."""
+    per_row = max(1, n_points) * (2 + max(1, n_objectives))
+    chunk = budget_bytes // per_row
+    return int(min(max(chunk, 64), max(n_points, 64)))
 
 
 def pareto_indices(objs: Sequence[Sequence[float]]) -> list[int]:
     """Indices of the non-dominated, deduplicated members of ``objs``, sorted
     by objective tuple.  This is the single source of truth for frontier
     semantics: :func:`pareto_front` and the batched engine's vectorized
-    extraction both reduce to it, so scalar and batched sweeps agree exactly."""
-    pts = list(enumerate(objs))
+    extraction both reduce to it, so scalar and batched sweeps agree exactly.
+
+    Dominance testing delegates to the vectorized :func:`nondominated_mask`
+    (the per-pair Python walk was O(N^2) and hung at lattice scale); the
+    documented output order is preserved exactly: near-duplicates (all
+    coordinates within :data:`PARETO_EPS`) keep their first occurrence in
+    input order, and the surviving set is sorted by objective tuple."""
+    objs = list(objs)
+    if not objs:
+        return []
+    arr = np.asarray([[float(x) for x in o] for o in objs], dtype=np.float64)
+    survivors = np.flatnonzero(nondominated_mask(arr))
+    # Dedup in input order against the accepted set (vectorized per survivor,
+    # matching the incremental semantics of the original Python walk).
+    acc = np.empty((survivors.size, arr.shape[1]), dtype=np.float64)
+    n_acc = 0
     front: list[tuple[Sequence[float], int]] = []
-    for i, obj in pts:
-        if any(dominates(o2, obj) for _, o2 in pts):
+    for i in survivors:
+        o = arr[i]
+        if n_acc and (np.abs(acc[:n_acc] - o) < PARETO_EPS).all(axis=1).any():
             continue
-        # drop exact duplicates
-        if any(all(abs(x - y) < 1e-12 for x, y in zip(obj, o2))
-               for o2, _ in front):
-            continue
-        front.append((obj, i))
+        acc[n_acc] = o
+        n_acc += 1
+        front.append((objs[i], int(i)))
     front.sort(key=lambda oi: tuple(oi[0]))
     return [i for _, i in front]
 

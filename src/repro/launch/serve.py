@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
         --batch 4 --prompt-len 64 --decode-steps 64 --mesh 1x1
+
+``--dcim-select`` adds the serving-time macro-selection step: the launcher
+synthesizes the multi-spec DCIM frontier (one fused pass over the scenario
+specs), co-designs it against the deployed arch's GEMM inventory, and reports
+the macro the workload would be served on.
 """
 
 from __future__ import annotations
@@ -31,9 +36,27 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-steps", type=int, default=64)
+    ap.add_argument("--dcim-select", action="store_true",
+                    help="select a DCIM macro for this workload from the "
+                         "multi-spec synthesized frontier before serving")
+    ap.add_argument("--dcim-macros", type=int, default=256,
+                    help="macro-array size assumed for --dcim-select")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.dcim_select:
+        from ..core.dse import gemm_inventory
+        from ..serve.select import select_macros
+        sel = select_macros({cfg.name: gemm_inventory(cfg)},
+                            n_macros=args.dcim_macros)
+        wi = sel.codesign.workloads.index(cfg.name)
+        di = sel.assignment[cfg.name]
+        print(f"dcim: {len(sel.pool)} frontier candidates from scenarios "
+              f"{', '.join(sel.scenarios)}")
+        print(f"dcim: selected {sel.label_for(cfg.name)} for {cfg.name} "
+              f"({args.dcim_macros} macros, "
+              f"eff_tops={sel.codesign.effective_tops[wi, di]:.3f}, "
+              f"util={sel.codesign.avg_util[wi, di]:.3f})")
     api = get_model(cfg)
     dims, axes = parse_mesh(args.mesh)
     mesh = make_host_mesh(dims, axes)

@@ -1,3 +1,5 @@
+from .select import MacroSelection, select_macros
 from .step import make_decode_step, make_prefill, greedy_generate
 
-__all__ = ["make_decode_step", "make_prefill", "greedy_generate"]
+__all__ = ["MacroSelection", "select_macros",
+           "make_decode_step", "make_prefill", "greedy_generate"]

@@ -1,0 +1,85 @@
+"""Serving-time DCIM macro selection over the multi-spec synthesized frontier.
+
+The compiler side synthesizes N scenario specs in one fused pass
+(:func:`repro.core.multispec.mso_search_many`); the serving side must then
+answer "which synthesized macro runs *this* deployed workload best?".  This
+module is that bridge: it pools the per-spec Pareto frontiers, batch-maps
+every deployed workload's GEMM inventory onto every candidate
+(:func:`repro.core.dse.cross_workload_codesign` — which applies the same
+timing-clamp as the scalar reports), and assigns each workload the
+lowest-wallclock design.
+
+    from repro.configs import get_config
+    from repro.core.dse import gemm_inventory
+    from repro.serve.select import select_macros
+
+    sel = select_macros({"qwen3-4b": gemm_inventory(get_config("qwen3-4b"))})
+    sel.assignment["qwen3-4b"]        # -> label of the chosen macro
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+from ..core.dse import CodesignReport, GemmShape, cross_workload_codesign
+from ..core.macro import MacroSpec, calibrated_tech_for_reference
+from ..core.multispec import frontier_union, mso_search_many, scenario_specs
+from ..core.tech import TechModel
+
+
+@dataclass(frozen=True)
+class MacroSelection:
+    """Result of serving-time selection: one macro per deployed workload."""
+
+    workloads: tuple[str, ...]
+    scenarios: tuple[str, ...]           # synthesized spec names
+    pool_labels: tuple[str, ...]         # "<scenario>/<design name>" per pool entry
+    pool: tuple                          # candidate MacroPPAs (frontier union)
+    assignment: dict                     # workload name -> pool index
+    codesign: CodesignReport
+
+    def label_for(self, workload: str) -> str:
+        return self.pool_labels[self.assignment[workload]]
+
+    def ppa_for(self, workload: str):
+        return self.pool[self.assignment[workload]]
+
+    def summary(self) -> dict:
+        return {
+            "scenarios": list(self.scenarios),
+            "candidates": len(self.pool),
+            "codesign_frontier": len(self.codesign.frontier),
+            "assignment": {w: self.label_for(w) for w in self.workloads},
+        }
+
+
+def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
+                  specs: Mapping[str, MacroSpec] | None = None,
+                  tech: TechModel | None = None, resolution: int = 4,
+                  n_macros: int = 256, ib: int = 8,
+                  wb: int = 8) -> MacroSelection:
+    """Synthesize the multi-spec frontier and pick a macro per workload.
+
+    ``workloads`` maps deployed-workload names to GEMM inventories (see
+    :func:`repro.core.dse.gemm_inventory` for the model zoo); ``specs``
+    defaults to the §I scenario set.  Selection is lowest total wallclock on
+    the cross-workload co-design matrix, so a timing-missing candidate is
+    judged at its down-clocked reporting frequency exactly as the scalar
+    accelerator reports would."""
+    if not workloads:
+        raise ValueError("need at least one deployed workload")
+    if tech is None:
+        tech = calibrated_tech_for_reference()
+    if specs is None:
+        specs = scenario_specs()
+    names = tuple(specs)
+    results = mso_search_many([specs[n] for n in names], None, tech,
+                              resolution)
+    pool, labels = frontier_union(results, names)
+    report = cross_workload_codesign(workloads, pool, n_macros=n_macros,
+                                     ib=ib, wb=wb)
+    assignment = {w: report.best_for(w) for w in report.workloads}
+    return MacroSelection(workloads=report.workloads, scenarios=names,
+                          pool_labels=tuple(labels), pool=tuple(pool),
+                          assignment=assignment, codesign=report)

@@ -13,13 +13,16 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import (GemmShape, SubcircuitLibrary, accelerator_report,
-                        batched_workload_matrix, calibrated_tech_for_reference,
+from repro.core import (PARETO_EPS, GemmShape, SubcircuitLibrary,
+                        accelerator_report, batched_workload_matrix,
+                        calibrated_tech_for_reference,
                         cross_workload_codesign, design_space_sweep,
-                        mso_search, mso_search_batched,
-                        pareto_experiment_spec, pareto_front, pareto_indices,
-                        pareto_mask, reference_chip_ppa, reference_chip_spec,
-                        rollup)
+                        dominates, mso_search, mso_search_batched,
+                        nondominated_mask, pareto_experiment_spec,
+                        pareto_front, pareto_indices, pareto_mask,
+                        preference_grid, reference_chip_design,
+                        reference_chip_ppa, reference_chip_spec,
+                        reporting_frequency, rollup)
 
 
 @pytest.fixture(scope="module")
@@ -175,6 +178,220 @@ class TestVectorizedPareto:
         m1 = pareto_mask(objs, chunk=7)
         m2 = pareto_mask(objs, chunk=512)
         assert np.array_equal(m1, m2)
+
+
+# ---------------------------------------------------------------------------
+# Unified tie/epsilon semantics: one PARETO_EPS for every frontier path
+# ---------------------------------------------------------------------------
+
+
+def _near_dup_points(base_pts, jitters):
+    """Adversarial near-duplicate cloud: every base point plus copies jittered
+    right around the PARETO_EPS band (inside, at, and outside it)."""
+    out = []
+    for p in base_pts:
+        out.append(tuple(p))
+        for j in jitters:
+            out.append(tuple(x + j for x in p))
+    return out
+
+
+class TestUnifiedEpsilonSemantics:
+    def test_shared_constant(self):
+        import inspect
+        from repro.core import batched, pareto
+        assert pareto.PARETO_EPS == 1e-12
+        sig = inspect.signature(batched.pareto_mask)
+        assert sig.parameters["eps"].default is pareto.PARETO_EPS
+        assert inspect.signature(dominates).parameters["eps"].default \
+            is pareto.PARETO_EPS
+
+    @given(base=st.lists(st.tuples(st.floats(0.5, 2.0), st.floats(0.5, 2.0),
+                                   st.floats(0.5, 2.0)),
+                         min_size=1, max_size=12),
+           jitter=st.sampled_from([0.0, 3e-13, -3e-13, 9e-13, 2e-12, -2e-12]))
+    @settings(max_examples=40, deadline=None)
+    def test_pareto_indices_equiv_pareto_mask(self, base, jitter):
+        """pareto_indices ≡ pareto_mask on adversarial near-duplicates: same
+        dominance verdicts through the one shared eps band; the only
+        difference is pareto_indices' documented duplicate collapse."""
+        pts = _near_dup_points(base, [jitter, 2 * jitter, 5e-13, -5e-13])
+        objs = np.asarray(pts, dtype=np.float64)
+        mask_batched = pareto_mask(objs)
+        mask_scalar = nondominated_mask(objs)
+        # the jax-chunked and numpy masks are the same predicate
+        assert np.array_equal(mask_batched, mask_scalar)
+        # ... and both match the per-pair scalar dominates() verdicts
+        for i in range(len(pts)):
+            expect = not any(dominates(pts[j], pts[i])
+                             for j in range(len(pts)))
+            assert mask_scalar[i] == expect
+        idx = pareto_indices(pts)
+        # every frontier member survives the mask
+        assert all(mask_scalar[i] for i in idx)
+        # every mask survivor is a frontier member or a collapsed near-dup
+        chosen = objs[idx] if idx else np.empty((0, 3))
+        for i in np.flatnonzero(mask_scalar):
+            assert i in idx or (
+                np.abs(chosen - objs[i]) < PARETO_EPS).all(axis=1).any()
+
+    def test_pareto_indices_scales_to_10k_frontier(self):
+        """Regression: pareto_indices at lattice scale (the per-pair Python
+        walk was O(N^2) and effectively hung here).  A 2-D anti-chain keeps
+        all 10k points non-dominated — the worst case for the frontier walk —
+        and the vectorized path must agree with the mask exactly."""
+        n = 10_000
+        x = np.linspace(0.0, 1.0, n)
+        objs = np.stack([x, 1.0 - x], axis=1)
+        idx = pareto_indices([tuple(o) for o in objs])
+        assert len(idx) == n
+        assert np.array_equal(np.sort(idx), np.arange(n))
+        # documented order: sorted by objective tuple
+        assert idx == sorted(idx, key=lambda i: tuple(objs[i]))
+        # and a mixed case with a dominated half collapses correctly
+        shifted = objs + 0.5
+        both = np.concatenate([objs, shifted])
+        idx2 = pareto_indices([tuple(o) for o in both])
+        assert sorted(idx2) == list(range(n))
+
+    def test_pareto_indices_dedup_keeps_first_occurrence(self):
+        pts = [(2.0, 1.0), (1.0, 2.0), (1.0 + 2e-13, 2.0 - 2e-13),
+               (1.0, 2.0)]
+        idx = pareto_indices(pts)
+        assert idx == [1, 0]      # sorted by objective; near-dups collapsed
+
+    def test_empty_and_singleton(self):
+        assert pareto_indices([]) == []
+        assert pareto_indices([(1.0, 2.0)]) == [0]
+        assert nondominated_mask(np.empty((0, 3))).shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Frequency-clamp consistency: one reporting_frequency for every path
+# ---------------------------------------------------------------------------
+
+
+class TestReportingFrequencyClamp:
+    @pytest.fixture(scope="class")
+    def overdriven(self, tech):
+        """A meets-timing design whose fmax exceeds its (relaxed) spec — the
+        clamp must down-clock it to f_mac."""
+        spec = dataclasses.replace(reference_chip_spec(), f_mac_hz=500e6,
+                                   f_wupdate_hz=500e6)
+        d = dataclasses.replace(reference_chip_design(), spec=spec)
+        ppa = rollup(d, tech)
+        assert ppa.meets_timing and ppa.fmax_hz > spec.f_mac_hz
+        return ppa
+
+    @pytest.fixture(scope="class")
+    def missing(self, tech):
+        """A timing-missing design (impossible 5 GHz target): reported at its
+        raw fmax, never clamped upward to the unreachable spec."""
+        spec = dataclasses.replace(reference_chip_spec(), f_mac_hz=5e9,
+                                   f_wupdate_hz=5e9)
+        d = dataclasses.replace(reference_chip_design(), spec=spec)
+        ppa = rollup(d, tech)
+        assert not ppa.meets_timing and ppa.fmax_hz < spec.f_mac_hz
+        return ppa
+
+    def test_helper_semantics(self, overdriven, missing):
+        f_over = float(reporting_frequency(
+            overdriven.fmax_hz, overdriven.design.spec.f_mac_hz,
+            overdriven.meets_timing))
+        assert f_over == overdriven.design.spec.f_mac_hz
+        f_miss = float(reporting_frequency(
+            missing.fmax_hz, missing.design.spec.f_mac_hz,
+            missing.meets_timing))
+        assert f_miss == missing.fmax_hz
+        # vectorized call gives the same two answers in one shot
+        both = reporting_frequency(
+            [overdriven.fmax_hz, missing.fmax_hz],
+            [overdriven.design.spec.f_mac_hz, missing.design.spec.f_mac_hz],
+            [True, False])
+        assert both.tolist() == [f_over, f_miss]
+
+    @pytest.mark.parametrize("which", ["overdriven", "missing"])
+    def test_scalar_and_batched_reports_clock_identically(self, which,
+                                                          overdriven,
+                                                          missing):
+        ppa = {"overdriven": overdriven, "missing": missing}[which]
+        gemms = [GemmShape("g0", 128, 1024, 1024, 2),
+                 GemmShape("g1", 64, 512, 2048)]
+        rep = accelerator_report(gemms, ppa, n_macros=64)
+        mat = batched_workload_matrix(gemms, [ppa], n_macros=64)
+        expect_f = (min(ppa.fmax_hz, ppa.design.spec.f_mac_hz)
+                    if ppa.meets_timing else ppa.fmax_hz)
+        assert rep.wallclock_s == rep.total_cycles / expect_f
+        assert mat.wallclock_s[0] == rep.wallclock_s
+        assert mat.effective_tops[0] == rep.effective_tops
+
+    def test_lattice_engine_applies_same_clamp(self, tech, missing):
+        """The batched lattice roll-up's reported throughput uses the same
+        clamp: a timing-missing lattice point's tops_1b is computed at raw
+        fmax, a met one at min(fmax, f_mac)."""
+        sweep = design_space_sweep(missing.design.spec, tech)
+        fmax = sweep.ppa.fmax
+        spec_f = missing.design.spec.f_mac_hz
+        f_rep = np.where(sweep.ppa.meets, np.minimum(fmax, spec_f), fmax)
+        valid = sweep.lattice.valid
+        expect = (2.0 * missing.design.spec.h * missing.design.spec.w
+                  * f_rep) / 1e12
+        assert np.array_equal(sweep.ppa.tops_1b[valid], expect[valid])
+
+
+# ---------------------------------------------------------------------------
+# preference_grid + codesign invariance properties
+# ---------------------------------------------------------------------------
+
+
+class TestPreferenceGridProperties:
+    @given(resolution=st.integers(1, 8))
+    @settings(max_examples=8, deadline=None)
+    def test_weights_on_simplex_no_zero_vector(self, resolution):
+        grid = preference_grid(resolution)
+        assert len(grid) == (resolution + 1) * (resolution + 2) // 2
+        assert len(set(grid)) == len(grid)
+        for w in grid:
+            assert len(w) == 3
+            assert all(0.0 <= x <= 1.0 for x in w)
+            assert sum(w) == pytest.approx(1.0, abs=1e-9)
+            assert any(x > 0 for x in w)
+
+    def test_zero_resolution_grid_is_empty(self):
+        assert preference_grid(0) == []
+
+
+class TestCodesignPermutationInvariance:
+    @pytest.fixture(scope="class")
+    def ppas(self, tech):
+        res = mso_search_batched(pareto_experiment_spec(), None, tech,
+                                 resolution=4)
+        return [reference_chip_ppa()] + list(res.explored)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_frontier_invariant_under_workload_permutation(self, ppas, seed):
+        base = {
+            "vision": [GemmShape("conv", 196, 512, 512, 4)],
+            "language": [GemmShape("qkv", 128, 2048, 6144, 8)],
+            "moe": [GemmShape("expert", 64, 1024, 4096, 8)],
+            "speech": [GemmShape("enc", 96, 384, 1536, 4)],
+        }
+        rng = np.random.default_rng(seed)
+        names = list(base)
+        perm = [names[i] for i in rng.permutation(len(names))]
+        a = cross_workload_codesign(base, ppas, n_macros=64)
+        b = cross_workload_codesign({n: base[n] for n in perm}, ppas,
+                                    n_macros=64)
+        assert b.workloads == tuple(perm)
+        assert np.array_equal(a.total_wallclock_s, b.total_wallclock_s)
+        assert np.array_equal(a.total_energy_pj, b.total_energy_pj)
+        assert a.frontier == b.frontier
+        for n in names:
+            ai, bi = a.workloads.index(n), b.workloads.index(n)
+            assert np.array_equal(a.wallclock_s[ai], b.wallclock_s[bi])
+            assert np.array_equal(a.energy_pj[ai], b.energy_pj[bi])
+            assert a.best_for(n) == b.best_for(n)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,243 @@
+"""Multi-spec vmapped co-synthesis engine + serving-time macro selection.
+
+The contract under test (repro.core.multispec / repro.serve.select): the
+spec-batched evaluation is bit-identical per spec to the single-spec batched
+engine, ``mso_search_many`` returns exactly the frontiers of N independent
+``mso_search(backend="batched")`` calls (the PR acceptance pin), grouping
+handles heterogeneous lattice shapes, Pareto chunking is memory-bounded, and
+serving selection assigns each deployed workload its lowest-wallclock macro.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (calibrated_tech_for_reference, design_space_sweep,
+                        design_space_sweep_many, evaluate_many,
+                        frontier_union, mso_search, mso_search_batched,
+                        mso_search_many, pareto_chunk_size,
+                        pareto_experiment_spec, scenario_specs)
+from repro.core import batched as B
+from repro.core.dse import GemmShape
+from repro.serve.select import select_macros
+
+
+@pytest.fixture(scope="module")
+def tech():
+    return calibrated_tech_for_reference()
+
+
+def assert_ppa_equal(a, b):
+    """Bit-exact equality of every scalar field of two MacroPPAs."""
+    assert a.design.name() == b.design.name()
+    assert a.paths == b.paths
+    assert a.fmax_hz == b.fmax_hz
+    assert a.area_um2 == b.area_um2
+    assert a.area_breakdown == b.area_breakdown
+    assert a.e_cycle_fj == b.e_cycle_fj
+    assert a.latency_cycles == b.latency_cycles
+    assert a.tops_1b == b.tops_1b
+    assert a.tops_per_w_1b == b.tops_per_w_1b
+    assert a.tops_per_mm2_1b == b.tops_per_mm2_1b
+    assert a.meets_timing == b.meets_timing
+
+
+def assert_search_identical(a, b):
+    assert a.n_evaluated == b.n_evaluated
+    assert [p.design.name() for p in a.explored] == \
+           [p.design.name() for p in b.explored]
+    assert len(a.frontier) == len(b.frontier)
+    for x, y in zip(a.frontier, b.frontier):
+        assert_ppa_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pin: fused N-spec search == N independent batched searches
+# ---------------------------------------------------------------------------
+
+
+class TestMultiSpecIdentity:
+    def test_scenario_specs_bit_identical_to_per_spec_loop(self, tech):
+        specs = list(scenario_specs().values())
+        many = mso_search_many(specs, None, tech, resolution=4)
+        assert len(many) == len(specs)
+        for spec, res in zip(specs, many):
+            ref = mso_search(spec, None, tech, resolution=4,
+                             backend="batched")
+            assert_search_identical(res, ref)
+
+    def test_heterogeneous_lattice_shapes_group_and_match(self, tech):
+        """Specs with different split axes / mode counts land in different
+        vmap groups; results stay in input order and bit-identical."""
+        base = pareto_experiment_spec()
+        specs = [base,
+                 dataclasses.replace(base, h=8, w=16),        # 2-split lattice
+                 dataclasses.replace(base, fp_precisions=("FP8",)),  # 3 modes
+                 dataclasses.replace(base, mcr=4),
+                 dataclasses.replace(base, vdd=0.7, f_mac_hz=300e6)]
+        many = mso_search_many(specs, None, tech, resolution=4)
+        for spec, res in zip(specs, many):
+            assert res.spec == spec
+            assert_search_identical(
+                res, mso_search_batched(spec, None, tech, resolution=4))
+
+    def test_single_spec_group_matches(self, tech):
+        spec = pareto_experiment_spec()
+        (res,) = mso_search_many([spec], None, tech, resolution=4)
+        assert_search_identical(
+            res, mso_search_batched(spec, None, tech, resolution=4))
+
+    def test_empty_spec_list(self, tech):
+        assert mso_search_many([], None, tech) == []
+
+    def test_requires_tech(self):
+        with pytest.raises(ValueError):
+            mso_search_many([pareto_experiment_spec()], None, None)
+
+
+class TestEvaluateMany:
+    def test_lattice_arrays_bit_identical(self, tech):
+        """The fused evaluation's roll-up arrays equal the single-spec
+        engine's for every lattice point (NaNs in invalid lanes included)."""
+        scen = scenario_specs()
+        specs = [scen["vision"], scen["cloud"]]
+        evals = evaluate_many(specs, tech)
+        for spec, (lattice, tables, ppa) in zip(specs, evals):
+            ref = design_space_sweep(spec, tech).ppa
+            for fld in ("mac", "sa", "ofu", "crit", "fmax", "area",
+                        "latency", "tops_1b", "tops_mm2"):
+                assert np.array_equal(getattr(ppa, fld), getattr(ref, fld),
+                                      equal_nan=True), fld
+            assert np.array_equal(ppa.meets, ref.meets)
+            assert set(ppa.e_cycle) == set(ref.e_cycle)
+            for m in ppa.e_cycle:
+                assert np.array_equal(ppa.e_cycle[m], ref.e_cycle[m],
+                                      equal_nan=True), m
+            for m in ppa.tops_w:
+                assert np.array_equal(ppa.tops_w[m], ref.tops_w[m],
+                                      equal_nan=True), m
+
+    def test_sweep_many_frontiers_match_single(self, tech):
+        scen = scenario_specs()
+        specs = [scen["vision"], scen["wearable"]]
+        sweeps = design_space_sweep_many(specs, tech)
+        for spec, sweep in zip(specs, sweeps):
+            single = design_space_sweep(spec, tech)
+            assert sweep.frontier_indices() == single.frontier_indices()
+
+
+# ---------------------------------------------------------------------------
+# Scenario specs + Pareto chunk sizing
+# ---------------------------------------------------------------------------
+
+
+class TestScenarioSpecs:
+    def test_four_distinct_valid_scenarios(self):
+        specs = scenario_specs()
+        assert set(specs) == {"vision", "language", "cloud", "wearable"}
+        assert len({(s.mcr, s.f_mac_hz, s.vdd) for s in specs.values()}) == 4
+
+    def test_one_vmap_group(self, tech):
+        """The scenario set is deliberately one vmap group (shared geometry)."""
+        from repro.core.multispec import _group_key
+        from repro.core.batched import DesignLattice, SpecTables
+        import repro.core.subcircuits as sc
+        keys = set()
+        for s in scenario_specs().values():
+            lat = DesignLattice.enumerate(s, (sc.MemCellKind.SRAM_6T,))
+            keys.add(_group_key(lat, SpecTables(s, tech)))
+        assert len(keys) == 1
+
+
+class TestParetoChunkSize:
+    def test_bounds(self):
+        assert pareto_chunk_size(0) == 64
+        assert pareto_chunk_size(100) == 100          # never above n_points
+        assert pareto_chunk_size(10**9) == 64         # floor under huge n
+        big = pareto_chunk_size(10_000)
+        assert 64 <= big <= 10_000
+
+    def test_budget_scales_chunk(self):
+        small = pareto_chunk_size(100_000, budget_bytes=1 << 20)
+        large = pareto_chunk_size(100_000, budget_bytes=1 << 30)
+        assert small == 64                            # floored tiny budget
+        assert large == (1 << 30) // (100_000 * 5)    # footprint-bounded
+
+    def test_mask_invariant_under_sized_chunk(self):
+        rng = np.random.default_rng(3)
+        objs = rng.uniform(0.1, 10.0, size=(500, 3))
+        chunk = pareto_chunk_size(len(objs), budget_bytes=1 << 16)
+        assert chunk < 500
+        assert np.array_equal(B.pareto_mask(objs, chunk=chunk),
+                              B.pareto_mask(objs, chunk=512))
+
+
+# ---------------------------------------------------------------------------
+# Serving-time macro selection
+# ---------------------------------------------------------------------------
+
+
+def _toy_workloads():
+    return {
+        "vision": [GemmShape("conv_as_gemm", 196, 512, 512, 4),
+                   GemmShape("head", 196, 512, 1000)],
+        "language": [GemmShape("qkv", 128, 2048, 6144, 16),
+                     GemmShape("mlp", 128, 2048, 8192, 16)],
+    }
+
+
+class TestServingSelection:
+    @pytest.fixture(scope="class")
+    def selection(self, tech):
+        return select_macros(_toy_workloads(), tech=tech, resolution=3,
+                             n_macros=64)
+
+    def test_assignment_covers_workloads(self, selection):
+        assert set(selection.assignment) == set(_toy_workloads())
+        assert set(selection.workloads) == set(_toy_workloads())
+
+    def test_assigned_macro_minimizes_wallclock(self, selection):
+        for w in selection.workloads:
+            wi = selection.codesign.workloads.index(w)
+            di = selection.assignment[w]
+            assert selection.codesign.wallclock_s[wi, di] == \
+                selection.codesign.wallclock_s[wi].min()
+
+    def test_pool_is_frontier_union(self, selection, tech):
+        results = mso_search_many(
+            [scenario_specs()[n] for n in selection.scenarios], None, tech,
+            resolution=3)
+        expect = frontier_union(results)
+        assert [p.design.name() for p in selection.pool] == \
+               [p.design.name() for p in expect]
+        assert len(selection.pool_labels) == len(selection.pool)
+        for lbl in selection.pool_labels:
+            scen, _, design = lbl.partition("/")
+            assert scen in selection.scenarios and design
+
+    def test_labels_and_ppa_accessors(self, selection):
+        for w in selection.workloads:
+            assert selection.label_for(w) == \
+                selection.pool_labels[selection.assignment[w]]
+            assert selection.ppa_for(w) is selection.pool[selection.assignment[w]]
+        s = selection.summary()
+        assert s["candidates"] == len(selection.pool)
+        assert set(s["assignment"]) == set(selection.workloads)
+
+    def test_rejects_empty_workloads(self, tech):
+        with pytest.raises(ValueError):
+            select_macros({}, tech=tech)
+
+    def test_frontier_union_keeps_same_name_across_specs(self, tech):
+        """Identical design names synthesized for different specs are
+        distinct serving candidates (a name does not encode its spec)."""
+        scen = scenario_specs()
+        results = mso_search_many([scen["vision"], scen["language"]], None,
+                                  tech, resolution=3)
+        pool = frontier_union(results)
+        names = [p.design.name() for p in pool]
+        shared = set(p.design.name() for p in results[0].frontier) \
+            & set(p.design.name() for p in results[1].frontier)
+        for nm in shared:
+            assert names.count(nm) == 2
