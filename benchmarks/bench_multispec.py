@@ -15,24 +15,23 @@ from repro.core import batched as B
 from repro.core import calibrated_tech_for_reference
 from repro.core.dse import gemm_inventory
 from repro.core.multispec import mso_search_many, scenario_specs
+from repro.core.shardspec import spec_variants
 from repro.serve.select import select_macros
 
-from .common import timed
+from .common import frontiers_identical, timed
 
 GRID_RESOLUTION = 5
 SELECT_ARCHS = ("qwen3-4b", "internvl2-1b", "granite-moe-1b-a400m")
+SPEC_SEED = 0          # posture variants are seeded -> identical every run
 
 
 def _spec_set() -> list:
-    """The §I scenario specs plus constraint variants — a realistic
-    multi-macro co-synthesis request."""
+    """The §I scenario specs plus seeded posture variants and one
+    heterogeneous-geometry spec — a realistic multi-macro co-synthesis
+    request, deterministic across runs."""
     scen = scenario_specs()
     specs = list(scen.values())
-    specs.append(dataclasses.replace(scen["vision"], f_mac_hz=600e6,
-                                     f_wupdate_hz=600e6))
-    specs.append(dataclasses.replace(scen["cloud"], mcr=4))
-    specs.append(dataclasses.replace(scen["wearable"], vdd=0.8,
-                                     f_mac_hz=400e6, f_wupdate_hz=400e6))
+    specs += spec_variants(3, base=scen["vision"], seed=SPEC_SEED)
     specs.append(dataclasses.replace(scen["language"], h=128, w=128))
     return specs
 
@@ -56,13 +55,7 @@ def run() -> list[tuple]:
     loop_res, us_loop = timed(per_spec_loop, iters=3)
     many_res, us_many = timed(fused, iters=3)
 
-    identical = all(
-        len(a.frontier) == len(b.frontier)
-        and all(x.design.name() == y.design.name()
-                and x.e_cycle_fj == y.e_cycle_fj
-                and x.area_um2 == y.area_um2 and x.fmax_hz == y.fmax_hz
-                for x, y in zip(a.frontier, b.frontier))
-        for a, b in zip(loop_res, many_res))
+    identical = frontiers_identical(loop_res, many_res)
     frontier_pts = sum(len(r.frontier) for r in many_res)
 
     rows = [

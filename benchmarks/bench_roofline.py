@@ -1,6 +1,11 @@
 """Roofline table from the dry-run artifacts (artifacts/dryrun/*.json):
 three terms per (arch x shape x mesh) + dominant bottleneck + MODEL_FLOPS
-ratio.  Run the dry-run first; this bench only reads its outputs."""
+ratio.  Run the dry-run first; this bench only reads its outputs.
+
+Also emits the DCIM serving roofline per deployed scenario: each workload's
+selected macro (multi-spec frontier + preference-aware selection) fed through
+``repro.roofline.dcim`` — roofline-bounded tokens/s, not just macro
+wallclock.  These rows need no dry-run artifacts."""
 
 from __future__ import annotations
 
@@ -8,9 +13,19 @@ import json
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config
+from repro.core import calibrated_tech_for_reference
+from repro.core.dse import gemm_inventory
 from repro.roofline import hw
+from repro.serve.select import select_macros
+
+from .common import timed
 
 ARTIFACTS = Path("artifacts/dryrun")
+
+DCIM_ARCHS = ("qwen3-4b", "internvl2-1b")
+DCIM_RESOLUTION = 3
+#: One preference posture per serving scenario: latency-first and energy-lean.
+DCIM_PREFS = {"wallclock": (1.0, 0.0, 0.0), "energy": (0.2, 0.6, 0.2)}
 
 
 def model_flops_per_step(arch: str, shape_name: str) -> float:
@@ -45,12 +60,42 @@ def roofline_row(rec: dict) -> dict:
             "useful_flops_frac": useful, "roofline_mfu_bound": mfu_bound}
 
 
-def run() -> list[tuple]:
+def dcim_serving_rows() -> list[tuple]:
+    """Serving roofline of each deployed workload on its selected macro, for
+    both preference postures (the compiler->serving feedback loop).  The
+    multi-spec synthesis + co-design matrix is built once; each posture only
+    re-scalarizes the shared pooled frontier."""
+    from repro.roofline.dcim import dcim_serving_bound
+    from repro.serve.select import preferred_macro
+
+    tech = calibrated_tech_for_reference()
+    workloads = {a: gemm_inventory(get_config(a)) for a in DCIM_ARCHS}
+    sel, us = timed(lambda: select_macros(
+        workloads, tech=tech, resolution=DCIM_RESOLUTION), warmup=0, iters=1)
     rows = []
+    for pname, pref in sorted(DCIM_PREFS.items()):
+        for w in sel.workloads:
+            wi = sel.codesign.workloads.index(w)
+            di = preferred_macro(sel.codesign, w, pref)
+            est = dcim_serving_bound(
+                workloads[w], float(sel.codesign.wallclock_s[wi, di]),
+                workload=w, macro=sel.pool_labels[di])
+            rows.append((f"roofline/dcim/{pname}/{w}", us,
+                         f"macro={sel.pool_labels[di]};"
+                         f"tok_s={est.tokens_per_s:.1f};"
+                         f"bound={est.bottleneck};"
+                         f"t_macro_ms={est.t_macro_s * 1e3:.4f};"
+                         f"t_hbm_ms={est.t_hbm_s * 1e3:.4f}"))
+    return rows
+
+
+def run() -> list[tuple]:
+    rows = dcim_serving_rows()
     sets = [("baseline", ARTIFACTS), ("optimized", Path("artifacts/optimized"))]
     if not any(d.exists() for _, d in sets):
-        return [("roofline/missing", 0.0,
-                 "run `python -m repro.launch.dryrun --all --mesh both` first")]
+        return rows + [
+            ("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --mesh both` first")]
     for label, artdir in sets:
         if not artdir.exists():
             continue

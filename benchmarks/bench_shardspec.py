@@ -1,0 +1,50 @@
+"""Device-sharded 100+-spec co-synthesis: ``mso_search_many_sharded`` vs the
+unsharded vmapped pass on the same deterministic spec sweep.
+
+The tracked row is ``shardspec/shard_speedup``: the sharded engine must keep
+returning bit-identical per-spec frontiers (the differential oracle harness
+pins this against the scalar path too) while the spec axis is partitioned
+across every visible device.  On 1 host device the two paths coincide
+(speedup ~1x); CI also runs this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``-style fake-device
+splits via the sharded test suite."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import calibrated_tech_for_reference
+from repro.core.multispec import mso_search_many
+from repro.core.shardspec import (mso_search_many_sharded, resolve_mode,
+                                  spec_variants)
+
+from .common import frontiers_identical, timed
+
+N_SPECS = 104          # a real 100+-spec sweep request
+SPEC_SEED = 0          # deterministic sweep across runs
+GRID_RESOLUTION = 4
+
+
+def run() -> list[tuple]:
+    tech = calibrated_tech_for_reference()
+    specs = spec_variants(N_SPECS, seed=SPEC_SEED)
+    mode = resolve_mode("auto")
+    n_dev = len(jax.devices())
+
+    ref, us_ref = timed(lambda: mso_search_many(
+        specs, None, tech, resolution=GRID_RESOLUTION), iters=2)
+    got, us_shard = timed(lambda: mso_search_many_sharded(
+        specs, None, tech, resolution=GRID_RESOLUTION), iters=2)
+
+    identical = frontiers_identical(ref, got)
+    frontier_pts = sum(len(r.frontier) for r in got)
+
+    return [
+        (f"shardspec/search_unsharded/{N_SPECS}specs", us_ref,
+         f"frontier_pts={frontier_pts}"),
+        (f"shardspec/search_sharded/{N_SPECS}specs", us_shard,
+         f"devices={n_dev};mode={mode}"),
+        ("shardspec/shard_speedup", us_shard,
+         f"speedup={us_ref / us_shard:.2f}x;identical={identical};"
+         f"devices={n_dev};mode={mode};specs={N_SPECS}"),
+    ]

@@ -39,3 +39,23 @@ def rows_to_dicts(module: str, rows: list[tuple]) -> list[dict]:
                     "us_per_call": round(us, 1), "derived": derived,
                     "metrics": metrics})
     return out
+
+
+def frontier_key(p):
+    """Stable sort key for frontier MacroPPAs."""
+    return (p.design.name(), p.area_um2, p.fmax_hz)
+
+
+def frontiers_identical(results_a, results_b) -> bool:
+    """Sorted-frontier equivalence over two SearchResult sequences:
+    near-PARETO_EPS ties may legitimately reorder between paths/runs, never
+    differ in membership or values — so benches compare membership and
+    per-point values after a stable sort."""
+    return all(
+        len(a.frontier) == len(b.frontier)
+        and all(x.design.name() == y.design.name()
+                and x.e_cycle_fj == y.e_cycle_fj
+                and x.area_um2 == y.area_um2 and x.fmax_hz == y.fmax_hz
+                for x, y in zip(sorted(a.frontier, key=frontier_key),
+                                sorted(b.frontier, key=frontier_key)))
+        for a, b in zip(results_a, results_b))

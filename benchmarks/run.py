@@ -13,7 +13,8 @@ import traceback
 
 from . import (bench_csa, bench_dse, bench_fig7_energy, bench_fig8_pareto,
                bench_fig9_shmoo, bench_kernels, bench_multispec,
-               bench_roofline, bench_table1_features, bench_table2_sota)
+               bench_roofline, bench_shardspec, bench_table1_features,
+               bench_table2_sota)
 from .common import emit, rows_to_dicts
 
 MODULES = [
@@ -26,6 +27,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("dse", bench_dse),
     ("multispec", bench_multispec),
+    ("shardspec", bench_shardspec),
     ("roofline", bench_roofline),
 ]
 

@@ -40,6 +40,9 @@ _BATCHED_EXPORTS = ("BatchedPPA", "BatchedSweep", "DesignLattice",
                     "pareto_mask")
 _MULTISPEC_EXPORTS = ("design_space_sweep_many", "evaluate_many",
                       "frontier_union", "mso_search_many", "scenario_specs")
+_SHARDSPEC_EXPORTS = ("design_space_sweep_many_sharded",
+                      "evaluate_many_sharded", "mso_search_many_sharded",
+                      "spec_variants")
 
 
 def __getattr__(name: str):
@@ -49,6 +52,9 @@ def __getattr__(name: str):
     if name in _MULTISPEC_EXPORTS:
         from . import multispec
         return getattr(multispec, name)
+    if name in _SHARDSPEC_EXPORTS:
+        from . import shardspec
+        return getattr(shardspec, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -57,6 +63,8 @@ __all__ = [
     "design_space_sweep", "mso_search_batched", "pareto_mask",
     "design_space_sweep_many", "evaluate_many", "frontier_union",
     "mso_search_many", "pareto_chunk_size", "scenario_specs",
+    "design_space_sweep_many_sharded", "evaluate_many_sharded",
+    "mso_search_many_sharded", "spec_variants",
     "CSADesign", "CSAReport", "FAMILY", "build_netlist", "characterize",
     "AcceleratorReport", "CodesignReport", "GemmShape", "WorkloadMatrix",
     "accelerator_report", "batched_workload_matrix",

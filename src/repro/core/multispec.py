@@ -96,10 +96,15 @@ def _group_key(lattice: DesignLattice, tables: SpecTables):
     return (lattice.dims, lattice.splits, len(tables.modes))
 
 
-def _evaluate_group(lattices: Sequence[DesignLattice],
-                    tables_list: Sequence[SpecTables]) -> list[BatchedPPA]:
-    """One vmapped kernel launch for a group of same-shape specs, then the
-    shared single-spec numpy tail per spec (bit-identity by construction)."""
+def _pack_group(lattices: Sequence[DesignLattice],
+                tables_list: Sequence[SpecTables]):
+    """numpy-side operands for one vmapped group launch.
+
+    Returns ``(csa_i, idx, operands)`` where ``idx`` is the shared gather
+    tuple (one copy for the whole group) and ``operands`` stacks every
+    per-spec kernel input along a leading spec axis.  The sharded engine
+    (:mod:`repro.core.shardspec`) packs through this same helper and then
+    pads/places the stacked axis across devices."""
     lat0, t0 = lattices[0], tables_list[0]
     csa_i = np.asarray(t0.csa_index(lat0.rho_i, lat0.ro, lat0.rt, lat0.sp_i))
     packed = [B._kernel_inputs(t) for t in tables_list]
@@ -108,18 +113,48 @@ def _evaluate_group(lattices: Sequence[DesignLattice],
     consts_s = np.stack([p[1] for p in packed], dtype=np.float64)
     e_ofu_s = np.stack([p[2] for p in packed], dtype=np.float64)
     e_align_s = np.stack([p[3] for p in packed], dtype=np.float64)
+    idx = (lat0.mem_i, lat0.mm_i, csa_i, lat0.pipe_i, lat0.ort, lat0.fts,
+           lat0.fso)
+    return csa_i, idx, (tabs_s, consts_s, e_ofu_s, e_align_s)
+
+
+def _unpack_group(lattices: Sequence[DesignLattice],
+                  tables_list: Sequence[SpecTables], csa_i: np.ndarray,
+                  out: dict) -> list[BatchedPPA]:
+    """The shared single-spec numpy tail, applied per spec lane of one
+    group's kernel outputs (bit-identity by construction)."""
+    return [B._finish(lattices[s], tables_list[s], csa_i,
+                      jax.tree.map(lambda a: a[s], out))
+            for s in range(len(lattices))]
+
+
+def _evaluate_group(lattices: Sequence[DesignLattice],
+                    tables_list: Sequence[SpecTables]) -> list[BatchedPPA]:
+    """One vmapped kernel launch for a group of same-shape specs, then the
+    shared single-spec numpy tail per spec (bit-identity by construction)."""
+    csa_i, idx_np, (tabs_s, consts_s, e_ofu_s, e_align_s) = \
+        _pack_group(lattices, tables_list)
     with enable_x64():
-        idx = (jnp.asarray(lat0.mem_i), jnp.asarray(lat0.mm_i),
-               jnp.asarray(csa_i), jnp.asarray(lat0.pipe_i),
-               jnp.asarray(lat0.ort), jnp.asarray(lat0.fts),
-               jnp.asarray(lat0.fso))
+        idx = tuple(jnp.asarray(a) for a in idx_np)
         out = _eval_kernel_many(idx, tuple(jnp.asarray(t) for t in tabs_s),
                                 jnp.asarray(consts_s), jnp.asarray(e_ofu_s),
                                 jnp.asarray(e_align_s))
         out = jax.tree.map(np.asarray, out)
-    return [B._finish(lattices[s], tables_list[s], csa_i,
-                      jax.tree.map(lambda a: a[s], out))
-            for s in range(len(lattices))]
+    return _unpack_group(lattices, tables_list, csa_i, out)
+
+
+def _grouped(specs: Sequence[MacroSpec], tech: TechModel,
+             memcells: tuple[sc.MemCellKind, ...]
+             ) -> tuple[list[DesignLattice], list[SpecTables],
+                        dict[tuple, list[int]]]:
+    """Characterize every spec and bucket them into vmap groups (shared with
+    the sharded engine so both paths group identically)."""
+    lattices = [DesignLattice.enumerate(s, tuple(memcells)) for s in specs]
+    tables = [SpecTables(s, tech) for s in specs]
+    groups: dict[tuple, list[int]] = {}
+    for i, (lat, tab) in enumerate(zip(lattices, tables)):
+        groups.setdefault(_group_key(lat, tab), []).append(i)
+    return lattices, tables, groups
 
 
 def evaluate_many(specs: Sequence[MacroSpec], tech: TechModel,
@@ -129,11 +164,7 @@ def evaluate_many(specs: Sequence[MacroSpec], tech: TechModel,
     through one vmapped kernel launch.  Results are returned in input order
     and are bit-identical per spec to :func:`repro.core.batched.evaluate`."""
     specs = list(specs)
-    lattices = [DesignLattice.enumerate(s, tuple(memcells)) for s in specs]
-    tables = [SpecTables(s, tech) for s in specs]
-    groups: dict[tuple, list[int]] = {}
-    for i, (lat, tab) in enumerate(zip(lattices, tables)):
-        groups.setdefault(_group_key(lat, tab), []).append(i)
+    lattices, tables, groups = _grouped(specs, tech, memcells)
     out: list = [None] * len(specs)
     for members in groups.values():
         ppas = _evaluate_group([lattices[i] for i in members],

@@ -11,11 +11,24 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types where the runtime has them.
+
+    Capability is detected with ``hasattr`` — never a version pin — so the
+    same call works on the pinned jax 0.4.37 (whose ``make_mesh`` takes no
+    ``axis_types`` and whose ``jax.sharding`` has no ``AxisType``) and
+    un-gates automatically on newer jax."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(shape: tuple[int, ...] = (1, 1),
@@ -27,5 +40,4 @@ def make_host_mesh(shape: tuple[int, ...] = (1, 1),
     avail = len(jax.devices())
     if n > avail:
         shape = (1,) * (len(shape) - 1) + (avail,)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)

@@ -41,22 +41,35 @@ def main() -> None:
                          "multi-spec synthesized frontier before serving")
     ap.add_argument("--dcim-macros", type=int, default=256,
                     help="macro-array size assumed for --dcim-select")
+    ap.add_argument("--dcim-pref", default=None, metavar="W,E,A",
+                    help="preference weights wallclock,energy,area for "
+                         "--dcim-select (e.g. 0.2,0.6,0.2); default: pure "
+                         "wallclock")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.dcim_select:
         from ..core.dse import gemm_inventory
         from ..serve.select import select_macros
+        pref = None
+        if args.dcim_pref is not None:
+            pref = tuple(float(x) for x in args.dcim_pref.split(","))
         sel = select_macros({cfg.name: gemm_inventory(cfg)},
-                            n_macros=args.dcim_macros)
+                            n_macros=args.dcim_macros, preference=pref)
         wi = sel.codesign.workloads.index(cfg.name)
         di = sel.assignment[cfg.name]
+        est = sel.serving_for(cfg.name)
         print(f"dcim: {len(sel.pool)} frontier candidates from scenarios "
-              f"{', '.join(sel.scenarios)}")
+              f"{', '.join(sel.scenarios)}"
+              + (f", preference={pref}" if pref else ""))
         print(f"dcim: selected {sel.label_for(cfg.name)} for {cfg.name} "
               f"({args.dcim_macros} macros, "
               f"eff_tops={sel.codesign.effective_tops[wi, di]:.3f}, "
               f"util={sel.codesign.avg_util[wi, di]:.3f})")
+        print(f"dcim: serving roofline {est.tokens_per_s:.1f} tok/s "
+              f"({est.bottleneck}-bound: macro {est.t_macro_s * 1e3:.3f} ms "
+              f"vs hbm {est.t_hbm_s * 1e3:.3f} ms per "
+              f"{est.tokens}-token step)")
     api = get_model(cfg)
     dims, axes = parse_mesh(args.mesh)
     mesh = make_host_mesh(dims, axes)

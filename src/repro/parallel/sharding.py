@@ -55,7 +55,23 @@ MESH_RULES: dict[str, Any] = {
     "act_heads": "model",
     "act_ff": "model",
     "act_vocab": "model",
+    # DCIM compiler sweeps: the stacked macro-spec axis of the multi-spec
+    # synthesis engine (repro.core.shardspec) — one lane per spec, sharded
+    # across whatever devices the sweep mesh exposes:
+    "spec": "spec",
 }
+
+
+def spec_sweep_mesh(devices=None) -> Mesh:
+    """1-D ('spec',) mesh over the given (default: all) devices — the
+    placement the sharded multi-spec engine hands to ``rules_for_mesh``.
+    Built with the plain Mesh constructor so it works on every jax the repo
+    supports (``jax.make_mesh`` axis types are not needed: the engine's
+    kernel is embarrassingly parallel along the spec axis)."""
+    import numpy as _np
+    if devices is None:
+        devices = jax.devices()
+    return Mesh(_np.asarray(devices), ("spec",))
 
 
 def rules_for_mesh(mesh: Mesh, overrides: dict[str, Any] | None = None

@@ -6,26 +6,90 @@ answer "which synthesized macro runs *this* deployed workload best?".  This
 module is that bridge: it pools the per-spec Pareto frontiers, batch-maps
 every deployed workload's GEMM inventory onto every candidate
 (:func:`repro.core.dse.cross_workload_codesign` — which applies the same
-timing-clamp as the scalar reports), and assigns each workload the
-lowest-wallclock design.
+timing-clamp as the scalar reports), and assigns each workload a macro.
+
+Selection is preference-aware: a ``preference`` weight vector over
+(wallclock, energy, area) scalarizes the candidates *restricted to the
+pooled per-workload Pareto frontier* (the shared
+:data:`repro.core.pareto.PARETO_EPS` dominance band — an eps-dominated
+candidate is never selected).  Without a preference the legacy behaviour is
+kept: lowest wallclock over all candidates.  Each workload's selected macro
+PPA is then fed back into the serving roofline
+(:func:`repro.roofline.dcim.dcim_serving_bound`), so the selection reports
+roofline-bounded tokens/s, not just macro wallclock.
 
     from repro.configs import get_config
     from repro.core.dse import gemm_inventory
     from repro.serve.select import select_macros
 
-    sel = select_macros({"qwen3-4b": gemm_inventory(get_config("qwen3-4b"))})
-    sel.assignment["qwen3-4b"]        # -> label of the chosen macro
+    sel = select_macros({"qwen3-4b": gemm_inventory(get_config("qwen3-4b"))},
+                        preference=(0.2, 0.6, 0.2))     # energy-leaning
+    sel.assignment["qwen3-4b"]        # -> pool index of the chosen macro
+    sel.serving["qwen3-4b"].tokens_per_s
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Mapping, Sequence
+
+import numpy as np
 
 from ..core.dse import CodesignReport, GemmShape, cross_workload_codesign
 from ..core.macro import MacroSpec, calibrated_tech_for_reference
 from ..core.multispec import frontier_union, mso_search_many, scenario_specs
+from ..core.pareto import nondominated_mask, scalarize
 from ..core.tech import TechModel
+from ..roofline.dcim import DcimServingEstimate, dcim_serving_bound
+
+#: Objective order of a selection preference vector.
+PREFERENCE_OBJECTIVES = ("wallclock", "energy", "area")
+
+
+def preference_select(objs, weights) -> int:
+    """Index of the preferred candidate in an (n, 3) objective matrix
+    (minimization; columns ordered as :data:`PREFERENCE_OBJECTIVES`).
+
+    Semantics, pinned by ``tests/test_preference_selection.py``:
+
+      * candidates are first restricted to the pooled Pareto frontier under
+        the shared :data:`repro.core.pareto.PARETO_EPS` band — an
+        eps-dominated candidate is never selected;
+      * the survivors are scalarized with :func:`repro.core.pareto.scalarize`
+        against per-objective frontier minima, so weights are scale-free
+        (rescaling all weights by c > 0 cannot change the winner);
+      * a degenerate all-zero weight vector falls back to pure wallclock;
+      * ties break deterministically on (score, objective tuple, index).
+    """
+    objs = np.asarray(objs, dtype=np.float64)
+    if objs.ndim != 2 or objs.shape[0] == 0:
+        raise ValueError("need a non-empty (n, k) objective matrix")
+    w = np.asarray(weights, dtype=np.float64)
+    if w.shape != (objs.shape[1],):
+        raise ValueError(f"need {objs.shape[1]} preference weights "
+                         f"{PREFERENCE_OBJECTIVES}, got {w.shape}")
+    if (w < 0).any() or not np.isfinite(w).all():
+        raise ValueError("preference weights must be finite and >= 0")
+    if not (w > 0).any():
+        w = np.zeros_like(w)
+        w[0] = 1.0                       # degenerate -> wallclock
+    cand = np.flatnonzero(nondominated_mask(objs))
+    refs = [max(float(objs[cand, j].min()), 1e-30)
+            for j in range(objs.shape[1])]
+    scored = sorted((scalarize(w, objs[i], refs), tuple(objs[i]), int(i))
+                    for i in cand)
+    return scored[0][2]
+
+
+def preferred_macro(report: CodesignReport, workload: str,
+                    preference: Sequence[float]) -> int:
+    """Preference-weighted pick for one workload over the co-design matrix:
+    objectives are (wallclock on this workload, energy on this workload,
+    macro-array area)."""
+    wi = report.workloads.index(workload)
+    objs = np.stack([report.wallclock_s[wi], report.energy_pj[wi],
+                     report.area_mm2], axis=1)
+    return preference_select(objs, preference)
 
 
 @dataclass(frozen=True)
@@ -38,6 +102,8 @@ class MacroSelection:
     pool: tuple                          # candidate MacroPPAs (frontier union)
     assignment: dict                     # workload name -> pool index
     codesign: CodesignReport
+    preference: tuple[float, ...] | None = None
+    serving: dict = field(default_factory=dict)  # workload -> DcimServingEstimate
 
     def label_for(self, workload: str) -> str:
         return self.pool_labels[self.assignment[workload]]
@@ -45,28 +111,41 @@ class MacroSelection:
     def ppa_for(self, workload: str):
         return self.pool[self.assignment[workload]]
 
+    def serving_for(self, workload: str) -> DcimServingEstimate:
+        return self.serving[workload]
+
     def summary(self) -> dict:
         return {
             "scenarios": list(self.scenarios),
             "candidates": len(self.pool),
             "codesign_frontier": len(self.codesign.frontier),
             "assignment": {w: self.label_for(w) for w in self.workloads},
+            "preference": (list(self.preference)
+                           if self.preference is not None else None),
+            "serving_tokens_per_s": {
+                w: round(self.serving[w].tokens_per_s, 1)
+                for w in self.workloads if w in self.serving},
         }
 
 
 def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
                   specs: Mapping[str, MacroSpec] | None = None,
                   tech: TechModel | None = None, resolution: int = 4,
-                  n_macros: int = 256, ib: int = 8,
-                  wb: int = 8) -> MacroSelection:
+                  n_macros: int = 256, ib: int = 8, wb: int = 8,
+                  preference: Sequence[float] | None = None
+                  ) -> MacroSelection:
     """Synthesize the multi-spec frontier and pick a macro per workload.
 
     ``workloads`` maps deployed-workload names to GEMM inventories (see
     :func:`repro.core.dse.gemm_inventory` for the model zoo); ``specs``
-    defaults to the §I scenario set.  Selection is lowest total wallclock on
-    the cross-workload co-design matrix, so a timing-missing candidate is
-    judged at its down-clocked reporting frequency exactly as the scalar
-    accelerator reports would."""
+    defaults to the §I scenario set.  Without ``preference``, selection is
+    lowest total wallclock on the cross-workload co-design matrix (a
+    timing-missing candidate is judged at its down-clocked reporting
+    frequency exactly as the scalar accelerator reports would); with a
+    ``preference`` (wallclock, energy, area) the pick is the scalarized best
+    of the workload's pooled Pareto frontier (:func:`preference_select`).
+    Either way, each workload's selected macro is fed through the serving
+    roofline so the selection carries tokens/s bounds, not just wallclock."""
     if not workloads:
         raise ValueError("need at least one deployed workload")
     if tech is None:
@@ -79,7 +158,20 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     pool, labels = frontier_union(results, names)
     report = cross_workload_codesign(workloads, pool, n_macros=n_macros,
                                      ib=ib, wb=wb)
-    assignment = {w: report.best_for(w) for w in report.workloads}
+    if preference is None:
+        assignment = {w: report.best_for(w) for w in report.workloads}
+    else:
+        preference = tuple(float(x) for x in preference)
+        assignment = {w: preferred_macro(report, w, preference)
+                      for w in report.workloads}
+    serving = {}
+    for w in report.workloads:
+        wi = report.workloads.index(w)
+        di = assignment[w]
+        serving[w] = dcim_serving_bound(
+            workloads[w], float(report.wallclock_s[wi, di]), ib=ib, wb=wb,
+            workload=w, macro=labels[di])
     return MacroSelection(workloads=report.workloads, scenarios=names,
                           pool_labels=tuple(labels), pool=tuple(pool),
-                          assignment=assignment, codesign=report)
+                          assignment=assignment, codesign=report,
+                          preference=preference, serving=serving)

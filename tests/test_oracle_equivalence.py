@@ -1,0 +1,233 @@
+"""Differential oracle harness: every execution path of the MSO engine
+agrees bit-for-bit with the scalar reference.
+
+The engine has grown four ways to run Algorithm 1 — the scalar per-point
+hierarchy (``mso_search``), the single-spec batched lattice replay
+(``backend="batched"``), the multi-spec vmapped pass (``mso_search_many``),
+and the device-sharded pass (``mso_search_many_sharded``, jit-NamedSharding
+and pmap modes).  PRs 1-2 proved their equivalences ad hoc; this is the
+systematic replacement: one parametrized harness asserting, for every
+alternate path, against the scalar oracle,
+
+  * Alg.-1 selection order — the explored design sequence is identical;
+  * frontier membership — same designs, in the same order;
+  * PPA values — every scalar field of every frontier point is bit-exact.
+
+across the §I scenario set and hypothesis-generated random specs, on however
+many devices the process sees (CI re-runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the in-file
+subprocess drill covers the 8-device ragged-padding case regardless).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import calibrated_tech_for_reference, mso_search
+from repro.core.macro import MacroSpec
+from repro.core.multispec import mso_search_many, scenario_specs
+from repro.core.shardspec import (mso_search_many_sharded, resolve_mode,
+                                  spec_variants)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def tech():
+    return calibrated_tech_for_reference()
+
+
+# ---------------------------------------------------------------------------
+# The differential contract
+# ---------------------------------------------------------------------------
+
+
+def assert_ppa_equal(a, b):
+    """Bit-exact equality of every scalar field of two MacroPPAs."""
+    assert a.design.name() == b.design.name()
+    assert a.paths == b.paths
+    assert a.fmax_hz == b.fmax_hz
+    assert a.area_um2 == b.area_um2
+    assert a.area_breakdown == b.area_breakdown
+    assert a.e_cycle_fj == b.e_cycle_fj
+    assert a.latency_cycles == b.latency_cycles
+    assert a.tops_1b == b.tops_1b
+    assert a.tops_per_w_1b == b.tops_per_w_1b
+    assert a.tops_per_mm2_1b == b.tops_per_mm2_1b
+    assert a.meets_timing == b.meets_timing
+
+
+def assert_search_identical(got, oracle):
+    """The full differential contract for one spec's SearchResult."""
+    assert got.spec == oracle.spec
+    assert got.n_evaluated == oracle.n_evaluated
+    # Alg.-1 selection order: the explored sequence, not just its set.
+    assert [p.design.name() for p in got.explored] == \
+           [p.design.name() for p in oracle.explored]
+    # Frontier membership + bit-exact PPA per member.
+    assert len(got.frontier) == len(oracle.frontier)
+    for x, y in zip(got.frontier, oracle.frontier):
+        assert_ppa_equal(x, y)
+
+
+# Every alternate execution path, as (name, many-specs runner).  The scalar
+# oracle is run per spec by the assertions below.
+PATHS = {
+    "batched": lambda specs, tech, res: [
+        mso_search(s, None, tech, resolution=res, backend="batched")
+        for s in specs],
+    "multispec": lambda specs, tech, res:
+        mso_search_many(specs, None, tech, resolution=res),
+    "sharded-jit": lambda specs, tech, res:
+        mso_search_many_sharded(specs, None, tech, resolution=res,
+                                mode="jit"),
+    "sharded-pmap": lambda specs, tech, res:
+        mso_search_many_sharded(specs, None, tech, resolution=res,
+                                mode="pmap"),
+}
+
+
+def _oracle(specs, tech, res):
+    return [mso_search(s, None, tech, resolution=res) for s in specs]
+
+
+# ---------------------------------------------------------------------------
+# Scenario specs (+ ragged variant tail) vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+
+class TestScenarioEquivalence:
+    @pytest.fixture(scope="class")
+    def scenario_set(self):
+        # 4 scenarios + 3 posture variants = 7 specs: ragged on any even
+        # device count, so the sharded paths exercise padding/masking here.
+        return list(scenario_specs().values()) + spec_variants(3, seed=7)
+
+    @pytest.fixture(scope="class")
+    def oracle(self, scenario_set, tech):
+        return _oracle(scenario_set, tech, 4)
+
+    @pytest.mark.parametrize("path", sorted(PATHS))
+    def test_path_matches_scalar_oracle(self, path, scenario_set, tech,
+                                        oracle):
+        results = PATHS[path](scenario_set, tech, 4)
+        assert len(results) == len(oracle)
+        for got, ref in zip(results, oracle):
+            assert_search_identical(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-generated specs vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+
+class TestRandomSpecEquivalence:
+    @settings(max_examples=6, deadline=None)
+    @given(h=st.sampled_from([8, 16, 32, 64]),
+           w=st.sampled_from([16, 32, 64]),
+           mcr=st.sampled_from([1, 2, 4]),
+           ints=st.sampled_from([(2, 4), (4, 8)]),
+           fps=st.sampled_from([("FP4", "FP8"), ("FP8",)]),
+           f_mac=st.sampled_from([250e6, 500e6, 800e6, 1.1e9]),
+           vdd=st.sampled_from([0.7, 0.9, 1.2]),
+           slow_update=st.booleans())
+    def test_all_paths_match_scalar_oracle(self, h, w, mcr, ints, fps, f_mac,
+                                           vdd, slow_update):
+        tech = calibrated_tech_for_reference()
+        spec = MacroSpec(h=h, w=w, mcr=mcr, int_precisions=ints,
+                         fp_precisions=fps, f_mac_hz=f_mac,
+                         f_wupdate_hz=f_mac / 8 if slow_update else f_mac,
+                         vdd=vdd)
+        (ref,) = _oracle([spec], tech, 3)
+        for path, runner in sorted(PATHS.items()):
+            (got,) = runner([spec], tech, 3)
+            assert_search_identical(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-path mechanics: mode resolution + ragged padding on 8 fake devices
+# ---------------------------------------------------------------------------
+
+
+class TestShardedMechanics:
+    def test_mode_resolution(self):
+        assert resolve_mode("auto") in ("jit", "pmap")
+        assert resolve_mode("jit") == "jit"
+        assert resolve_mode("pmap") == "pmap"
+        with pytest.raises(ValueError):
+            resolve_mode("tpu-pod")
+
+    def test_spec_variants_deterministic_and_grouped(self, tech):
+        a = spec_variants(12, seed=3)
+        b = spec_variants(12, seed=3)
+        assert a == b
+        assert len({(s.h, s.w, s.int_precisions, s.fp_precisions)
+                    for s in a}) == 1      # one geometry -> one vmap group
+        assert len(set(a)) == len(a)       # duplicate-free request
+
+    def test_ragged_counts_match_unsharded(self, tech):
+        """Spec counts that do not divide the device count still return
+        bit-identical per-spec results (padding is computed and discarded)."""
+        for n in (1, 3, 5):
+            specs = spec_variants(n, seed=n)
+            ref = mso_search_many(specs, None, tech, resolution=3)
+            for mode in ("jit", "pmap"):
+                got = mso_search_many_sharded(specs, None, tech,
+                                              resolution=3, mode=mode)
+                for g, r in zip(got, ref):
+                    assert_search_identical(g, r)
+
+    def test_eight_fake_devices_bit_identical(self):
+        """Subprocess drill (device count is fixed at first jax init): the
+        sharded paths on 8 fake host devices, with a ragged 13-spec request,
+        stay bit-identical to the unsharded multispec pass."""
+        env = {**os.environ,
+               "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+               "PYTHONPATH": str(REPO / "src"),
+               "JAX_PLATFORMS": "cpu"}
+        code = textwrap.dedent("""
+            import json
+            import jax
+            from repro.core import calibrated_tech_for_reference
+            from repro.core.multispec import mso_search_many
+            from repro.core.shardspec import (mso_search_many_sharded,
+                                              spec_variants)
+
+            tech = calibrated_tech_for_reference()
+            specs = spec_variants(13, seed=5)       # ragged on 8 devices
+            ref = mso_search_many(specs, None, tech, resolution=3)
+            verdict = {"devices": len(jax.devices())}
+            for mode in ("jit", "pmap"):
+                got = mso_search_many_sharded(specs, None, tech,
+                                              resolution=3, mode=mode)
+                verdict[mode] = all(
+                    [p.design.name() for p in g.explored]
+                    == [p.design.name() for p in r.explored]
+                    and len(g.frontier) == len(r.frontier)
+                    and all(x.paths == y.paths
+                            and x.fmax_hz == y.fmax_hz
+                            and x.area_um2 == y.area_um2
+                            and x.area_breakdown == y.area_breakdown
+                            and x.e_cycle_fj == y.e_cycle_fj
+                            and x.tops_per_w_1b == y.tops_per_w_1b
+                            and x.latency_cycles == y.latency_cycles
+                            for x, y in zip(g.frontier, r.frontier))
+                    for g, r in zip(got, ref))
+            print(json.dumps(verdict))
+        """)
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, env=env,
+                           timeout=600, cwd=REPO)
+        assert r.returncode == 0, f"scenario failed:\n{r.stderr[-3000:]}"
+        last = [ln for ln in r.stdout.strip().splitlines()
+                if ln.startswith("{")][-1]
+        out = json.loads(last)
+        assert out["devices"] == 8
+        assert out["jit"] and out["pmap"]

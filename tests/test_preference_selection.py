@@ -1,0 +1,202 @@
+"""Property tests for preference-aware serving-time macro selection.
+
+The contract of :func:`repro.serve.select.preference_select` (and its
+``select_macros(preference=...)`` wiring):
+
+  * rescale invariance — multiplying every weight by c > 0 never changes
+    the pick (scalarization is normalized against frontier minima);
+  * permutation invariance — permuting the candidate pool, or permuting
+    (objective columns, weights) together, never changes the picked
+    candidate's objectives;
+  * degenerate all-zero weights fall back to pure wallclock;
+  * the selected macro is always on the pooled Pareto frontier — an
+    eps-dominated candidate (shared PARETO_EPS band) is never selected.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import calibrated_tech_for_reference
+from repro.core.dse import GemmShape
+from repro.core.pareto import PARETO_EPS, dominates, nondominated_mask
+from repro.serve.select import (preference_select, preferred_macro,
+                                select_macros)
+
+
+def _objs(seed: int, n: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    objs = rng.uniform(0.1, 10.0, size=(n, 3))
+    if seed % 3 == 0 and n >= 4:    # salt in exact duplicates + eps-near ties
+        objs[n // 2] = objs[0]
+        objs[n // 3] = objs[1] + PARETO_EPS / 4
+    return objs
+
+
+def _weights(seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed + 10_000)
+    w = rng.uniform(0.0, 1.0, size=3)
+    w[int(rng.integers(3))] += 0.1      # at least one strictly positive
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Scalarization properties on synthetic objective matrices
+# ---------------------------------------------------------------------------
+
+
+class TestPreferenceSelectProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           n=st.integers(min_value=1, max_value=60),
+           scale=st.sampled_from([1e-6, 0.5, 3.0, 1e6]))
+    def test_weight_rescale_invariance(self, seed, n, scale):
+        objs, w = _objs(seed, n), _weights(seed)
+        assert preference_select(objs, w) == preference_select(objs, scale * w)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           n=st.integers(min_value=1, max_value=60))
+    def test_pool_permutation_invariance(self, seed, n):
+        """Shuffling the candidate pool never changes the picked
+        candidate's objective vector."""
+        objs, w = _objs(seed, n), _weights(seed)
+        perm = np.random.default_rng(seed + 1).permutation(n)
+        i = preference_select(objs, w)
+        j = preference_select(objs[perm], w)
+        assert tuple(objs[perm][j]) == tuple(objs[i])
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           n=st.integers(min_value=1, max_value=60),
+           perm=st.sampled_from([(1, 0, 2), (2, 1, 0), (0, 2, 1), (1, 2, 0)]))
+    def test_objective_weight_permutation_consistency(self, seed, n, perm):
+        """Permuting objective columns together with their weights selects
+        the same candidate (no objective is special-cased)."""
+        objs, w = _objs(seed, n), _weights(seed)
+        p = list(perm)
+        assert preference_select(objs[:, p], w[p]) == \
+            preference_select(objs, w)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           n=st.integers(min_value=1, max_value=60))
+    def test_zero_weights_fall_back_to_wallclock(self, seed, n):
+        objs = _objs(seed, n)
+        assert preference_select(objs, (0.0, 0.0, 0.0)) == \
+            preference_select(objs, (1.0, 0.0, 0.0))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           n=st.integers(min_value=1, max_value=60))
+    def test_selected_is_never_eps_dominated(self, seed, n):
+        objs, w = _objs(seed, n), _weights(seed)
+        i = preference_select(objs, w)
+        assert nondominated_mask(objs)[i]
+        for j in range(n):      # per-pair verdicts, shared eps semantics
+            assert not dominates(objs[j], objs[i])
+
+    def test_extreme_weight_tracks_its_objective(self):
+        """An all-in weight on one objective picks that objective's frontier
+        minimum."""
+        objs = _objs(12, 40)
+        for axis in range(3):
+            w = np.zeros(3)
+            w[axis] = 1.0
+            i = preference_select(objs, w)
+            cand = np.flatnonzero(nondominated_mask(objs))
+            assert objs[i, axis] == objs[cand, axis].min()
+
+    def test_rejects_bad_weights(self):
+        objs = _objs(1, 10)
+        with pytest.raises(ValueError):
+            preference_select(objs, (1.0, -0.5, 0.0))
+        with pytest.raises(ValueError):
+            preference_select(objs, (1.0, 0.0))
+        with pytest.raises(ValueError):
+            preference_select(objs, (np.nan, 0.0, 1.0))
+        with pytest.raises(ValueError):
+            preference_select(np.empty((0, 3)), (1.0, 0.0, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Wired through select_macros on a real synthesized pool
+# ---------------------------------------------------------------------------
+
+
+def _toy_workloads():
+    return {
+        "vision": [GemmShape("conv_as_gemm", 196, 512, 512, 4),
+                   GemmShape("head", 196, 512, 1000)],
+        "language": [GemmShape("qkv", 128, 2048, 6144, 16),
+                     GemmShape("mlp", 128, 2048, 8192, 16)],
+    }
+
+
+class TestPreferenceSelectionEndToEnd:
+    @pytest.fixture(scope="class")
+    def tech(self):
+        return calibrated_tech_for_reference()
+
+    @pytest.fixture(scope="class")
+    def energy_selection(self, tech):
+        return select_macros(_toy_workloads(), tech=tech, resolution=3,
+                             n_macros=64, preference=(0.2, 0.6, 0.2))
+
+    def test_selected_on_pooled_frontier(self, energy_selection):
+        sel = energy_selection
+        rep = sel.codesign
+        for w in sel.workloads:
+            wi = rep.workloads.index(w)
+            objs = np.stack([rep.wallclock_s[wi], rep.energy_pj[wi],
+                             rep.area_mm2], axis=1)
+            assert nondominated_mask(objs)[sel.assignment[w]]
+
+    def test_rescaled_preference_same_assignment(self, energy_selection,
+                                                 tech):
+        scaled = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                               n_macros=64, preference=(2.0, 6.0, 2.0))
+        assert scaled.assignment == energy_selection.assignment
+
+    def test_preferred_macro_matches_assignment(self, energy_selection):
+        sel = energy_selection
+        for w in sel.workloads:
+            assert preferred_macro(sel.codesign, w, sel.preference) == \
+                sel.assignment[w]
+
+    def test_serving_estimates_cover_workloads(self, energy_selection):
+        sel = energy_selection
+        assert set(sel.serving) == set(sel.workloads)
+        for w in sel.workloads:
+            est = sel.serving_for(w)
+            assert est.tokens_per_s > 0
+            assert est.bound_s == max(est.t_macro_s, est.t_hbm_s)
+            assert est.macro == sel.label_for(w)
+            assert est.bottleneck in ("macro-compute", "hbm")
+
+    def test_wallclock_preference_matches_frontier_restricted_min(self, tech):
+        """preference=(1,0,0) picks the frontier member with the minimal
+        wallclock (the legacy argmin, restricted to non-dominated picks)."""
+        sel = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                            n_macros=64, preference=(1.0, 0.0, 0.0))
+        rep = sel.codesign
+        for w in sel.workloads:
+            wi = rep.workloads.index(w)
+            objs = np.stack([rep.wallclock_s[wi], rep.energy_pj[wi],
+                             rep.area_mm2], axis=1)
+            cand = np.flatnonzero(nondominated_mask(objs))
+            assert rep.wallclock_s[wi, sel.assignment[w]] == \
+                rep.wallclock_s[wi][cand].min()
+
+    def test_default_selection_unchanged_without_preference(self, tech):
+        """No preference -> the legacy lowest-wallclock assignment (and the
+        serving roofline still reported)."""
+        sel = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                            n_macros=64)
+        assert sel.preference is None
+        for w in sel.workloads:
+            wi = sel.codesign.workloads.index(w)
+            assert sel.codesign.wallclock_s[wi, sel.assignment[w]] == \
+                sel.codesign.wallclock_s[wi].min()
+        assert set(sel.serving) == set(sel.workloads)
