@@ -1,0 +1,60 @@
+"""Lattice-scale Pareto extraction: device-sharded map-reduce vs host numpy.
+
+The tracked row is ``pareto/extract_speedup``: frontier extraction used to
+serialize on one host as chunked numpy even when the sweep itself ran sharded
+over every device; ``repro.core.pareto.nondominated_mask_sharded`` runs the
+same eps-band dominance predicate as a jitted two-phase map-reduce (per-shard
+local prefilter, cross-shard refinement) and must stay **bit-identical** —
+same mask, same survivor order — while the wall-clock drops.  CI runs this
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the sharded
+row exercises a real multi-device placement."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core.engine import resolve_sharded_mode
+from repro.core.pareto import (PARETO_EPS, nondominated_mask,
+                               nondominated_mask_sharded)
+
+from .common import timed
+
+N_POINTS = 100_000     # lattice scale: ~3x the full 5-axis macro lattice
+N_OBJECTIVES = 3       # (energy/cycle, area, period) — the searcher's tuple
+SEED = 0
+
+
+def _points() -> np.ndarray:
+    rng = np.random.default_rng(SEED)
+    objs = rng.uniform(0.1, 10.0, size=(N_POINTS, N_OBJECTIVES))
+    # salt in the adversarial cases: exact duplicate + eps-near tie
+    objs[N_POINTS // 2] = objs[0]
+    objs[N_POINTS // 3] = objs[1] + PARETO_EPS / 4
+    return objs
+
+
+def run() -> list[tuple]:
+    objs = _points()
+    mode = resolve_sharded_mode("auto")
+    n_dev = len(jax.devices())
+
+    host_mask, us_host = timed(lambda: nondominated_mask(objs), iters=1)
+    shard_mask, us_shard = timed(
+        lambda: nondominated_mask_sharded(objs, mode=mode), iters=1)
+
+    identical = (np.array_equal(host_mask, shard_mask)
+                 and np.array_equal(np.flatnonzero(host_mask),
+                                    np.flatnonzero(shard_mask)))
+    survivors = int(host_mask.sum())
+
+    return [
+        (f"pareto/extract_host/{N_POINTS}pts", us_host,
+         f"survivors={survivors}"),
+        (f"pareto/extract_sharded/{N_POINTS}pts", us_shard,
+         f"devices={n_dev};mode={mode}"),
+        ("pareto/extract_speedup", us_shard,
+         f"speedup={us_host / us_shard:.2f}x;identical={identical};"
+         f"devices={n_dev};mode={mode};points={N_POINTS}"),
+    ]

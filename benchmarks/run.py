@@ -13,8 +13,8 @@ import traceback
 
 from . import (bench_csa, bench_dse, bench_fig7_energy, bench_fig8_pareto,
                bench_fig9_shmoo, bench_kernels, bench_multispec,
-               bench_roofline, bench_shardspec, bench_table1_features,
-               bench_table2_sota)
+               bench_pareto, bench_roofline, bench_shardspec,
+               bench_table1_features, bench_table2_sota)
 from .common import emit, rows_to_dicts
 
 MODULES = [
@@ -28,6 +28,7 @@ MODULES = [
     ("dse", bench_dse),
     ("multispec", bench_multispec),
     ("shardspec", bench_shardspec),
+    ("pareto", bench_pareto),
     ("roofline", bench_roofline),
 ]
 

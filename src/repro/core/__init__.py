@@ -6,7 +6,8 @@ Layers (paper Fig. 2):
   csa         mixed compressor/FA carry-save adder-tree family (Fig. 4)
   scl         Subcircuit Library: characterized PPA lookup tables (Fig. 3)
   searcher    Multi-Spec-Oriented searcher — Algorithm 1
-  pareto      Pareto-frontier utilities (Fig. 8)
+  pareto      Pareto-frontier utilities (Fig. 8), host/device/sharded masks
+  engine      unified execution engine: plan -> place -> execute -> extract
   macro       spec -> design -> PPA roll-up (+ silicon calibration)
   netlist     RTL / structural netlist emission
   gatesim     functional gate-level simulation of synthesized trees
@@ -25,14 +26,16 @@ from .macro import (MacroDesign, MacroPPA, MacroSpec, at_voltage,
                     reference_chip_spec, reporting_frequency, rollup,
                     timing_paths)
 from .netlist import emit_verilog, tree_netlist
-from .pareto import (PARETO_EPS, dominates, nondominated_mask, pareto_front,
-                     pareto_chunk_size, pareto_indices, preference_grid)
+from .pareto import (PARETO_EPS, dominates, nondominated_mask,
+                     nondominated_mask_auto, nondominated_mask_sharded,
+                     pareto_front, pareto_chunk_size, pareto_indices,
+                     preference_grid)
 from .scl import SubcircuitLibrary
 from .searcher import SearchResult, mso_search, synthesize_one
 from .subcircuits import SC, MemCellKind, MultMuxKind, PPA
 from .tech import TechModel, delay_scale, energy_scale
 
-# The batched/multispec engines are the only core modules that need jax;
+# The engine-layer modules are the only core modules that need jax;
 # re-export their names lazily (PEP 562) so the scalar compiler layer stays
 # import-light.
 _BATCHED_EXPORTS = ("BatchedPPA", "BatchedSweep", "DesignLattice",
@@ -43,6 +46,8 @@ _MULTISPEC_EXPORTS = ("design_space_sweep_many", "evaluate_many",
 _SHARDSPEC_EXPORTS = ("design_space_sweep_many_sharded",
                       "evaluate_many_sharded", "mso_search_many_sharded",
                       "spec_variants")
+_ENGINE_EXPORTS = ("ExecutionPlan", "PackedGroup", "Placement", "Strategy",
+                   "execute", "extract_frontier", "register_strategy")
 
 
 def __getattr__(name: str):
@@ -55,6 +60,9 @@ def __getattr__(name: str):
     if name in _SHARDSPEC_EXPORTS:
         from . import shardspec
         return getattr(shardspec, name)
+    if name in _ENGINE_EXPORTS:
+        from . import engine
+        return getattr(engine, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -65,6 +73,8 @@ __all__ = [
     "mso_search_many", "pareto_chunk_size", "scenario_specs",
     "design_space_sweep_many_sharded", "evaluate_many_sharded",
     "mso_search_many_sharded", "spec_variants",
+    "ExecutionPlan", "PackedGroup", "Placement", "Strategy", "execute",
+    "extract_frontier", "register_strategy",
     "CSADesign", "CSAReport", "FAMILY", "build_netlist", "characterize",
     "AcceleratorReport", "CodesignReport", "GemmShape", "WorkloadMatrix",
     "accelerator_report", "batched_workload_matrix",
@@ -76,8 +86,9 @@ __all__ = [
     "reference_chip_design", "reference_chip_ppa", "reference_chip_spec",
     "rollup", "timing_paths",
     "emit_verilog", "tree_netlist",
-    "PARETO_EPS", "dominates", "nondominated_mask", "pareto_front",
-    "pareto_indices", "preference_grid",
+    "PARETO_EPS", "dominates", "nondominated_mask", "nondominated_mask_auto",
+    "nondominated_mask_sharded", "pareto_front", "pareto_indices",
+    "preference_grid",
     "SubcircuitLibrary",
     "SearchResult", "mso_search", "synthesize_one",
     "SC", "MemCellKind", "MultMuxKind", "PPA",

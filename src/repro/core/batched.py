@@ -35,12 +35,18 @@ space in one fused pass instead:
   ``design_space_sweep`` / ``pareto_mask``
       exhaustive sweeps with chunked vectorized Pareto extraction — the entry
       point :mod:`repro.core.dse` uses for many-workload co-design.
+
+Execution (packing, kernel launch, numpy tail) and frontier extraction are
+routed through the shared engine layer (:mod:`repro.core.engine`): this
+module is the single-spec ``"jit"`` strategy, :mod:`repro.core.multispec`
+the ``"vmap"`` strategy, :mod:`repro.core.shardspec` the sharded pair.
 """
 
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
@@ -53,8 +59,8 @@ from .csa import CSADesign, CSAReport, characterize, valid_splits
 from .macro import (ACT_IN_MEAS, ACT_WT_MEAS, MacroDesign, MacroPPA,
                     MacroSpec, PathReport, _mode_bits, _product_bits,
                     reporting_frequency)
-from .pareto import (PARETO_EPS, chunk_dominated, pareto_chunk_size,
-                     pareto_indices, preference_grid)
+from .pareto import (PARETO_EPS, chunk_dominated, nondominated_mask,
+                     pareto_chunk_size, preference_grid)
 from .searcher import (RHO_STEPS, SearchResult, _throughput_overdrive,
                        max_crit_rel)
 from .tech import TechModel, delay_scale, energy_scale, leakage_scale
@@ -421,20 +427,14 @@ def _kernel_inputs(tables: SpecTables
 
 def evaluate(lattice: DesignLattice, tables: SpecTables) -> BatchedPPA:
     """One fused (jitted) pass: timing paths + full PPA roll-up for every
-    lattice point, mirroring :func:`repro.core.macro.rollup` float-for-float."""
-    csa_i = np.asarray(tables.csa_index(lattice.rho_i, lattice.ro, lattice.rt,
-                                        lattice.sp_i))
-    tabs_np, consts, e_ofu_np, e_align_np = _kernel_inputs(tables)
-    with enable_x64():
-        f64 = lambda a: jnp.asarray(np.asarray(a, dtype=np.float64))  # noqa: E731
-        idx = (jnp.asarray(lattice.mem_i), jnp.asarray(lattice.mm_i),
-               jnp.asarray(csa_i), jnp.asarray(lattice.pipe_i),
-               jnp.asarray(lattice.ort), jnp.asarray(lattice.fts),
-               jnp.asarray(lattice.fso))
-        out = _eval_kernel(idx, tuple(f64(t) for t in tabs_np), f64(consts),
-                           f64(e_ofu_np), f64(e_align_np))
-        out = jax.tree.map(np.asarray, out)
-    return _finish(lattice, tables, csa_i, out)
+    lattice point, mirroring :func:`repro.core.macro.rollup` float-for-float.
+
+    Routed through the shared execution engine's single-spec ``"jit"``
+    strategy (:mod:`repro.core.engine`), so this path packs, launches and
+    finishes through exactly the code the multi-spec and sharded paths use."""
+    from . import engine as E          # lazy: the engine imports this module
+    (_, _, ppa), = E.execute(E.plan_for([lattice], [tables], mode="jit"))
+    return ppa
 
 
 def _finish(lattice: DesignLattice, tables: SpecTables, csa_i: np.ndarray,
@@ -538,6 +538,11 @@ class BatchedSweep:
     lattice: DesignLattice
     tables: SpecTables
     ppa: BatchedPPA
+    #: Optional survivor-mask override for frontier extraction (e.g. the
+    #: device-sharded :func:`repro.core.pareto.nondominated_mask_sharded`,
+    #: wired in by the sharded sweep path).  Every mask implementation
+    #: returns the same bits; only the wall-clock differs.
+    extract_mask: Callable[[np.ndarray], np.ndarray] | None = None
 
     def objectives(self) -> np.ndarray:
         """(n, 3) frontier objectives — (energy/cycle INT-lo, area, period),
@@ -552,13 +557,13 @@ class BatchedSweep:
         if cand.size == 0:
             cand = np.flatnonzero(self.lattice.valid)
         objs = self.objectives()[cand]
-        if chunk is None:       # size for the device-memory budget
-            chunk = pareto_chunk_size(len(objs), objs.shape[1])
-        mask = pareto_mask(objs, chunk=chunk)
-        survivors = cand[mask]
-        # exact dedup + ordering on the (small) survivor set
-        order = pareto_indices([tuple(o) for o in objs[mask]])
-        return [int(survivors[i]) for i in order]
+        mask_fn = self.extract_mask
+        if mask_fn is None:
+            if chunk is None:   # size for the device-memory budget
+                chunk = pareto_chunk_size(len(objs), objs.shape[1])
+            mask_fn = functools.partial(pareto_mask, chunk=chunk)
+        from . import engine as E
+        return [int(cand[i]) for i in E.extract_frontier(objs, mask_fn)]
 
     def materialize(self, i: int) -> MacroPPA:
         return self.ppa.materialize(i, audit=("batched: exhaustive sweep",))
@@ -762,6 +767,10 @@ def _alg1_replay(lattice: DesignLattice, tables: SpecTables, T: BatchedPPA,
     pool = feasible if feasible else explored
     objs = [(p.e_cycle_fj["int_lo"], p.area_um2, 1.0 / p.fmax_hz)
             for p in pool]
-    frontier = [pool[i] for i in pareto_indices(objs)]
+    # The shared frontier tail (mask + exact dedup/order) — identical to
+    # pareto_indices(objs) on these small pools, and the same tail the
+    # lattice-scale sweeps run with their device/sharded masks.
+    from . import engine as E
+    frontier = [pool[i] for i in E.extract_frontier(objs, nondominated_mask)]
     return SearchResult(spec=spec, frontier=tuple(frontier),
                         explored=tuple(explored), n_evaluated=len(explored))

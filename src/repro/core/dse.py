@@ -22,7 +22,7 @@ import numpy as np
 # scalar and batched reports below clamp through that one definition so the
 # two paths can never drift.
 from .macro import MacroPPA, reporting_frequency
-from .pareto import pareto_indices
+from .pareto import nondominated_mask_auto, pareto_indices
 
 
 @dataclass(frozen=True)
@@ -310,7 +310,10 @@ def cross_workload_codesign(workloads: Mapping[str, Sequence[GemmShape]],
         total_energy = total_energy + energy[wi]
     objs = [(float(total_wall[d]), float(total_energy[d]), float(area[d]))
             for d in range(len(ppas))]
-    frontier = tuple(pareto_indices(objs))
+    # Candidate pools can reach lattice scale (exhaustive sweeps pooled
+    # across 100+ specs); the auto mask runs the extraction device-sharded
+    # there and on the host below the payoff point — same bits either way.
+    frontier = tuple(pareto_indices(objs, mask_fn=nondominated_mask_auto))
     return CodesignReport(
         workloads=names, designs=mats[0].designs, n_macros=n_macros,
         wallclock_s=wall, energy_pj=energy, effective_tops=tops,

@@ -3,16 +3,16 @@
 The paper's pitch is *multi-spec-oriented* synthesis: one compiler run serves
 many deployment scenarios (§I names vision, language, cloud and wearable
 workloads with distinct PPA postures).  :mod:`repro.core.batched` evaluates
-the full design lattice for ONE spec; this module stacks the per-spec
-subcircuit tables (:class:`~repro.core.batched.SpecTables`) along a leading
-spec axis and runs the same jitted float64 roll-up kernel under ``jax.vmap``,
-so N macro specs are synthesized in one fused device pass:
+the full design lattice for ONE spec; this module is the **"vmap" strategy**
+over the shared execution engine (:mod:`repro.core.engine`): specs are
+grouped by lattice signature, each group's subcircuit tables are stacked
+along a leading spec axis, and the same jitted float64 roll-up kernel runs
+under ``jax.vmap``, so N macro specs are synthesized in one fused pass:
 
   ``evaluate_many``
-      group specs by lattice signature (same dims / split axis / mode count),
-      stack each group's tables, and run the vmapped kernel once per group.
-      The kernel and the numpy roll-up tail are the *same code* the
-      single-spec engine runs, so per-spec results are bit-identical to
+      plan + execute through the engine with the "vmap" strategy.  The
+      kernel and the numpy roll-up tail are the *same code* the single-spec
+      engine runs, so per-spec results are bit-identical to
       :func:`repro.core.batched.evaluate`.
 
   ``mso_search_many``
@@ -28,6 +28,10 @@ so N macro specs are synthesized in one fused device pass:
       the §I deployment scenarios as concrete :class:`MacroSpec` values — the
       default multi-spec synthesis set for serving-time macro selection
       (:mod:`repro.serve.select`).
+
+Grouping, packing and the shared numpy tail live in the engine layer
+(:func:`repro.core.engine.pack_group` and friends); this module keeps only
+the multi-spec entry points and the scenario/frontier-pooling helpers.
 """
 
 from __future__ import annotations
@@ -36,26 +40,22 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import enable_x64
-
 from . import batched as B
+from . import engine as E
 from . import subcircuits as sc
 from .batched import BatchedPPA, BatchedSweep, DesignLattice, SpecTables
 from .macro import MacroSpec
 # Chunk sizing lives with the shared Pareto predicate; re-exported here
 # because multi-spec sweeps are where accelerator-sized chunking matters.
-from .pareto import DEFAULT_PARETO_BUDGET_BYTES, pareto_chunk_size  # noqa: F401
+from .pareto import (DEFAULT_PARETO_BUDGET_BYTES, PARETO_EPS,  # noqa: F401
+                     nondominated_mask_auto, pareto_chunk_size)
 from .searcher import SearchResult
 from .tech import TechModel
 
-# The single-spec kernel, vmapped over a leading spec axis: the gather-index
-# tuple is shared (in_axes=None) while every table, constant and mode array
-# carries one row per spec.  Gathers and adds are elementwise under batching,
-# so per-spec lanes compute bit-identically to the unbatched kernel.
-_eval_kernel_many = jax.jit(
-    jax.vmap(B._eval_kernel, in_axes=(None, 0, 0, 0, 0)))
+# Historical import surface: the vmapped kernel and the vmap-group key moved
+# to the shared engine layer; these names are aliases, not copies.
+_eval_kernel_many = E._eval_kernel_many
+_group_key = E.group_key
 
 
 def scenario_specs() -> dict[str, MacroSpec]:
@@ -86,75 +86,8 @@ def scenario_specs() -> dict[str, MacroSpec]:
 
 
 # ---------------------------------------------------------------------------
-# Fused multi-spec evaluation
+# Multi-spec evaluation + search + sweep entry points
 # ---------------------------------------------------------------------------
-
-
-def _group_key(lattice: DesignLattice, tables: SpecTables):
-    """Specs share a vmap group iff their lattices address identically and
-    their mode axes have equal length (mode *names* may differ per spec)."""
-    return (lattice.dims, lattice.splits, len(tables.modes))
-
-
-def _pack_group(lattices: Sequence[DesignLattice],
-                tables_list: Sequence[SpecTables]):
-    """numpy-side operands for one vmapped group launch.
-
-    Returns ``(csa_i, idx, operands)`` where ``idx`` is the shared gather
-    tuple (one copy for the whole group) and ``operands`` stacks every
-    per-spec kernel input along a leading spec axis.  The sharded engine
-    (:mod:`repro.core.shardspec`) packs through this same helper and then
-    pads/places the stacked axis across devices."""
-    lat0, t0 = lattices[0], tables_list[0]
-    csa_i = np.asarray(t0.csa_index(lat0.rho_i, lat0.ro, lat0.rt, lat0.sp_i))
-    packed = [B._kernel_inputs(t) for t in tables_list]
-    tabs_s = tuple(np.stack([p[0][j] for p in packed], dtype=np.float64)
-                   for j in range(len(packed[0][0])))
-    consts_s = np.stack([p[1] for p in packed], dtype=np.float64)
-    e_ofu_s = np.stack([p[2] for p in packed], dtype=np.float64)
-    e_align_s = np.stack([p[3] for p in packed], dtype=np.float64)
-    idx = (lat0.mem_i, lat0.mm_i, csa_i, lat0.pipe_i, lat0.ort, lat0.fts,
-           lat0.fso)
-    return csa_i, idx, (tabs_s, consts_s, e_ofu_s, e_align_s)
-
-
-def _unpack_group(lattices: Sequence[DesignLattice],
-                  tables_list: Sequence[SpecTables], csa_i: np.ndarray,
-                  out: dict) -> list[BatchedPPA]:
-    """The shared single-spec numpy tail, applied per spec lane of one
-    group's kernel outputs (bit-identity by construction)."""
-    return [B._finish(lattices[s], tables_list[s], csa_i,
-                      jax.tree.map(lambda a: a[s], out))
-            for s in range(len(lattices))]
-
-
-def _evaluate_group(lattices: Sequence[DesignLattice],
-                    tables_list: Sequence[SpecTables]) -> list[BatchedPPA]:
-    """One vmapped kernel launch for a group of same-shape specs, then the
-    shared single-spec numpy tail per spec (bit-identity by construction)."""
-    csa_i, idx_np, (tabs_s, consts_s, e_ofu_s, e_align_s) = \
-        _pack_group(lattices, tables_list)
-    with enable_x64():
-        idx = tuple(jnp.asarray(a) for a in idx_np)
-        out = _eval_kernel_many(idx, tuple(jnp.asarray(t) for t in tabs_s),
-                                jnp.asarray(consts_s), jnp.asarray(e_ofu_s),
-                                jnp.asarray(e_align_s))
-        out = jax.tree.map(np.asarray, out)
-    return _unpack_group(lattices, tables_list, csa_i, out)
-
-
-def _grouped(specs: Sequence[MacroSpec], tech: TechModel,
-             memcells: tuple[sc.MemCellKind, ...]
-             ) -> tuple[list[DesignLattice], list[SpecTables],
-                        dict[tuple, list[int]]]:
-    """Characterize every spec and bucket them into vmap groups (shared with
-    the sharded engine so both paths group identically)."""
-    lattices = [DesignLattice.enumerate(s, tuple(memcells)) for s in specs]
-    tables = [SpecTables(s, tech) for s in specs]
-    groups: dict[tuple, list[int]] = {}
-    for i, (lat, tab) in enumerate(zip(lattices, tables)):
-        groups.setdefault(_group_key(lat, tab), []).append(i)
-    return lattices, tables, groups
 
 
 def evaluate_many(specs: Sequence[MacroSpec], tech: TechModel,
@@ -163,20 +96,7 @@ def evaluate_many(specs: Sequence[MacroSpec], tech: TechModel,
     """Evaluate every design point of every spec, batching same-shape specs
     through one vmapped kernel launch.  Results are returned in input order
     and are bit-identical per spec to :func:`repro.core.batched.evaluate`."""
-    specs = list(specs)
-    lattices, tables, groups = _grouped(specs, tech, memcells)
-    out: list = [None] * len(specs)
-    for members in groups.values():
-        ppas = _evaluate_group([lattices[i] for i in members],
-                               [tables[i] for i in members])
-        for i, ppa in zip(members, ppas):
-            out[i] = (lattices[i], tables[i], ppa)
-    return out
-
-
-# ---------------------------------------------------------------------------
-# Multi-spec search + sweep entry points
-# ---------------------------------------------------------------------------
+    return E.execute(E.plan(list(specs), tech, tuple(memcells), mode="vmap"))
 
 
 def mso_search_many(specs: Sequence[MacroSpec], scl=None,
@@ -206,7 +126,8 @@ def design_space_sweep_many(specs: Sequence[MacroSpec], tech: TechModel,
 
 
 def frontier_union(results: Iterable[SearchResult],
-                   names: Sequence[str] | None = None):
+                   names: Sequence[str] | None = None,
+                   extract: bool = False, eps: float = PARETO_EPS):
     """Union of per-spec frontiers, deduplicated by (spec, design name) — the
     serving-time candidate pool for cross-workload co-design.  Points from
     different specs always stay distinct (a design name does not encode its
@@ -214,7 +135,15 @@ def frontier_union(results: Iterable[SearchResult],
 
     With ``names`` (one label per result), returns ``(pool, labels)`` where
     each pool entry is labeled ``"<name>/<design name>"`` by the first result
-    that contributed it; without, returns the pool alone."""
+    that contributed it; without, returns the pool alone.
+
+    With ``extract=True`` the pooled points are additionally filtered to the
+    *pooled* Pareto frontier under the shared ``eps`` band and the searcher's
+    objective tuple (energy/cycle INT-lo, area, period) — a per-spec frontier
+    point eps-dominated by another spec's point is dropped.  At lattice-scale
+    pool sizes the mask runs device-sharded
+    (:func:`repro.core.pareto.nondominated_mask_auto`, bit-identical to the
+    host pass); pool order is preserved."""
     results = list(results)
     if names is not None and len(names) != len(results):
         raise ValueError("names must match results one-to-one")
@@ -227,4 +156,10 @@ def frontier_union(results: Iterable[SearchResult],
                 pool.append(p)
                 if names is not None:
                     labels.append(f"{names[ri]}/{p.design.name()}")
+    if extract and pool:
+        objs = np.asarray([(p.e_cycle_fj["int_lo"], p.area_um2,
+                            1.0 / p.fmax_hz) for p in pool])
+        mask = nondominated_mask_auto(objs, eps)
+        pool = [p for p, keep in zip(pool, mask) if keep]
+        labels = [lb for lb, keep in zip(labels, mask) if keep]
     return pool if names is None else (pool, labels)

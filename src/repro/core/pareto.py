@@ -3,6 +3,22 @@
 The MSO searcher emits a *set* of design points; the compiler returns those on
 the Pareto frontier of (power, area, latency) under the throughput constraint,
 "to be finally chosen based on defined PPA preferences or user selection".
+
+Extraction scales in three tiers, all computing the exact same eps-band
+verdicts (bit-identical masks, same output order):
+
+  :func:`nondominated_mask`          host numpy, two-phase exact (block-local
+                                     prefilter, then every local survivor is
+                                     refined against *all* rows);
+  :func:`repro.core.batched.pareto_mask`
+                                     the same chunked predicate on one device;
+  :func:`nondominated_mask_sharded`  jitted map-reduce across every visible
+                                     device — per-shard local frontier,
+                                     gather survivors, cross-shard refinement
+                                     (lattice-scale frontiers).
+
+This module stays importable without jax (the scalar compiler layer is
+numpy-only); the sharded path imports jax lazily on first use.
 """
 
 from __future__ import annotations
@@ -37,9 +53,10 @@ def chunk_dominated(all_o, blk, eps, xp=np):
     """Eps-band dominance verdicts for one chunk: entry ``i`` is True iff
     some row of ``all_o`` dominates ``blk[i]`` under exactly the
     :func:`dominates` semantics.  This is the *single* implementation of the
-    vectorized predicate — :func:`nondominated_mask` runs it on numpy and the
+    vectorized predicate — :func:`nondominated_mask` runs it on numpy, the
     batched engine's ``pareto_mask`` passes ``xp=jax.numpy`` to run the same
-    comparisons on device."""
+    comparisons on device, and :func:`nondominated_mask_sharded` vmaps it
+    across device shards."""
     c, k = blk.shape
     n = all_o.shape[0]
     le = xp.ones((c, n), dtype=bool)
@@ -50,22 +67,40 @@ def chunk_dominated(all_o, blk, eps, xp=np):
     return (le & lt).any(axis=1)
 
 
+def _as_matrix(objs) -> np.ndarray:
+    objs = np.asarray(objs, dtype=np.float64)
+    if objs.ndim == 1:
+        objs = objs[:, None]
+    return objs
+
+
 def nondominated_mask(objs, eps: float = PARETO_EPS,
                       chunk: int = 1024) -> np.ndarray:
     """Boolean non-dominated mask over an (n, k) objective matrix
     (minimization), vectorized and chunked.  Entry ``i`` is True iff no row
     dominates row ``i`` under exactly the :func:`dominates` semantics — this
     is the single dominance predicate :func:`pareto_indices` and the batched
-    engine's ``pareto_mask`` both reduce to."""
-    objs = np.asarray(objs, dtype=np.float64)
-    if objs.ndim == 1:
-        objs = objs[:, None]
+    engine's ``pareto_mask`` both reduce to.
+
+    Runs as a two-phase exact pass: phase 1 tests each block only against
+    itself (a point dominated inside its own block is dominated, full stop —
+    the witness is a real row), phase 2 refines every local survivor against
+    *all* rows.  Because eps-band dominance is not transitive, the refinement
+    deliberately compares against every row, not just other survivors; the
+    resulting mask is identical to the naive all-pairs pass at a fraction of
+    the cost (frontiers are small, so few points reach phase 2)."""
+    objs = _as_matrix(objs)
     n = objs.shape[0]
     keep = np.ones(n, dtype=bool)
+    if n == 0:
+        return keep
     for start in range(0, n, chunk):
         blk = objs[start:start + chunk]                 # (c, k)
-        dominated = chunk_dominated(objs, blk, eps)
-        keep[start:start + blk.shape[0]] = ~dominated
+        keep[start:start + blk.shape[0]] = ~chunk_dominated(blk, blk, eps)
+    survivors = np.flatnonzero(keep)
+    for start in range(0, survivors.size, chunk):
+        idx = survivors[start:start + chunk]
+        keep[idx] = ~chunk_dominated(objs, objs[idx], eps)
     return keep
 
 
@@ -86,22 +121,187 @@ def pareto_chunk_size(n_points: int, n_objectives: int = 3,
     return int(min(max(chunk, 64), max(n_points, 64)))
 
 
-def pareto_indices(objs: Sequence[Sequence[float]]) -> list[int]:
+# ---------------------------------------------------------------------------
+# Device-sharded extraction (lattice-scale frontiers)
+# ---------------------------------------------------------------------------
+
+#: Below this point count the host pass wins on dispatch overhead; the auto
+#: dispatcher only reaches for devices at or above it.
+SHARDED_EXTRACT_MIN_POINTS = 8192
+
+_SHARDED_FNS: dict | None = None
+
+
+def _sharded_fns() -> dict:
+    """Lazily built jax closures for the sharded extraction (this module
+    stays importable without jax)."""
+    global _SHARDED_FNS
+    if _SHARDED_FNS is None:
+        import jax
+        import jax.numpy as jnp
+
+        def _chunk(all_o, blk, eps):
+            return chunk_dominated(all_o, blk, eps, xp=jnp)
+
+        _SHARDED_FNS = {
+            "jax": jax,
+            "jnp": jnp,
+            # per-shard local pass (one block per shard vs itself), vmapped
+            # over the shard axis; under a NamedSharding placement XLA
+            # partitions the shards across devices
+            "local": jax.jit(jax.vmap(_chunk, in_axes=(0, 0, None))),
+            # cross-shard refinement: per-device survivor blocks vs ALL rows
+            # (the row matrix is replicated, the survivor axis is sharded)
+            "refine": jax.jit(jax.vmap(_chunk, in_axes=(None, 0, None))),
+            # the same passes as explicit pmaps for runtimes whose
+            # jax.sharding surface is incomplete
+            "local_pmap": jax.pmap(_chunk, in_axes=(0, 0, None)),
+            "refine_pmap": jax.pmap(_chunk, in_axes=(None, 0, None)),
+        }
+    return _SHARDED_FNS
+
+
+def nondominated_mask_sharded(objs, eps: float = PARETO_EPS,
+                              chunk: int | None = None,
+                              mode: str = "auto", mesh=None) -> np.ndarray:
+    """Device-sharded :func:`nondominated_mask`: the jitted map-reduce
+    dominance pass for lattice-scale frontiers.
+
+    The rows are split into one contiguous shard per visible device and the
+    verdict is computed in two exact phases, both running the shared
+    :func:`chunk_dominated` predicate with ``xp=jax.numpy``:
+
+      1. *per-shard local prefilter* — each shard walks its rows in blocks,
+         testing each block against itself; a row dominated inside its own
+         block is dominated, full stop (the witness is a real row).  The
+         shard axis is placed with a ``Mesh``/``NamedSharding`` (``mode=
+         "jit"``) or ``jax.pmap`` (``mode="pmap"``; ``"auto"`` resolves
+         through the engine's capability-probed dispatcher), so the
+         quadratic work parallelizes across devices;
+      2. *cross-shard refinement* — the gathered local survivors are
+         re-tested against **all** rows, survivor axis sharded over the same
+         devices, row matrix replicated.  Eps-band dominance is not
+         transitive, so testing survivors only against other survivors would
+         not be exact; testing against every row is, because every point a
+         shard eliminated locally already has a real dominating witness.
+
+    The result is bit-identical to the host :func:`nondominated_mask` — same
+    :data:`PARETO_EPS` band, same verdict per row, same output order — on 1
+    device and on N devices; only the wall-clock changes.
+
+    ``mesh`` (``"jit"`` mode) is the 1-D device mesh to place the shard axis
+    over — pass the mesh a sweep evaluated on so extraction honors the same
+    device subset; default is the repo's shared sweep mesh over every
+    visible device (:func:`repro.parallel.sharding.spec_sweep_mesh`)."""
+    objs = _as_matrix(objs)
+    n, k = objs.shape
+    if n == 0:
+        return np.ones(0, dtype=bool)
+    from . import engine as E          # lazy: the one mode dispatcher
+    mode = E.resolve_sharded_mode(mode)
+    fns = _sharded_fns()
+    jax, jnp = fns["jax"], fns["jnp"]
+    from jax.experimental import enable_x64
+
+    if mode == "jit" and mesh is None:
+        # the shared 1-D placement the sharded sweeps use, not an ad-hoc one
+        from ..parallel.sharding import spec_sweep_mesh
+        mesh = spec_sweep_mesh()
+    n_dev = (int(mesh.devices.size) if mesh is not None
+             else len(jax.devices()))
+    m = -(-n // n_dev)                               # rows per shard
+    c = int(chunk) if chunk else max(64, min(1024, m))
+    m_p = -(-m // c) * c                             # fixed block shapes
+    pad_rows = m_p * n_dev - n
+    # +inf padding is inert under the eps band: an inf row never dominates a
+    # finite row, and pad verdicts are sliced off before they are read.
+    padded = (np.concatenate([objs, np.full((pad_rows, k), np.inf)])
+              if pad_rows else objs)
+    shards = padded.reshape(n_dev, m_p, k)
+
+    dominated = np.empty(n_dev * m_p, dtype=bool)
+    with enable_x64():
+        eps_j = jnp.asarray(eps, dtype=jnp.float64)
+        if mode == "jit":
+            from jax.sharding import NamedSharding, PartitionSpec
+            row_sharded = NamedSharding(mesh,
+                                        PartitionSpec(mesh.axis_names[0]))
+            shards_dev = jax.device_put(jnp.asarray(shards), row_sharded)
+            local = fns["local"]
+            refine = fns["refine"]
+            blocks = [shards_dev[:, s:s + c] for s in range(0, m_p, c)]
+        else:
+            local = fns["local_pmap"]
+            refine = fns["refine_pmap"]
+            blocks = [shards[:, s:s + c] for s in range(0, m_p, c)]
+        parts = [local(blk, blk, eps_j) for blk in blocks]
+        dominated[:] = np.concatenate(
+            [np.asarray(p) for p in parts], axis=1).reshape(n_dev * m_p)
+        dominated = dominated[:n]
+
+        survivors = np.flatnonzero(~dominated)
+        all_rows = jnp.asarray(objs)
+        if mode == "jit":
+            all_rows = jax.device_put(
+                all_rows, NamedSharding(mesh, PartitionSpec()))  # replicated
+        # survivor blocks sized so each device's comparison masks fit its
+        # slice of the memory budget
+        cr = max(64, pareto_chunk_size(
+            n, k, DEFAULT_PARETO_BUDGET_BYTES // n_dev))
+        stride = n_dev * cr
+        for start in range(0, survivors.size, stride):
+            idx = survivors[start:start + stride]
+            blk = objs[idx]
+            if blk.shape[0] < stride:                # keep one traced shape
+                blk = np.concatenate(
+                    [blk, np.full((stride - blk.shape[0], k), np.inf)])
+            blk = blk.reshape(n_dev, cr, k)
+            if mode == "jit":
+                blk = jax.device_put(jnp.asarray(blk), row_sharded)
+            verdict = np.asarray(refine(all_rows, blk, eps_j))
+            dominated[idx] = verdict.reshape(stride)[:idx.size]
+    return ~dominated
+
+
+def nondominated_mask_auto(objs, eps: float = PARETO_EPS) -> np.ndarray:
+    """Host mask below the sharding payoff point (or on a single device /
+    without jax), the device-sharded map-reduce above it.  Both produce the
+    same bits, so callers may switch freely on scale."""
+    objs = _as_matrix(objs)
+    if objs.shape[0] >= SHARDED_EXTRACT_MIN_POINTS:
+        # Only the jax probe is guarded: a failure *inside* the sharded pass
+        # (device OOM, a sharding regression) must surface, not silently
+        # degrade to the slow host walk.
+        try:
+            import jax
+            n_dev = len(jax.devices())
+        except Exception:
+            n_dev = 1
+        if n_dev > 1:
+            return nondominated_mask_sharded(objs, eps)
+    return nondominated_mask(objs, eps)
+
+
+def pareto_indices(objs: Sequence[Sequence[float]],
+                   mask_fn: Callable[[np.ndarray], np.ndarray] | None = None
+                   ) -> list[int]:
     """Indices of the non-dominated, deduplicated members of ``objs``, sorted
     by objective tuple.  This is the single source of truth for frontier
     semantics: :func:`pareto_front` and the batched engine's vectorized
     extraction both reduce to it, so scalar and batched sweeps agree exactly.
 
     Dominance testing delegates to the vectorized :func:`nondominated_mask`
-    (the per-pair Python walk was O(N^2) and hung at lattice scale); the
-    documented output order is preserved exactly: near-duplicates (all
+    (the per-pair Python walk was O(N^2) and hung at lattice scale); callers
+    at lattice scale may pass ``mask_fn=nondominated_mask_auto`` (or the
+    sharded mask directly) — every mask implementation returns the same bits.
+    The documented output order is preserved exactly: near-duplicates (all
     coordinates within :data:`PARETO_EPS`) keep their first occurrence in
     input order, and the surviving set is sorted by objective tuple."""
     objs = list(objs)
     if not objs:
         return []
     arr = np.asarray([[float(x) for x in o] for o in objs], dtype=np.float64)
-    survivors = np.flatnonzero(nondominated_mask(arr))
+    survivors = np.flatnonzero((mask_fn or nondominated_mask)(arr))
     # Dedup in input order against the accepted set (vectorized per survivor,
     # matching the incremental semantics of the original Python walk).
     acc = np.empty((survivors.size, arr.shape[1]), dtype=np.float64)
@@ -137,7 +337,14 @@ def scalarize(weights: Sequence[float], objectives: Sequence[float],
 
 def preference_grid(resolution: int = 4) -> list[tuple[float, float, float]]:
     """Deterministic simplex grid over (power, area, throughput) preference
-    weights — the multi-spec sweep driving the searcher."""
+    weights — the multi-spec sweep driving the searcher.
+
+    ``resolution`` must be >= 1: a 0-resolution grid would be empty and every
+    sweep built on it would silently synthesize nothing."""
+    if resolution < 1:
+        raise ValueError(
+            f"preference_grid needs resolution >= 1, got {resolution}: an "
+            "empty grid silently yields empty sweeps downstream")
     out = []
     for a in range(resolution + 1):
         for b in range(resolution + 1 - a):

@@ -1,152 +1,69 @@
 """Device-sharded multi-spec co-synthesis (100+-spec sweeps).
 
 :mod:`repro.core.multispec` fuses N same-shape specs into one vmapped kernel
-launch; this module places that launch *across devices* so spec sweeps keep
-scaling past what one accelerator holds.  The stacked spec axis of each vmap
-group is padded to the device count, placed with a ``Mesh``/``NamedSharding``
-along a ``('spec',)`` mesh (through the repo's shared logical-axis rules,
-:func:`repro.parallel.sharding.rules_for_mesh`), and the *same* jitted vmapped
-kernel runs under that placement — the kernel is elementwise per spec lane, so
-partitioning the lane axis cannot change per-lane float64 arithmetic and
-results stay bit-identical to the unsharded path on 1 device and on N devices
+launch; this module is the **sharded strategy pair** over the shared
+execution engine (:mod:`repro.core.engine`), placing that launch *across
+devices* so spec sweeps keep scaling past what one accelerator holds.  The
+stacked spec axis of each vmap group is padded to the device count and the
+*same* jitted vmapped kernel runs under the placed strategy — the kernel is
+elementwise per spec lane, so partitioning the lane axis cannot change
+per-lane float64 arithmetic and results stay bit-identical to the unsharded
+path on 1 device and on N devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in CI).
 
-Two execution modes, selected by capability (``hasattr``), never by version
-pins:
+Two execution modes, selected by the engine's capability-probed dispatcher
+(``hasattr``), never by version pins:
 
-  ``"jit"``   inputs are committed to a ``NamedSharding`` over the
-              ``('spec',)`` mesh and the jitted kernel's partitioner follows
-              the data — the preferred path on every jax this repo supports.
-  ``"pmap"``  the stacked axis is reshaped to (devices, specs/device) and the
-              vmapped kernel runs under ``jax.pmap`` — the fallback for
-              runtimes whose ``jax.sharding`` surface is incomplete.
+  ``"jit"``   the engine's ``"sharded-jit"`` strategy — inputs are committed
+              to a ``NamedSharding`` over the ``('spec',)`` mesh (through the
+              repo's shared logical-axis rules,
+              :func:`repro.parallel.sharding.rules_for_mesh`) and the jitted
+              kernel's partitioner follows the data — the preferred path on
+              every jax this repo supports.
+  ``"pmap"``  the engine's ``"pmap"`` strategy — the stacked axis is
+              reshaped to (devices, specs/device) and the vmapped kernel
+              runs under ``jax.pmap`` — the fallback for runtimes whose
+              ``jax.sharding`` surface is incomplete.
 
 Entry points mirror the unsharded engine one-for-one: ``evaluate_many`` ->
 :func:`evaluate_many_sharded`, ``mso_search_many`` ->
 :func:`mso_search_many_sharded`, ``design_space_sweep_many`` ->
-:func:`design_space_sweep_many_sharded`.  :func:`spec_variants` generates the
-deterministic 100+-spec request the sweeps and benchmarks drive this with.
+:func:`design_space_sweep_many_sharded` (whose sweeps also extract their
+frontiers device-sharded, via
+:func:`repro.core.pareto.nondominated_mask_sharded`).  :func:`spec_variants`
+generates the deterministic 100+-spec request the sweeps and benchmarks
+drive this with.  Padding, placement and packing live in the engine layer —
+this module registers nothing of its own.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import enable_x64
-
 from . import batched as B
+from . import engine as E
 from . import multispec as MS
 from . import subcircuits as sc
 from .batched import BatchedPPA, BatchedSweep, DesignLattice, SpecTables
 from .macro import MacroSpec
+from .pareto import (SHARDED_EXTRACT_MIN_POINTS, nondominated_mask,
+                     nondominated_mask_sharded)
 from .searcher import SearchResult
 from .tech import TechModel
 
 #: Execution modes accepted by the sharded entry points.
-MODES = ("auto", "jit", "pmap")
+MODES = E.SHARDED_MODES
 
+#: Public sharded mode -> engine strategy (the engine owns the dispatch).
+_ENGINE_MODE = dict(E._SHARDED_STRATEGY)
 
-def _supports_named_sharding() -> bool:
-    """Capability probe for the NamedSharding execution path (hasattr, not a
-    version pin — the same detection style the distributed tests use)."""
-    return (hasattr(jax.sharding, "Mesh")
-            and hasattr(jax.sharding, "NamedSharding")
-            and hasattr(jax.sharding, "PartitionSpec")
-            and hasattr(jax, "device_put"))
-
-
-def resolve_mode(mode: str = "auto") -> str:
-    """'auto' picks NamedSharding+jit when the runtime has it, else pmap."""
-    if mode not in MODES:
-        raise ValueError(f"unknown shardspec mode: {mode!r}; pick from {MODES}")
-    if mode == "auto":
-        return "jit" if _supports_named_sharding() else "pmap"
-    return mode
-
-
-# The pmap fallback: the same vmapped single-spec kernel, mapped over a
-# leading device axis.  Both maps are elementwise per spec lane so per-lane
-# arithmetic is the unbatched kernel's, bit for bit.
-_eval_kernel_pmap = jax.pmap(
-    jax.vmap(B._eval_kernel, in_axes=(None, 0, 0, 0, 0)),
-    in_axes=(None, 0, 0, 0, 0))
-
-
-def _pad_lanes(arr: np.ndarray, pad: int) -> np.ndarray:
-    """Pad the leading spec axis with copies of lane 0 (cheap, NaN-free
-    filler — padded lanes are computed and discarded, never compared)."""
-    if pad == 0:
-        return arr
-    return np.concatenate([arr, np.repeat(arr[:1], pad, axis=0)], axis=0)
-
-
-def _evaluate_group_sharded(lattices: Sequence[DesignLattice],
-                            tables_list: Sequence[SpecTables],
-                            n_dev: int, mesh, mode: str) -> list[BatchedPPA]:
-    """One device-sharded kernel launch for a group of same-shape specs.
-
-    Packs through the unsharded engine's :func:`repro.core.multispec.
-    _pack_group`, pads the ragged spec count up to the device count, runs the
-    shared kernel under the requested placement, strips the padding, and
-    finishes with the shared numpy tail — so every per-spec result is
-    bit-identical to :func:`repro.core.multispec._evaluate_group`.
-    ``mesh`` is only consulted (and only required) in ``"jit"`` mode; the
-    pmap fallback needs nothing from ``jax.sharding``.
-    """
-    csa_i, idx_np, (tabs_s, consts_s, e_ofu_s, e_align_s) = \
-        MS._pack_group(lattices, tables_list)
-    n_spec = len(lattices)
-    pad = (-n_spec) % n_dev
-    tabs_p = tuple(_pad_lanes(t, pad) for t in tabs_s)
-    consts_p = _pad_lanes(consts_s, pad)
-    e_ofu_p = _pad_lanes(e_ofu_s, pad)
-    e_align_p = _pad_lanes(e_align_s, pad)
-
-    with enable_x64():
-        if mode == "jit":
-            # jax.sharding machinery is touched only on this branch, so the
-            # pmap fallback stays importable/runnable on runtimes without it.
-            from jax.sharding import NamedSharding
-
-            from ..parallel.sharding import logical_to_spec, rules_for_mesh
-            rules = rules_for_mesh(mesh)
-
-            def place(a, leading_spec: bool):
-                axes = (("spec",) if leading_spec else (None,)) \
-                    + (None,) * (np.ndim(a) - 1)
-                sharding = NamedSharding(mesh, logical_to_spec(axes, rules))
-                return jax.device_put(jnp.asarray(a), sharding)
-
-            idx = tuple(place(a, False) for a in idx_np)
-            out = MS._eval_kernel_many(
-                idx, tuple(place(t, True) for t in tabs_p),
-                place(consts_p, True), place(e_ofu_p, True),
-                place(e_align_p, True))
-        else:                                   # pmap fallback
-            per_dev = (n_spec + pad) // n_dev
-
-            def fold(a):
-                a = np.asarray(a)
-                return a.reshape((n_dev, per_dev) + a.shape[1:])
-
-            idx = tuple(jnp.asarray(a) for a in idx_np)
-            out = _eval_kernel_pmap(idx, tuple(fold(t) for t in tabs_p),
-                                    fold(consts_p), fold(e_ofu_p),
-                                    fold(e_align_p))
-            # unfold (devices, specs/device) -> specs on the host copy: a
-            # numpy view, and no further jax dispatch on this branch
-            out = jax.tree.map(
-                lambda a: np.asarray(a).reshape((n_dev * per_dev,)
-                                                + a.shape[2:]), out)
-        out = jax.tree.map(np.asarray, out)
-    if pad:
-        out = jax.tree.map(lambda a: a[:n_spec], out)
-    return MS._unpack_group(lattices, tables_list, csa_i, out)
+# One capability-probed dispatcher for every sharded surface — this is the
+# engine's, re-exported under the historical name.
+resolve_mode = E.resolve_sharded_mode
 
 
 def evaluate_many_sharded(specs: Sequence[MacroSpec], tech: TechModel,
@@ -159,21 +76,9 @@ def evaluate_many_sharded(specs: Sequence[MacroSpec], tech: TechModel,
     axis of each group is simply partitioned across ``mesh`` (default: a
     ``('spec',)`` mesh over every visible device).  Results are returned in
     input order, bit-identical per spec to the unsharded path."""
-    specs = list(specs)
-    mode = resolve_mode(mode)
-    if mesh is None and mode == "jit":
-        from ..parallel.sharding import spec_sweep_mesh
-        mesh = spec_sweep_mesh()
-    n_dev = int(mesh.devices.size) if mesh is not None else len(jax.devices())
-    lattices, tables, groups = MS._grouped(specs, tech, memcells)
-    out: list = [None] * len(specs)
-    for members in groups.values():
-        ppas = _evaluate_group_sharded([lattices[i] for i in members],
-                                       [tables[i] for i in members],
-                                       n_dev, mesh, mode)
-        for i, ppa in zip(members, ppas):
-            out[i] = (lattices[i], tables[i], ppa)
-    return out
+    plan = E.plan(list(specs), tech, tuple(memcells),
+                  mode=_ENGINE_MODE[resolve_mode(mode)], mesh=mesh)
+    return E.execute(plan)
 
 
 def mso_search_many_sharded(specs: Sequence[MacroSpec], scl=None,
@@ -197,14 +102,35 @@ def mso_search_many_sharded(specs: Sequence[MacroSpec], scl=None,
             for lat, tab, T in evals]
 
 
+def _sharded_extract(objs, mode: str, mesh) -> np.ndarray:
+    """Survivor mask for a sharded sweep's frontier: the device-sharded
+    map-reduce at lattice scale, the host pass below the sharding payoff
+    point (:data:`repro.core.pareto.SHARDED_EXTRACT_MIN_POINTS` — feasible
+    candidate sets are often small after the validity filter).  Same bits
+    either way; the sweep's own mesh bounds which devices extraction may
+    touch."""
+    if len(objs) < SHARDED_EXTRACT_MIN_POINTS:
+        return nondominated_mask(objs)
+    return nondominated_mask_sharded(objs, mode=mode, mesh=mesh)
+
+
 def design_space_sweep_many_sharded(specs: Sequence[MacroSpec],
                                     tech: TechModel,
                                     memcells: tuple[sc.MemCellKind, ...]
                                     = B.MEMCELLS,
                                     mesh=None, mode: str = "auto"
                                     ) -> list[BatchedSweep]:
-    """Exhaustive sweeps for N specs, spec axis sharded across devices."""
-    return [BatchedSweep(lattice=lat, tables=tab, ppa=T)
+    """Exhaustive sweeps for N specs, spec axis sharded across devices.
+
+    The returned sweeps extract their frontiers device-sharded too
+    (:func:`repro.core.pareto.nondominated_mask_sharded`, same placement
+    mode and mesh as the evaluation, host pass below the payoff point) —
+    bit-identical membership and order to the unsharded sweeps, so
+    lattice-scale frontier extraction no longer serializes on one host."""
+    public_mode = resolve_mode(mode)
+    extract = functools.partial(_sharded_extract, mode=public_mode,
+                                mesh=mesh)
+    return [BatchedSweep(lattice=lat, tables=tab, ppa=T, extract_mask=extract)
             for lat, tab, T in evaluate_many_sharded(specs, tech, memcells,
                                                      mesh=mesh, mode=mode)]
 

@@ -45,23 +45,41 @@ def main() -> None:
                     help="preference weights wallclock,energy,area for "
                          "--dcim-select (e.g. 0.2,0.6,0.2); default: pure "
                          "wallclock")
+    ap.add_argument("--dcim-profile", default=None, metavar="PATH",
+                    help="JSON preference-profile artifact persisted per "
+                         "deployment config: read before --dcim-select "
+                         "(profile weights for this arch override "
+                         "--dcim-pref) and updated afterwards with the "
+                         "weights the selection ran under")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.dcim_select:
         from ..core.dse import gemm_inventory
-        from ..serve.select import select_macros
+        from ..serve.select import (load_preference_profile, save_preference_profile,
+                                    select_macros)
         pref = None
         if args.dcim_pref is not None:
             pref = tuple(float(x) for x in args.dcim_pref.split(","))
+        profile = None
+        if args.dcim_profile is not None:
+            profile = load_preference_profile(args.dcim_profile)
         sel = select_macros({cfg.name: gemm_inventory(cfg)},
-                            n_macros=args.dcim_macros, preference=pref)
+                            n_macros=args.dcim_macros, preference=pref,
+                            profile=profile)
+        if args.dcim_profile is not None:
+            save_preference_profile(
+                args.dcim_profile,
+                profile.with_workload(cfg.name,
+                                      sel.preferences_applied[cfg.name]))
+            print(f"dcim: preference profile updated: {args.dcim_profile}")
         wi = sel.codesign.workloads.index(cfg.name)
         di = sel.assignment[cfg.name]
         est = sel.serving_for(cfg.name)
+        applied = sel.preferences_applied[cfg.name]
         print(f"dcim: {len(sel.pool)} frontier candidates from scenarios "
               f"{', '.join(sel.scenarios)}"
-              + (f", preference={pref}" if pref else ""))
+              + (f", preference={applied}" if applied else ""))
         print(f"dcim: selected {sel.label_for(cfg.name)} for {cfg.name} "
               f"({args.dcim_macros} macros, "
               f"eff_tops={sel.codesign.effective_tops[wi, di]:.3f}, "

@@ -26,11 +26,19 @@ roofline-bounded tokens/s, not just macro wallclock.
                         preference=(0.2, 0.6, 0.2))     # energy-leaning
     sel.assignment["qwen3-4b"]        # -> pool index of the chosen macro
     sel.serving["qwen3-4b"].tokens_per_s
+
+Preference weights persist per deployment config as a small JSON artifact
+(:class:`PreferenceProfile`, :func:`load_preference_profile` /
+:func:`save_preference_profile`), wired into the serving launcher as
+``repro.launch.serve --dcim-profile PATH`` — the profile is read before
+selection and updated with the weights each workload was selected under.
 """
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -38,12 +46,91 @@ import numpy as np
 from ..core.dse import CodesignReport, GemmShape, cross_workload_codesign
 from ..core.macro import MacroSpec, calibrated_tech_for_reference
 from ..core.multispec import frontier_union, mso_search_many, scenario_specs
-from ..core.pareto import nondominated_mask, scalarize
+from ..core.pareto import nondominated_mask_auto, scalarize
 from ..core.tech import TechModel
 from ..roofline.dcim import DcimServingEstimate, dcim_serving_bound
 
 #: Objective order of a selection preference vector.
 PREFERENCE_OBJECTIVES = ("wallclock", "energy", "area")
+
+#: Schema tag of the persisted preference-profile artifact.
+PROFILE_SCHEMA = "syndcim-preference-profile/v1"
+
+
+def _check_weights(weights, where: str) -> tuple[float, float, float]:
+    w = tuple(float(x) for x in weights)
+    if len(w) != len(PREFERENCE_OBJECTIVES):
+        raise ValueError(f"{where}: need {len(PREFERENCE_OBJECTIVES)} "
+                         f"weights {PREFERENCE_OBJECTIVES}, got {len(w)}")
+    if any(x < 0 or not np.isfinite(x) for x in w):
+        raise ValueError(f"{where}: preference weights must be finite "
+                         f"and >= 0, got {w}")
+    return w
+
+
+@dataclass(frozen=True)
+class PreferenceProfile:
+    """Persisted per-deployment-config preference weights.
+
+    Maps workload names to (wallclock, energy, area) weight vectors — the
+    artifact a deployment config carries so serving-time selection keeps
+    applying the same PPA posture across restarts.  ``None`` weights mean
+    the legacy pure-wallclock selection (explicitly recorded, so a profile
+    distinguishes "never configured" from "configured as wallclock-only").
+    ``default`` applies to workloads the profile does not name."""
+
+    workloads: Mapping[str, tuple[float, float, float] | None] = field(
+        default_factory=dict)
+    default: tuple[float, float, float] | None = None
+
+    def weights_for(self, workload: str
+                    ) -> tuple[float, float, float] | None:
+        if workload in self.workloads:
+            return self.workloads[workload]
+        return self.default
+
+    def with_workload(self, workload: str,
+                      weights: Sequence[float] | None) -> "PreferenceProfile":
+        """A copy recording ``weights`` (or explicit wallclock-only ``None``)
+        for ``workload`` — the write half of the round trip."""
+        merged = dict(self.workloads)
+        merged[workload] = (None if weights is None
+                            else _check_weights(weights, workload))
+        return PreferenceProfile(workloads=merged, default=self.default)
+
+
+def load_preference_profile(path) -> PreferenceProfile:
+    """Read a profile artifact; a missing file is an empty profile (so the
+    first serve run of a fresh deployment config can seed it)."""
+    p = Path(path)
+    if not p.exists():
+        return PreferenceProfile()
+    data = json.loads(p.read_text())
+    if data.get("schema") != PROFILE_SCHEMA:
+        raise ValueError(f"{p}: not a preference profile "
+                         f"(schema={data.get('schema')!r}, "
+                         f"expected {PROFILE_SCHEMA!r})")
+    workloads = {
+        name: None if w is None else _check_weights(w, f"{p}:{name}")
+        for name, w in (data.get("workloads") or {}).items()}
+    default = data.get("default")
+    if default is not None:
+        default = _check_weights(default, f"{p}:default")
+    return PreferenceProfile(workloads=workloads, default=default)
+
+
+def save_preference_profile(path, profile: PreferenceProfile) -> None:
+    """Write a profile artifact (deterministic layout: sorted workloads)."""
+    payload = {
+        "schema": PROFILE_SCHEMA,
+        "default": (None if profile.default is None
+                    else list(profile.default)),
+        "workloads": {
+            name: (None if w is None else list(w))
+            for name, w in sorted(profile.workloads.items())},
+    }
+    Path(path).write_text(json.dumps(payload, indent=2, sort_keys=True)
+                          + "\n")
 
 
 def preference_select(objs, weights) -> int:
@@ -73,7 +160,9 @@ def preference_select(objs, weights) -> int:
     if not (w > 0).any():
         w = np.zeros_like(w)
         w[0] = 1.0                       # degenerate -> wallclock
-    cand = np.flatnonzero(nondominated_mask(objs))
+    # The pooled-frontier restriction; at lattice-scale pools the mask runs
+    # device-sharded (same bits as the host pass, see pareto module docs).
+    cand = np.flatnonzero(nondominated_mask_auto(objs))
     refs = [max(float(objs[cand, j].min()), 1e-30)
             for j in range(objs.shape[1])]
     scored = sorted((scalarize(w, objs[i], refs), tuple(objs[i]), int(i))
@@ -104,6 +193,10 @@ class MacroSelection:
     codesign: CodesignReport
     preference: tuple[float, ...] | None = None
     serving: dict = field(default_factory=dict)  # workload -> DcimServingEstimate
+    #: The weights each workload was actually selected with (profile entry,
+    #: profile default, or the global ``preference``; None = pure wallclock)
+    #: — what `--dcim-profile` persists back.
+    preferences_applied: dict = field(default_factory=dict)
 
     def label_for(self, workload: str) -> str:
         return self.pool_labels[self.assignment[workload]]
@@ -122,6 +215,9 @@ class MacroSelection:
             "assignment": {w: self.label_for(w) for w in self.workloads},
             "preference": (list(self.preference)
                            if self.preference is not None else None),
+            "preferences_applied": {
+                w: (list(p) if p is not None else None)
+                for w, p in self.preferences_applied.items()},
             "serving_tokens_per_s": {
                 w: round(self.serving[w].tokens_per_s, 1)
                 for w in self.workloads if w in self.serving},
@@ -132,7 +228,8 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
                   specs: Mapping[str, MacroSpec] | None = None,
                   tech: TechModel | None = None, resolution: int = 4,
                   n_macros: int = 256, ib: int = 8, wb: int = 8,
-                  preference: Sequence[float] | None = None
+                  preference: Sequence[float] | None = None,
+                  profile: PreferenceProfile | None = None
                   ) -> MacroSelection:
     """Synthesize the multi-spec frontier and pick a macro per workload.
 
@@ -144,8 +241,11 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     frequency exactly as the scalar accelerator reports would); with a
     ``preference`` (wallclock, energy, area) the pick is the scalarized best
     of the workload's pooled Pareto frontier (:func:`preference_select`).
-    Either way, each workload's selected macro is fed through the serving
-    roofline so the selection carries tokens/s bounds, not just wallclock."""
+    A ``profile`` (:class:`PreferenceProfile`, the persisted per-deployment
+    artifact) overrides ``preference`` per workload it names — an explicit
+    ``None`` entry keeps that workload on pure wallclock.  Either way, each
+    workload's selected macro is fed through the serving roofline so the
+    selection carries tokens/s bounds, not just wallclock."""
     if not workloads:
         raise ValueError("need at least one deployed workload")
     if tech is None:
@@ -158,12 +258,18 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     pool, labels = frontier_union(results, names)
     report = cross_workload_codesign(workloads, pool, n_macros=n_macros,
                                      ib=ib, wb=wb)
-    if preference is None:
-        assignment = {w: report.best_for(w) for w in report.workloads}
-    else:
-        preference = tuple(float(x) for x in preference)
-        assignment = {w: preferred_macro(report, w, preference)
-                      for w in report.workloads}
+    if preference is not None:
+        preference = _check_weights(preference, "preference")
+    applied = {}
+    for w in report.workloads:
+        weights = preference
+        if profile is not None and (w in profile.workloads
+                                    or profile.default is not None):
+            weights = profile.weights_for(w)
+        applied[w] = weights
+    assignment = {w: (report.best_for(w) if applied[w] is None
+                      else preferred_macro(report, w, applied[w]))
+                  for w in report.workloads}
     serving = {}
     for w in report.workloads:
         wi = report.workloads.index(w)
@@ -174,4 +280,5 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     return MacroSelection(workloads=report.workloads, scenarios=names,
                           pool_labels=tuple(labels), pool=tuple(pool),
                           assignment=assignment, codesign=report,
-                          preference=preference, serving=serving)
+                          preference=preference, serving=serving,
+                          preferences_applied=applied)

@@ -357,8 +357,12 @@ class TestPreferenceGridProperties:
             assert sum(w) == pytest.approx(1.0, abs=1e-9)
             assert any(x > 0 for x in w)
 
-    def test_zero_resolution_grid_is_empty(self):
-        assert preference_grid(0) == []
+    def test_zero_resolution_rejected(self):
+        """Regression: preference_grid(0) used to return an empty grid that
+        silently yielded empty sweeps downstream; it must refuse instead."""
+        for resolution in (0, -1, -7):
+            with pytest.raises(ValueError, match="resolution >= 1"):
+                preference_grid(resolution)
 
 
 class TestCodesignPermutationInvariance:

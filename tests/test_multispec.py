@@ -241,3 +241,29 @@ class TestServingSelection:
             & set(p.design.name() for p in results[1].frontier)
         for nm in shared:
             assert names.count(nm) == 2
+
+    def test_frontier_union_extract_pools_frontier(self, tech):
+        """extract=True filters the pooled candidates to the *pooled* Pareto
+        frontier (searcher objectives, shared eps band), keeping pool and
+        labels in sync and preserving pool order; extract=False keeps every
+        per-spec frontier point (the serving default)."""
+        from repro.core.pareto import nondominated_mask
+        scen = scenario_specs()
+        results = mso_search_many(list(scen.values()), None, tech,
+                                  resolution=3)
+        names = list(scen)
+        pool, labels = frontier_union(results, names)
+        extracted, xlabels = frontier_union(results, names, extract=True)
+        assert len(extracted) == len(xlabels) <= len(pool)
+        # exactly the host-mask survivors of the pooled objective matrix,
+        # in pool order
+        objs = np.asarray([(p.e_cycle_fj["int_lo"], p.area_um2,
+                            1.0 / p.fmax_hz) for p in pool])
+        mask = nondominated_mask(objs)
+        assert [id(p) for p in extracted] == \
+            [id(p) for p, keep in zip(pool, mask) if keep]
+        assert xlabels == [lb for lb, keep in zip(labels, mask) if keep]
+        # every survivor is genuinely non-dominated within the pool
+        kept = np.asarray([(p.e_cycle_fj["int_lo"], p.area_um2,
+                            1.0 / p.fmax_hz) for p in extracted])
+        assert nondominated_mask(kept).all()

@@ -16,7 +16,13 @@ alternate path, against the scalar oracle,
 across the §I scenario set and hypothesis-generated random specs, on however
 many devices the process sees (CI re-runs this file under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the in-file
-subprocess drill covers the 8-device ragged-padding case regardless).
+subprocess drills cover the 8-device cases regardless).
+
+All four paths now route through the shared execution engine
+(:mod:`repro.core.engine`); this file additionally pins that routing (no
+pack/pad/place copies left in the path modules) and the device-sharded
+Pareto extraction (``pareto.nondominated_mask_sharded`` bit-identical to the
+host mask on >= 100k points, both placement modes).
 """
 
 import json
@@ -26,6 +32,7 @@ import sys
 import textwrap
 from pathlib import Path
 
+import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
@@ -33,6 +40,8 @@ from hypothesis import strategies as st
 from repro.core import calibrated_tech_for_reference, mso_search
 from repro.core.macro import MacroSpec
 from repro.core.multispec import mso_search_many, scenario_specs
+from repro.core.pareto import (PARETO_EPS, nondominated_mask,
+                               nondominated_mask_sharded)
 from repro.core.shardspec import (mso_search_many_sharded, resolve_mode,
                                   spec_variants)
 
@@ -226,6 +235,173 @@ class TestShardedMechanics:
                            capture_output=True, text=True, env=env,
                            timeout=600, cwd=REPO)
         assert r.returncode == 0, f"scenario failed:\n{r.stderr[-3000:]}"
+        last = [ln for ln in r.stdout.strip().splitlines()
+                if ln.startswith("{")][-1]
+        out = json.loads(last)
+        assert out["devices"] == 8
+        assert out["jit"] and out["pmap"]
+
+
+# ---------------------------------------------------------------------------
+# Engine routing: every execution path is a strategy over repro.core.engine
+# ---------------------------------------------------------------------------
+
+
+class TestEngineRouting:
+    def test_strategies_registered_and_probed(self):
+        from repro.core import engine
+        assert {"jit", "vmap", "sharded-jit", "pmap"} <= set(engine.STRATEGIES)
+        for s in engine.STRATEGIES.values():
+            assert callable(s.available) and callable(s.run)
+        # the capability-probed dispatcher is the single mode authority
+        assert engine.resolve_sharded_mode("auto") in ("jit", "pmap")
+        with pytest.raises(ValueError):
+            engine.place("warp-drive")
+
+    def test_path_modules_are_thin_strategies(self):
+        """The refactor's contract: multispec/shardspec carry no pack/pad/
+        place copies of their own — shared pipeline code lives in the engine
+        and the path modules only alias it."""
+        from repro.core import engine, multispec, shardspec
+        assert multispec._group_key is engine.group_key
+        assert multispec._eval_kernel_many is engine._eval_kernel_many
+        assert shardspec.resolve_mode is engine.resolve_sharded_mode
+        for stale in ("_pack_group", "_unpack_group", "_grouped",
+                      "_evaluate_group"):
+            assert not hasattr(multispec, stale), f"copy left: {stale}"
+        for stale in ("_pad_lanes", "_evaluate_group_sharded",
+                      "_supports_named_sharding", "_eval_kernel_pmap"):
+            assert not hasattr(shardspec, stale), f"copy left: {stale}"
+
+    def test_plan_groups_and_execute_orders(self, tech):
+        """plan() buckets same-signature specs into one group and execute()
+        returns results in input order across groups."""
+        from repro.core import engine
+        from repro.core import subcircuits as sc
+        specs = spec_variants(3, seed=2)
+        mixed = [specs[0],
+                 MacroSpec(h=32, w=32, mcr=2, int_precisions=(4, 8),
+                           fp_precisions=("FP8",), f_mac_hz=500e6,
+                           f_wupdate_hz=500e6, vdd=0.9),
+                 specs[1]]
+        p = engine.plan(mixed, tech, (sc.MemCellKind.SRAM_6T,), mode="vmap")
+        assert sorted(len(g) for g in p.groups) == [1, 2]
+        out = engine.execute(p)
+        assert [lat.spec for lat, _, _ in out] == mixed
+
+
+# ---------------------------------------------------------------------------
+# Sharded Pareto extraction == host extraction, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _extraction_points(seed: int, n: int, k: int = 3) -> np.ndarray:
+    """Random objectives salted with exact duplicates, eps-near ties and a
+    strictly dominated row — the cases where a wrong eps band or a survivor-
+    only refinement would diverge from the host mask."""
+    rng = np.random.default_rng(seed)
+    objs = rng.uniform(0.1, 10.0, size=(n, k))
+    if n >= 8:
+        objs[n // 2] = objs[0]                    # exact duplicate
+        objs[n // 3] = objs[1] + PARETO_EPS / 4   # inside the tie band
+        objs[n // 4] = objs[2] + 1.0              # strictly dominated
+    return objs
+
+
+class TestShardedParetoExtraction:
+    """``nondominated_mask_sharded`` must return bit-identical frontier
+    membership and output order vs the host ``nondominated_mask`` — on 1
+    device in a bare tier-1 run, on 8 fake host devices in the CI re-run of
+    this file, and on a pinned 8-device subprocess drill regardless."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           n=st.sampled_from([1, 7, 64, 257, 2048]),
+           k=st.sampled_from([1, 2, 3, 4]),
+           mode=st.sampled_from(["jit", "pmap"]))
+    def test_mask_bit_identical(self, seed, n, k, mode):
+        objs = _extraction_points(seed, n, k)
+        host = nondominated_mask(objs)
+        shard = nondominated_mask_sharded(objs, mode=mode)
+        assert np.array_equal(host, shard)
+
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           chunk=st.sampled_from([64, 100, 1024]))
+    def test_mask_chunk_invariant(self, seed, chunk):
+        """Block boundaries must not move the verdicts."""
+        objs = _extraction_points(seed, 1500, 3)
+        host = nondominated_mask(objs)
+        for mode in ("jit", "pmap"):
+            got = nondominated_mask_sharded(objs, chunk=chunk, mode=mode)
+            assert np.array_equal(host, got)
+
+    def test_frontier_order_identical_through_shared_tail(self, tech):
+        """The engine's frontier tail orders identically through the host and
+        the sharded mask (same survivor indices, same objective-tuple
+        sort)."""
+        from repro.core.engine import extract_frontier
+        objs = _extraction_points(11, 4096, 3)
+        assert extract_frontier(objs, nondominated_mask) == \
+            extract_frontier(objs, nondominated_mask_sharded)
+
+    def test_lattice_scale_100k_bit_identical(self):
+        """The satellite contract: >= 100k random points, host vs sharded,
+        identical membership and order (flatnonzero sequences equal)."""
+        objs = _extraction_points(0, 100_000, 3)
+        host = nondominated_mask(objs)
+        for mode in ("jit", "pmap"):
+            shard = nondominated_mask_sharded(objs, mode=mode)
+            assert np.array_equal(host, shard), f"mask diverged in {mode}"
+            assert np.array_equal(np.flatnonzero(host),
+                                  np.flatnonzero(shard))
+
+    def test_sharded_sweep_frontier_matches_unsharded(self, tech):
+        """design_space_sweep_many_sharded extracts its frontiers through the
+        sharded mask — indices must match the unsharded sweeps exactly."""
+        from repro.core.multispec import design_space_sweep_many
+        from repro.core.shardspec import design_space_sweep_many_sharded
+        specs = spec_variants(3, seed=9)
+        ref = design_space_sweep_many(specs, tech)
+        for mode in ("jit", "pmap"):
+            got = design_space_sweep_many_sharded(specs, tech, mode=mode)
+            for g, r in zip(got, ref):
+                assert g.extract_mask is not None
+                assert g.frontier_indices() == r.frontier_indices()
+
+    def test_extraction_eight_fake_devices_bit_identical(self):
+        """Subprocess drill (device count is fixed at first jax init): 100k
+        points on 8 fake host devices, both modes, bit-identical to the host
+        mask computed in the same process."""
+        env = {**os.environ,
+               "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+               "PYTHONPATH": str(REPO / "src"),
+               "JAX_PLATFORMS": "cpu"}
+        code = textwrap.dedent("""
+            import json
+            import numpy as np
+            import jax
+            from repro.core.pareto import (PARETO_EPS, nondominated_mask,
+                                           nondominated_mask_sharded)
+
+            rng = np.random.default_rng(0)
+            objs = rng.uniform(0.1, 10.0, size=(100_000, 3))
+            objs[50_000] = objs[0]
+            objs[33_333] = objs[1] + PARETO_EPS / 4
+            host = nondominated_mask(objs)
+            verdict = {"devices": len(jax.devices())}
+            for mode in ("jit", "pmap"):
+                shard = nondominated_mask_sharded(objs, mode=mode)
+                verdict[mode] = bool(
+                    np.array_equal(host, shard)
+                    and np.array_equal(np.flatnonzero(host),
+                                       np.flatnonzero(shard)))
+            print(json.dumps(verdict))
+        """)
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, env=env,
+                           timeout=600, cwd=REPO)
+        assert r.returncode == 0, f"drill failed:\n{r.stderr[-3000:]}"
         last = [ln for ln in r.stdout.strip().splitlines()
                 if ln.startswith("{")][-1]
         out = json.loads(last)

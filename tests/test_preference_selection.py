@@ -13,6 +13,8 @@ The contract of :func:`repro.serve.select.preference_select` (and its
     eps-dominated candidate (shared PARETO_EPS band) is never selected.
 """
 
+import json
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -21,7 +23,9 @@ from hypothesis import strategies as st
 from repro.core import calibrated_tech_for_reference
 from repro.core.dse import GemmShape
 from repro.core.pareto import PARETO_EPS, dominates, nondominated_mask
-from repro.serve.select import (preference_select, preferred_macro,
+from repro.serve.select import (PROFILE_SCHEMA, PreferenceProfile,
+                                load_preference_profile, preference_select,
+                                preferred_macro, save_preference_profile,
                                 select_macros)
 
 
@@ -200,3 +204,97 @@ class TestPreferenceSelectionEndToEnd:
             assert sel.codesign.wallclock_s[wi, sel.assignment[w]] == \
                 sel.codesign.wallclock_s[wi].min()
         assert set(sel.serving) == set(sel.workloads)
+
+
+# ---------------------------------------------------------------------------
+# Preference profiles: persisted per-deployment-config weights
+# ---------------------------------------------------------------------------
+
+
+class TestPreferenceProfiles:
+    @pytest.fixture(scope="class")
+    def tech(self):
+        return calibrated_tech_for_reference()
+
+    def test_round_trip(self, tmp_path):
+        """save -> load reproduces workload weights, the explicit-wallclock
+        None entry, and the default — the --dcim-profile artifact contract."""
+        profile = PreferenceProfile(
+            workloads={"vision": (0.2, 0.6, 0.2), "language": None},
+            default=(1.0, 0.0, 0.0))
+        path = tmp_path / "profile.json"
+        save_preference_profile(path, profile)
+        back = load_preference_profile(path)
+        assert back.workloads == profile.workloads
+        assert back.default == profile.default
+        assert back.weights_for("vision") == (0.2, 0.6, 0.2)
+        assert back.weights_for("language") is None        # explicit wallclock
+        assert back.weights_for("unseen") == (1.0, 0.0, 0.0)  # default
+
+    def test_missing_file_is_empty_profile(self, tmp_path):
+        profile = load_preference_profile(tmp_path / "absent.json")
+        assert profile.workloads == {}
+        assert profile.default is None
+        assert profile.weights_for("anything") is None
+
+    def test_with_workload_updates_and_persists(self, tmp_path):
+        path = tmp_path / "profile.json"
+        profile = load_preference_profile(path)          # empty
+        profile = profile.with_workload("qwen3-4b", (0.1, 0.8, 0.1))
+        profile = profile.with_workload("whisper-tiny", None)
+        save_preference_profile(path, profile)
+        back = load_preference_profile(path)
+        assert back.weights_for("qwen3-4b") == (0.1, 0.8, 0.1)
+        assert back.weights_for("whisper-tiny") is None
+
+    def test_rejects_bad_artifacts(self, tmp_path):
+        bad_schema = tmp_path / "bad_schema.json"
+        bad_schema.write_text('{"schema": "something-else/v9"}')
+        with pytest.raises(ValueError, match="schema"):
+            load_preference_profile(bad_schema)
+        bad_weights = tmp_path / "bad_weights.json"
+        bad_weights.write_text(json.dumps({
+            "schema": PROFILE_SCHEMA, "default": None,
+            "workloads": {"vision": [1.0, -2.0, 0.0]}}))
+        with pytest.raises(ValueError, match="finite and >= 0"):
+            load_preference_profile(bad_weights)
+        with pytest.raises(ValueError):
+            PreferenceProfile().with_workload("w", (1.0, 0.0))
+
+    def test_profile_drives_selection_per_workload(self, tech):
+        """A profile naming both workloads reproduces exactly the assignments
+        of the equivalent explicit-preference runs: weighted where it has
+        weights, legacy wallclock where it records None."""
+        profile = PreferenceProfile(
+            workloads={"vision": (0.2, 0.6, 0.2), "language": None})
+        sel = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                            n_macros=64, profile=profile)
+        ref_pref = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                                 n_macros=64, preference=(0.2, 0.6, 0.2))
+        ref_wall = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                                 n_macros=64)
+        assert sel.assignment["vision"] == ref_pref.assignment["vision"]
+        assert sel.assignment["language"] == ref_wall.assignment["language"]
+        assert sel.preferences_applied == {"vision": (0.2, 0.6, 0.2),
+                                           "language": None}
+
+    def test_profile_default_and_global_fallback(self, tech):
+        """Workloads the profile does not name fall back to the profile
+        default when set, else to the call's global preference."""
+        profile = PreferenceProfile(workloads={},
+                                    default=(0.2, 0.6, 0.2))
+        sel = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                            n_macros=64, profile=profile,
+                            preference=(1.0, 0.0, 0.0))
+        assert sel.preferences_applied == {"vision": (0.2, 0.6, 0.2),
+                                           "language": (0.2, 0.6, 0.2)}
+        ref = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                            n_macros=64, preference=(0.2, 0.6, 0.2))
+        assert sel.assignment == ref.assignment
+        # no default, nothing named -> the global preference applies
+        sel2 = select_macros(_toy_workloads(), tech=tech, resolution=3,
+                             n_macros=64, profile=PreferenceProfile(),
+                             preference=(0.2, 0.6, 0.2))
+        assert sel2.assignment == ref.assignment
+        assert sel2.preferences_applied == {"vision": (0.2, 0.6, 0.2),
+                                            "language": (0.2, 0.6, 0.2)}
