@@ -69,10 +69,18 @@ def run() -> list[tuple]:
     ]
 
     # ---- serving-time macro selection over the multi-spec frontier ---------
+    # A fresh SynthesisService per call keeps this row measuring COLD
+    # selection (synthesis included): select_macros memoizes through the
+    # process-wide service by default, which would turn the timed call into
+    # a cache hit after the warmup.
+    from repro.service import SynthesisService
     workloads = {a: gemm_inventory(get_config(a)) for a in SELECT_ARCHS}
-    sel, us_sel = timed(lambda: select_macros(workloads, tech=tech,
-                                              resolution=GRID_RESOLUTION),
-                        iters=1)
+    sel, us_sel = timed(
+        lambda: select_macros(workloads, tech=tech,
+                              resolution=GRID_RESOLUTION,
+                              service=SynthesisService(
+                                  tech=tech, resolution=GRID_RESOLUTION)),
+        iters=1)
     s = sel.summary()
     rows.append((f"multispec/select/{len(workloads)}workloads", us_sel,
                  f"candidates={s['candidates']};"

@@ -1,0 +1,75 @@
+"""Online synthesis service: coalesced+cached request serving vs naive
+per-request synthesis on a closed-loop mixed hit/miss request stream.
+
+The stream draws single-spec requests from a small posture pool (seeded, so
+runs are reproducible) and submits them in waves, the way a serving front
+sees traffic: the first wave is mostly cache misses, later waves mix warm
+hits with stragglers.  The naive baseline synthesizes every request from
+cold with its own engine pass; the service dedups against the content-
+addressed frontier cache, coalesces in-batch duplicates, and fuses the
+remaining misses into one engine pass per wave.
+
+The tracked row is ``service/coalesce_speedup`` (asserted present in CI's
+bench.json, required >= 2x by the acceptance bar) and carries
+``identical=`` — per-request results must stay bit-identical to the naive
+passes while the dispatch collapses."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import calibrated_tech_for_reference
+from repro.core.multispec import mso_search_many
+from repro.core.shardspec import spec_variants
+from repro.service import SynthesisService
+
+from .common import frontiers_identical, timed
+
+N_UNIQUE = 6           # distinct postures in the request pool
+N_REQUESTS = 24        # total closed-loop stream length
+WAVE = 8               # requests per coalescing window
+STREAM_SEED = 0
+GRID_RESOLUTION = 3
+
+
+def _stream(uniques):
+    rng = np.random.default_rng(STREAM_SEED)
+    picks = rng.integers(0, len(uniques), N_REQUESTS)
+    return [uniques[int(i)] for i in picks]
+
+
+def run() -> list[tuple]:
+    tech = calibrated_tech_for_reference()
+    uniques = spec_variants(N_UNIQUE, seed=STREAM_SEED)
+    stream = _stream(uniques)
+    waves = [stream[i:i + WAVE] for i in range(0, len(stream), WAVE)]
+
+    def naive():
+        # One cold engine pass per request — no cache, no coalescing.
+        return [mso_search_many([s], None, tech,
+                                resolution=GRID_RESOLUTION)[0]
+                for s in stream]
+
+    def serviced():
+        svc = SynthesisService(tech=tech, resolution=GRID_RESOLUTION)
+        out = []
+        for wave in waves:
+            out.extend(svc.synthesize_many(wave))
+        return out, svc
+
+    ref, us_naive = timed(naive, iters=1)
+    (got, svc), us_svc = timed(serviced, iters=1)
+
+    identical = frontiers_identical(ref, got)
+    s = svc.stats
+
+    return [
+        (f"service/synthesize_naive/{N_REQUESTS}req", us_naive,
+         f"requests={N_REQUESTS};unique={N_UNIQUE}"),
+        (f"service/synthesize_service/{N_REQUESTS}req", us_svc,
+         f"cache_hits={s.cache_hits};coalesced={s.coalesced};"
+         f"misses={s.misses};fused_passes={s.fused_passes}"),
+        ("service/coalesce_speedup", us_svc,
+         f"speedup={us_naive / us_svc:.2f}x;identical={identical};"
+         f"requests={N_REQUESTS};unique={N_UNIQUE};waves={len(waves)}"),
+    ]

@@ -13,7 +13,7 @@ import traceback
 
 from . import (bench_csa, bench_dse, bench_fig7_energy, bench_fig8_pareto,
                bench_fig9_shmoo, bench_kernels, bench_multispec,
-               bench_pareto, bench_roofline, bench_shardspec,
+               bench_pareto, bench_roofline, bench_service, bench_shardspec,
                bench_table1_features, bench_table2_sota)
 from .common import emit, rows_to_dicts
 
@@ -29,6 +29,7 @@ MODULES = [
     ("multispec", bench_multispec),
     ("shardspec", bench_shardspec),
     ("pareto", bench_pareto),
+    ("service", bench_service),
     ("roofline", bench_roofline),
 ]
 

@@ -26,9 +26,8 @@ pipeline; the path modules are now thin strategies over it:
             (:func:`extract_frontier`).
 
 Execution strategies live in a registry (:data:`STRATEGIES`,
-:func:`register_strategy`), so scaling further — e.g. the ROADMAP's
-multi-host spec sharding — is a strategy registration, not a fifth
-reimplementation of the pipeline:
+:func:`register_strategy`), so scaling further is a strategy registration,
+not a fifth reimplementation of the pipeline:
 
   ``"jit"``          one spec, unbatched kernel launch (the
                      :mod:`repro.core.batched` path);
@@ -39,7 +38,17 @@ reimplementation of the pipeline:
                      (:mod:`repro.core.shardspec`'s preferred mode);
   ``"pmap"``         the vmapped group folded over a leading device axis —
                      the fallback for runtimes whose ``jax.sharding``
-                     surface is incomplete.
+                     surface is incomplete;
+  ``"multihost"``    the spec axis partitioned over a ``('host', 'spec')``
+                     mesh — one mesh axis per host — registered by
+                     :mod:`repro.core.multihost` (the ROADMAP's multi-host
+                     next step, landed as exactly the promised
+                     ``register_strategy`` call).
+
+Execution is observable: :func:`add_execute_hook` registers a callback fired
+once per :func:`execute` call with the plan being run.  The online synthesis
+service (:mod:`repro.service`) counts engine executions through this hook to
+prove cache hits and request coalescing never re-enter the engine.
 """
 
 from __future__ import annotations
@@ -172,12 +181,16 @@ class Placement:
 class Strategy:
     """One way to run a packed group: ``run(packed, placement)`` returns the
     kernel outputs as host numpy with a leading spec axis of exactly
-    ``len(packed)`` lanes."""
+    ``len(packed)`` lanes.  ``default_mesh`` (when set) builds the mesh
+    :func:`place` binds when the caller passes none — each sharded strategy
+    owns its placement geometry instead of :func:`place` special-casing
+    names."""
 
     name: str
     available: Callable[[], bool]
     run: Callable[[PackedGroup, Placement], dict]
     sharded: bool = False
+    default_mesh: Callable[[], Any] | None = None
 
 
 #: The capability-probed strategy registry — scaling the engine further
@@ -192,22 +205,29 @@ def register_strategy(strategy: Strategy) -> Strategy:
 
 
 #: Public mode names of the device-sharded surface (shardspec + sharded
-#: Pareto extraction): "jit" = NamedSharding placement, "pmap" = the fallback.
-SHARDED_MODES = ("auto", "jit", "pmap")
+#: Pareto extraction): "jit" = NamedSharding placement, "pmap" = the
+#: fallback, "multihost" = the ('host', 'spec') mesh strategy.
+SHARDED_MODES = ("auto", "jit", "pmap", "multihost")
 
 #: Public sharded mode -> engine strategy name.
-_SHARDED_STRATEGY = {"jit": "sharded-jit", "pmap": "pmap"}
+_SHARDED_STRATEGY = {"jit": "sharded-jit", "pmap": "pmap",
+                     "multihost": "multihost"}
 
 
 def resolve_sharded_mode(mode: str = "auto") -> str:
     """'auto' picks NamedSharding+jit when the runtime has it, else pmap.
     This is the one capability-probed dispatcher every sharded surface
-    (spec sweeps and Pareto extraction) resolves through."""
+    (spec sweeps and Pareto extraction) resolves through.  "multihost" falls
+    back to the single-host auto pick when the multi-host strategy is
+    unavailable on this runtime — the fallback contract of the ROADMAP's
+    multi-host registration."""
     if mode not in SHARDED_MODES:
         raise ValueError(f"unknown shardspec mode: {mode!r}; "
                          f"pick from {SHARDED_MODES}")
     if mode == "auto":
         return "jit" if STRATEGIES["sharded-jit"].available() else "pmap"
+    if mode == "multihost" and not STRATEGIES["multihost"].available():
+        return resolve_sharded_mode("auto")
     return mode
 
 
@@ -217,9 +237,11 @@ def place(mode: str = "auto", mesh=None, *, sharded: bool = False
 
     ``mode`` is an engine strategy name or ``"auto"``; ``sharded=True`` makes
     "auto" resolve across devices (NamedSharding-jit when the runtime has it,
-    else pmap) instead of to the single-device vmap strategy.  The default
-    mesh for "sharded-jit" is a ``('spec',)`` mesh over every visible device;
-    the pmap strategy needs nothing from ``jax.sharding``."""
+    else pmap) instead of to the single-device vmap strategy.  A sharded
+    strategy with no caller-provided mesh is bound to its own
+    ``default_mesh`` (a ``('spec',)`` mesh over every visible device for
+    "sharded-jit", a ``('host', 'spec')`` mesh for "multihost"); the pmap
+    strategy needs nothing from ``jax.sharding``."""
     if mode == "auto":
         mode = (_SHARDED_STRATEGY[resolve_sharded_mode("auto")] if sharded
                 else "vmap")
@@ -229,9 +251,8 @@ def place(mode: str = "auto", mesh=None, *, sharded: bool = False
     if not STRATEGIES[mode].available():
         raise ValueError(f"engine mode {mode!r} is not available "
                          "on this runtime")
-    if mesh is None and mode == "sharded-jit":
-        from ..parallel.sharding import spec_sweep_mesh
-        mesh = spec_sweep_mesh()
+    if mesh is None and STRATEGIES[mode].default_mesh is not None:
+        mesh = STRATEGIES[mode].default_mesh()
     if mesh is not None:
         n_dev = int(mesh.devices.size)
     elif STRATEGIES[mode].sharded:
@@ -342,10 +363,16 @@ def _run_pmap(packed: PackedGroup, placement: Placement) -> dict:
     return out
 
 
+def _spec_sweep_mesh():
+    from ..parallel.sharding import spec_sweep_mesh
+    return spec_sweep_mesh()
+
+
 register_strategy(Strategy("jit", lambda: True, _run_jit))
 register_strategy(Strategy("vmap", lambda: hasattr(jax, "vmap"), _run_vmap))
 register_strategy(Strategy("sharded-jit", _supports_named_sharding,
-                           _run_sharded_jit, sharded=True))
+                           _run_sharded_jit, sharded=True,
+                           default_mesh=_spec_sweep_mesh))
 register_strategy(Strategy("pmap", lambda: hasattr(jax, "pmap"), _run_pmap,
                            sharded=True))
 
@@ -391,11 +418,32 @@ def plan(specs: Sequence[MacroSpec], tech: TechModel,
     return plan_for(lattices, tables, mode=mode, mesh=mesh, sharded=sharded)
 
 
+#: Observers fired once per :func:`execute` call with the plan being run —
+#: the instrumentation point the synthesis service and its tests use to
+#: count engine entries (a cache hit or coalesced duplicate must cause
+#: zero of them).
+_EXECUTE_HOOKS: list[Callable[[ExecutionPlan], None]] = []
+
+
+def add_execute_hook(hook: Callable[[ExecutionPlan], None]
+                     ) -> Callable[[ExecutionPlan], None]:
+    """Register an observer called with every :class:`ExecutionPlan` the
+    engine runs.  Returns ``hook`` so it can be used as a decorator."""
+    _EXECUTE_HOOKS.append(hook)
+    return hook
+
+
+def remove_execute_hook(hook: Callable[[ExecutionPlan], None]) -> None:
+    _EXECUTE_HOOKS.remove(hook)
+
+
 def execute(p: ExecutionPlan
             ) -> list[tuple[DesignLattice, SpecTables, BatchedPPA]]:
     """Run every group of the plan under its placed strategy and finish with
     the shared numpy tail.  Results are returned in input order and are
     bit-identical per spec across every strategy."""
+    for hook in tuple(_EXECUTE_HOOKS):
+        hook(p)
     strategy = STRATEGIES[p.placement.mode]
     out: list = [None] * len(p)
     for members in p.groups:
@@ -426,3 +474,9 @@ def extract_frontier(objs, mask_fn: Callable[[np.ndarray], np.ndarray]
     survivors = np.flatnonzero(mask)
     order = pareto_indices([tuple(o) for o in objs[mask]])
     return [int(survivors[i]) for i in order]
+
+
+# The multi-host strategy registers itself against this module's registry;
+# importing it last keeps the registration a plain `register_strategy` call
+# (the ROADMAP contract) without a circular-import dance.
+from . import multihost as _multihost  # noqa: E402,F401

@@ -4,9 +4,13 @@
         --batch 4 --prompt-len 64 --decode-steps 64 --mesh 1x1
 
 ``--dcim-select`` adds the serving-time macro-selection step: the launcher
-synthesizes the multi-spec DCIM frontier (one fused pass over the scenario
-specs), co-designs it against the deployed arch's GEMM inventory, and reports
-the macro the workload would be served on.
+synthesizes the multi-spec DCIM frontier through the online synthesis
+service (one fused, cached pass over the scenario specs), co-designs it
+against the deployed arch's GEMM inventory, and reports the macro the
+workload would be served on.  ``--dcim-cache PATH`` points the service at a
+persistent frontier store, making the second launch warm (zero engine
+executions); ``--dcim-profile PATH`` round-trips the preference-profile
+artifact through :func:`repro.serve.select.apply_profile`.
 """
 
 from __future__ import annotations
@@ -51,28 +55,42 @@ def main() -> None:
                          "(profile weights for this arch override "
                          "--dcim-pref) and updated afterwards with the "
                          "weights the selection ran under")
+    ap.add_argument("--dcim-cache", default=None, metavar="PATH",
+                    help="persistent frontier-cache directory for the "
+                         "synthesis service: the first --dcim-select launch "
+                         "writes the synthesized scenario frontiers there, "
+                         "every later launch serves them with zero engine "
+                         "executions")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.dcim_select:
         from ..core.dse import gemm_inventory
-        from ..serve.select import (load_preference_profile, save_preference_profile,
-                                    select_macros)
+        from ..serve.select import apply_profile, select_macros
+        from ..service import FrontierCache, SynthesisService, get_service
         pref = None
         if args.dcim_pref is not None:
             pref = tuple(float(x) for x in args.dcim_pref.split(","))
-        profile = None
+        if args.dcim_cache is not None:
+            service = SynthesisService(
+                cache=FrontierCache(store_dir=args.dcim_cache))
+        else:
+            service = get_service()
+        sel, _ = apply_profile(
+            args.dcim_profile,
+            lambda profile: select_macros({cfg.name: gemm_inventory(cfg)},
+                                          n_macros=args.dcim_macros,
+                                          preference=pref, profile=profile,
+                                          service=service))
         if args.dcim_profile is not None:
-            profile = load_preference_profile(args.dcim_profile)
-        sel = select_macros({cfg.name: gemm_inventory(cfg)},
-                            n_macros=args.dcim_macros, preference=pref,
-                            profile=profile)
-        if args.dcim_profile is not None:
-            save_preference_profile(
-                args.dcim_profile,
-                profile.with_workload(cfg.name,
-                                      sel.preferences_applied[cfg.name]))
             print(f"dcim: preference profile updated: {args.dcim_profile}")
+        cs, ss = service.cache.stats, service.stats
+        print(f"dcim: synthesis service "
+              f"{'warm' if ss.misses == 0 else 'cold'} "
+              f"(hits={cs.hits + cs.disk_hits} misses={ss.misses} "
+              f"fused_passes={ss.fused_passes}"
+              + (f", cache={args.dcim_cache}" if args.dcim_cache else "")
+              + ")")
         wi = sel.codesign.workloads.index(cfg.name)
         di = sel.assignment[cfg.name]
         est = sel.serving_for(cfg.name)

@@ -74,6 +74,24 @@ def spec_sweep_mesh(devices=None) -> Mesh:
     return Mesh(_np.asarray(devices), ("spec",))
 
 
+def host_spec_mesh(devices=None, n_hosts: int | None = None) -> Mesh:
+    """2-D ('host', 'spec') mesh: one mesh axis per host, the per-host
+    devices along 'spec' — the placement of the engine's multi-host strategy
+    (:mod:`repro.core.multihost`).  ``n_hosts`` defaults to
+    ``jax.process_count()``; on a single-host runtime the host axis has
+    length 1 and the mesh degenerates to the single-host spec sweep (same
+    device set, same partitioning of the stacked spec axis)."""
+    import numpy as _np
+    if devices is None:
+        devices = jax.devices()
+    devs = _np.asarray(devices)
+    if n_hosts is None:
+        n_hosts = jax.process_count() if hasattr(jax, "process_count") else 1
+    if n_hosts < 1 or devs.size % n_hosts:
+        n_hosts = 1            # ragged host split: fall back to one host row
+    return Mesh(devs.reshape(n_hosts, -1), ("host", "spec"))
+
+
 def rules_for_mesh(mesh: Mesh, overrides: dict[str, Any] | None = None
                    ) -> dict[str, Any]:
     """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""

@@ -1,5 +1,5 @@
-from .select import MacroSelection, select_macros
+from .select import MacroSelection, apply_profile, select_macros
 from .step import make_decode_step, make_prefill, greedy_generate
 
-__all__ = ["MacroSelection", "select_macros",
+__all__ = ["MacroSelection", "apply_profile", "select_macros",
            "make_decode_step", "make_prefill", "greedy_generate"]

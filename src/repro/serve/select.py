@@ -30,8 +30,16 @@ roofline-bounded tokens/s, not just macro wallclock.
 Preference weights persist per deployment config as a small JSON artifact
 (:class:`PreferenceProfile`, :func:`load_preference_profile` /
 :func:`save_preference_profile`), wired into the serving launcher as
-``repro.launch.serve --dcim-profile PATH`` — the profile is read before
-selection and updated with the weights each workload was selected under.
+``repro.launch.serve --dcim-profile PATH`` — the read-then-update round trip
+is one shared helper, :func:`apply_profile`, used by the CLI and service
+paths alike.
+
+Frontier synthesis is memoized through the online synthesis service
+(:mod:`repro.service`): ``select_macros`` routes the multi-spec pass through
+a :class:`repro.service.SynthesisService` (the process-wide default unless
+one is passed), so a second selection against the same scenario set performs
+zero engine executions and a ``--dcim-cache`` directory makes the second
+*launch* warm too.
 """
 
 from __future__ import annotations
@@ -39,13 +47,13 @@ from __future__ import annotations
 import json
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Mapping, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
 from ..core.dse import CodesignReport, GemmShape, cross_workload_codesign
 from ..core.macro import MacroSpec, calibrated_tech_for_reference
-from ..core.multispec import frontier_union, mso_search_many, scenario_specs
+from ..core.multispec import frontier_union, scenario_specs
 from ..core.pareto import nondominated_mask_auto, scalarize
 from ..core.tech import TechModel
 from ..roofline.dcim import DcimServingEstimate, dcim_serving_bound
@@ -131,6 +139,30 @@ def save_preference_profile(path, profile: PreferenceProfile) -> None:
     }
     Path(path).write_text(json.dumps(payload, indent=2, sort_keys=True)
                           + "\n")
+
+
+def apply_profile(path, select: Callable[[PreferenceProfile | None],
+                                         "MacroSelection"]
+                  ) -> tuple["MacroSelection", PreferenceProfile | None]:
+    """The one read-then-update implementation of the ``--dcim-profile``
+    round trip, shared by the CLI launcher and the service path.
+
+    ``select`` is called with the profile loaded from ``path`` (or ``None``
+    when ``path`` is ``None`` — selection then runs unprofiled and nothing
+    is written).  Afterwards the artifact is re-written with the weights
+    each workload was *actually* selected under
+    (``MacroSelection.preferences_applied``), so the persisted posture
+    converges to what the deployment serves with.  Returns
+    ``(selection, updated profile or None)``."""
+    if path is None:
+        return select(None), None
+    profile = load_preference_profile(path)
+    sel = select(profile)
+    updated = profile
+    for w, weights in sorted(sel.preferences_applied.items()):
+        updated = updated.with_workload(w, weights)
+    save_preference_profile(path, updated)
+    return sel, updated
 
 
 def preference_select(objs, weights) -> int:
@@ -229,8 +261,8 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
                   tech: TechModel | None = None, resolution: int = 4,
                   n_macros: int = 256, ib: int = 8, wb: int = 8,
                   preference: Sequence[float] | None = None,
-                  profile: PreferenceProfile | None = None
-                  ) -> MacroSelection:
+                  profile: PreferenceProfile | None = None,
+                  service=None) -> MacroSelection:
     """Synthesize the multi-spec frontier and pick a macro per workload.
 
     ``workloads`` maps deployed-workload names to GEMM inventories (see
@@ -245,7 +277,13 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     artifact) overrides ``preference`` per workload it names — an explicit
     ``None`` entry keeps that workload on pure wallclock.  Either way, each
     workload's selected macro is fed through the serving roofline so the
-    selection carries tokens/s bounds, not just wallclock."""
+    selection carries tokens/s bounds, not just wallclock.
+
+    The multi-spec synthesis pass is served by ``service`` (a
+    :class:`repro.service.SynthesisService`; default: the process-wide
+    instance) — the scenario frontier is synthesized once per process (or
+    once per persistent cache directory) and every later selection is a
+    cache hit with zero engine executions."""
     if not workloads:
         raise ValueError("need at least one deployed workload")
     if tech is None:
@@ -253,8 +291,11 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     if specs is None:
         specs = scenario_specs()
     names = tuple(specs)
-    results = mso_search_many([specs[n] for n in names], None, tech,
-                              resolution)
+    if service is None:
+        from ..service import get_service
+        service = get_service()
+    results = service.synthesize_many([specs[n] for n in names], tech=tech,
+                                      resolution=resolution)
     pool, labels = frontier_union(results, names)
     report = cross_workload_codesign(workloads, pool, n_macros=n_macros,
                                      ib=ib, wb=wb)

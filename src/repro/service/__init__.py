@@ -1,0 +1,24 @@
+"""repro.service — the online synthesis service layer.
+
+Turns the offline multi-spec compiler into a serving system: single-spec
+requests are canonicalized (:mod:`repro.service.keys`), answered from a
+content-addressed frontier cache (:mod:`repro.service.cache`), and cache
+misses are coalesced into one fused pass through the shared execution
+engine (:mod:`repro.service.service`).  Responses are bit-identical to
+fresh unbatched engine runs in every tier.
+"""
+
+from .artifacts import (ARTIFACT_SCHEMA, result_from_payload,
+                        result_to_payload)
+from .cache import CacheArtifactError, CacheStats, FrontierCache
+from .keys import cache_key, canonical_spec, lattice_signature, spec_key
+from .service import (SERVICE_MODES, ServiceStats, SynthesisService,
+                      get_service, reset_service, resolve_service_mode)
+
+__all__ = [
+    "ARTIFACT_SCHEMA", "CacheArtifactError", "CacheStats", "FrontierCache",
+    "SERVICE_MODES", "ServiceStats", "SynthesisService", "cache_key",
+    "canonical_spec", "get_service", "lattice_signature",
+    "reset_service", "resolve_service_mode", "result_from_payload",
+    "result_to_payload", "spec_key",
+]

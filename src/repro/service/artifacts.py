@@ -1,0 +1,132 @@
+"""Lossless JSON encoding of synthesis results for the on-disk cache store.
+
+The on-disk half of the :class:`repro.service.cache.FrontierCache` persists
+one :class:`repro.core.searcher.SearchResult` per artifact.  The encoding is
+bit-exact: every float field is written through Python's shortest-round-trip
+float repr (IEEE-754 doubles survive a dump/load cycle unchanged, including
+the ``inf`` TOPS/W of leakage-free corners), enums go through their value
+strings, and tuples/dicts keep their order — so a frontier loaded from disk
+satisfies the same bit-identity contract as an in-memory hit (pinned by
+``tests/test_service.py``).
+"""
+
+from __future__ import annotations
+
+from ..core.csa import CSADesign, CSAReport
+from ..core.macro import MacroDesign, MacroPPA, MacroSpec, PathReport
+from ..core.searcher import SearchResult
+from ..core.subcircuits import MemCellKind, MultMuxKind
+from .keys import canonical_spec
+
+#: Schema tag of one persisted frontier artifact.
+ARTIFACT_SCHEMA = "syndcim-frontier-artifact/v1"
+
+
+def spec_from_payload(p: dict) -> MacroSpec:
+    return MacroSpec(h=int(p["h"]), w=int(p["w"]), mcr=int(p["mcr"]),
+                     int_precisions=tuple(int(b)
+                                          for b in p["int_precisions"]),
+                     fp_precisions=tuple(str(f) for f in p["fp_precisions"]),
+                     f_mac_hz=float(p["f_mac_hz"]),
+                     f_wupdate_hz=float(p["f_wupdate_hz"]),
+                     vdd=float(p["vdd"]), w_power=float(p["w_power"]),
+                     w_area=float(p["w_area"]),
+                     w_throughput=float(p["w_throughput"]))
+
+
+def _design_to_payload(d: MacroDesign) -> dict:
+    return {
+        "memcell": d.memcell.value,
+        "multmux": d.multmux.value,
+        "csa": {"rho": d.csa.rho, "reorder": d.csa.reorder,
+                "retimed": d.csa.retimed, "split": d.csa.split},
+        "ofu_pipe_stages": d.ofu_pipe_stages,
+        "ofu_retimed_into_sa": d.ofu_retimed_into_sa,
+        "fuse_tree_sa": d.fuse_tree_sa,
+        "fuse_sa_ofu": d.fuse_sa_ofu,
+        "audit": list(d.audit),
+    }
+
+
+def _design_from_payload(p: dict, spec: MacroSpec) -> MacroDesign:
+    return MacroDesign(
+        spec=spec, memcell=MemCellKind(p["memcell"]),
+        multmux=MultMuxKind(p["multmux"]),
+        csa=CSADesign(rho=float(p["csa"]["rho"]),
+                      reorder=bool(p["csa"]["reorder"]),
+                      retimed=bool(p["csa"]["retimed"]),
+                      split=int(p["csa"]["split"])),
+        ofu_pipe_stages=int(p["ofu_pipe_stages"]),
+        ofu_retimed_into_sa=bool(p["ofu_retimed_into_sa"]),
+        fuse_tree_sa=bool(p["fuse_tree_sa"]),
+        fuse_sa_ofu=bool(p["fuse_sa_ofu"]),
+        audit=tuple(p["audit"]))
+
+
+_CSA_REPORT_FIELDS = ("crit_path_rel", "energy_rel", "area_um2", "n_fa",
+                      "n_comp42", "n_ha", "n_reg_bits", "stages",
+                      "latency_cycles", "acc_width", "rca_width")
+
+
+def _ppa_to_payload(p: MacroPPA) -> dict:
+    return {
+        "design": _design_to_payload(p.design),
+        "paths": {"mac_path_rel": p.paths.mac_path_rel,
+                  "sa_path_rel": p.paths.sa_path_rel,
+                  "ofu_path_rel": p.paths.ofu_path_rel,
+                  "crit_rel": p.paths.crit_rel},
+        "fmax_hz": p.fmax_hz,
+        "area_um2": p.area_um2,
+        "area_breakdown": dict(p.area_breakdown),
+        "e_cycle_fj": dict(p.e_cycle_fj),
+        "latency_cycles": int(p.latency_cycles),
+        "tops_1b": p.tops_1b,
+        "tops_per_w_1b": dict(p.tops_per_w_1b),
+        "tops_per_mm2_1b": p.tops_per_mm2_1b,
+        "meets_timing": bool(p.meets_timing),
+        "csa_report": (None if p.csa_report is None else
+                       {k: getattr(p.csa_report, k)
+                        for k in _CSA_REPORT_FIELDS}),
+    }
+
+
+def _ppa_from_payload(p: dict, spec: MacroSpec) -> MacroPPA:
+    csa_rep = p.get("csa_report")
+    return MacroPPA(
+        design=_design_from_payload(p["design"], spec),
+        paths=PathReport(float(p["paths"]["mac_path_rel"]),
+                         float(p["paths"]["sa_path_rel"]),
+                         float(p["paths"]["ofu_path_rel"]),
+                         float(p["paths"]["crit_rel"])),
+        fmax_hz=float(p["fmax_hz"]), area_um2=float(p["area_um2"]),
+        area_breakdown={k: float(v)
+                        for k, v in p["area_breakdown"].items()},
+        e_cycle_fj={k: float(v) for k, v in p["e_cycle_fj"].items()},
+        latency_cycles=int(p["latency_cycles"]),
+        tops_1b=float(p["tops_1b"]),
+        tops_per_w_1b={k: float(v) for k, v in p["tops_per_w_1b"].items()},
+        tops_per_mm2_1b=float(p["tops_per_mm2_1b"]),
+        meets_timing=bool(p["meets_timing"]),
+        csa_report=(None if csa_rep is None else
+                    CSAReport(**{k: csa_rep[k]
+                                 for k in _CSA_REPORT_FIELDS})))
+
+
+def result_to_payload(r: SearchResult) -> dict:
+    """Plain-data encoding of one SearchResult (JSON-serializable)."""
+    return {
+        "spec": canonical_spec(r.spec),
+        "frontier": [_ppa_to_payload(p) for p in r.frontier],
+        "explored": [_ppa_to_payload(p) for p in r.explored],
+        "n_evaluated": int(r.n_evaluated),
+    }
+
+
+def result_from_payload(d: dict) -> SearchResult:
+    """Inverse of :func:`result_to_payload`, bit-exact per field."""
+    spec = spec_from_payload(d["spec"])
+    return SearchResult(
+        spec=spec,
+        frontier=tuple(_ppa_from_payload(p, spec) for p in d["frontier"]),
+        explored=tuple(_ppa_from_payload(p, spec) for p in d["explored"]),
+        n_evaluated=int(d["n_evaluated"]))

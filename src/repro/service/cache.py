@@ -1,0 +1,153 @@
+"""Content-addressed frontier cache: in-memory LRU + optional on-disk store.
+
+The cache maps :func:`repro.service.keys.cache_key` content addresses to
+synthesized :class:`repro.core.searcher.SearchResult` frontiers.  Hits are
+bit-identical to a fresh engine run by construction: the in-memory tier
+returns the very object the engine produced, and the on-disk tier round-trips
+through the lossless JSON encoding of :mod:`repro.service.artifacts`.
+
+The disk store (one ``<key>.json`` artifact per frontier under
+``store_dir``) is what makes a *second process* warm: ``launch.serve
+--dcim-cache PATH`` points the serving launcher's service at a persistent
+directory, so the second launch of the same deployment config performs zero
+engine executions.  A corrupted or foreign artifact is rejected
+(:class:`CacheArtifactError`), counted, and treated as a miss — the engine
+re-synthesizes and overwrites it; a bad byte on disk can never poison a
+served frontier.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from ..core.searcher import SearchResult
+from .artifacts import ARTIFACT_SCHEMA, result_from_payload, result_to_payload
+
+
+class CacheArtifactError(ValueError):
+    """An on-disk artifact failed validation (bad JSON, wrong schema, key
+    mismatch, or a payload the decoder rejects)."""
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0            # in-memory LRU hits
+    disk_hits: int = 0       # artifacts loaded (and promoted) from disk
+    misses: int = 0
+    puts: int = 0
+    evictions: int = 0       # LRU capacity evictions (disk copies survive)
+    corrupt: int = 0         # artifacts rejected by validation
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("hits", "disk_hits", "misses", "puts", "evictions",
+                 "corrupt")}
+
+
+@dataclass
+class FrontierCache:
+    """LRU of synthesized frontiers, content-addressed, optionally persistent.
+
+    ``capacity`` bounds the in-memory tier only; with a ``store_dir`` every
+    put is also written through to disk, and an in-memory miss falls back to
+    the artifact (promoting it back into the LRU)."""
+
+    capacity: int = 256
+    store_dir: str | os.PathLike | None = None
+    stats: CacheStats = field(default_factory=CacheStats)
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self._lru: OrderedDict[str, SearchResult] = OrderedDict()
+        if self.store_dir is not None:
+            self.store_dir = Path(self.store_dir)
+            self.store_dir.mkdir(parents=True, exist_ok=True)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # Deliberately no __contains__: the only truthful presence probe is
+    # get(), which validates disk artifacts; a cheaper membership test would
+    # report corrupted artifacts as present.
+
+    # -- artifact layer ------------------------------------------------------
+
+    def artifact_path(self, key: str) -> Path | None:
+        return None if self.store_dir is None else self.store_dir / f"{key}.json"
+
+    @staticmethod
+    def load_artifact(path) -> tuple[str, SearchResult]:
+        """Read and validate one artifact; returns ``(key, result)``.
+        Raises :class:`CacheArtifactError` on any defect."""
+        try:
+            data = json.loads(Path(path).read_text())
+        except (OSError, ValueError) as e:
+            raise CacheArtifactError(f"{path}: unreadable artifact: {e}")
+        if not isinstance(data, dict) or data.get("schema") != ARTIFACT_SCHEMA:
+            raise CacheArtifactError(
+                f"{path}: not a frontier artifact (schema="
+                f"{data.get('schema') if isinstance(data, dict) else None!r}, "
+                f"expected {ARTIFACT_SCHEMA!r})")
+        key = data.get("key")
+        if not isinstance(key, str) or not key:
+            raise CacheArtifactError(f"{path}: missing content key")
+        try:
+            result = result_from_payload(data["result"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise CacheArtifactError(f"{path}: undecodable payload: {e}")
+        return key, result
+
+    def save_artifact(self, key: str, result: SearchResult) -> Path:
+        path = self.artifact_path(key)
+        payload = {"schema": ARTIFACT_SCHEMA, "key": key,
+                   "result": result_to_payload(result)}
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload))
+        tmp.replace(path)           # atomic: readers never see partial writes
+        return path
+
+    # -- cache protocol ------------------------------------------------------
+
+    def get(self, key: str) -> SearchResult | None:
+        """The cached frontier for ``key``, or None.  Disk fallbacks are
+        validated; a corrupted artifact counts as a miss (and is left for the
+        next put to overwrite)."""
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            self.stats.hits += 1
+            return self._lru[key]
+        path = self.artifact_path(key)
+        if path is not None and path.exists():
+            try:
+                stored_key, result = self.load_artifact(path)
+                if stored_key != key:
+                    raise CacheArtifactError(
+                        f"{path}: content key mismatch "
+                        f"(stored {stored_key[:12]}…, wanted {key[:12]}…)")
+            except CacheArtifactError:
+                self.stats.corrupt += 1
+                self.stats.misses += 1
+                return None
+            self.stats.disk_hits += 1
+            self._insert(key, result)
+            return result
+        self.stats.misses += 1
+        return None
+
+    def put(self, key: str, result: SearchResult) -> None:
+        self.stats.puts += 1
+        self._insert(key, result)
+        if self.store_dir is not None:
+            self.save_artifact(key, result)
+
+    def _insert(self, key: str, result: SearchResult) -> None:
+        self._lru[key] = result
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+            self.stats.evictions += 1

@@ -1,0 +1,92 @@
+"""Spec canonicalization and content-addressed cache keys.
+
+A synthesis result is fully determined by four ingredients: the macro spec,
+the calibrated tech model, the enumerated lattice shape (memcell set plus
+the discrete axis constants), and the search configuration (preference-grid
+resolution, Pareto eps band).  This module turns each ingredient into a
+deterministic canonical form and hashes them into the content address the
+:class:`repro.service.cache.FrontierCache` stores frontiers under:
+
+  :func:`spec_key`          sha256 of the canonical ``MacroSpec`` encoding —
+                            two structurally equal specs (however they were
+                            constructed) share one key;
+  :func:`lattice_signature` sha256 over the tech calibration and the lattice
+                            axis constants — a recalibrated tech or a changed
+                            memcell set can never alias a cached frontier;
+  :func:`cache_key`         the composite ``(spec_key, lattice signature,
+                            resolution, PARETO_EPS)`` address.
+
+Canonical encodings are JSON with sorted keys and no NaN/Inf; Python's float
+repr round-trips IEEE-754 doubles exactly, so equal float fields hash
+equally and nothing is quantized.  Everything here is numpy/json-only — key
+computation never touches jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Sequence
+
+from ..core.macro import MacroSpec
+from ..core.pareto import PARETO_EPS
+from ..core.searcher import RHO_STEPS
+from ..core.subcircuits import MemCellKind
+from ..core.tech import TechModel
+
+
+def _digest(obj) -> str:
+    """sha256 hex digest of the canonical JSON encoding of ``obj``."""
+    blob = json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      allow_nan=False)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def canonical_spec(spec: MacroSpec) -> dict:
+    """The canonical plain-data encoding of a spec: every dataclass field,
+    container types normalized (tuples as lists, precisions in declaration
+    order — order is semantic: it defines the mode list)."""
+    out = dataclasses.asdict(spec)
+    out["int_precisions"] = [int(b) for b in spec.int_precisions]
+    out["fp_precisions"] = [str(f) for f in spec.fp_precisions]
+    return out
+
+
+def spec_key(spec: MacroSpec) -> str:
+    """Deterministic content hash of a spec — the per-request half of the
+    cache address."""
+    return _digest(canonical_spec(spec))
+
+
+def canonical_tech(tech: TechModel) -> dict:
+    """Every calibration knob and relative constant of the tech model."""
+    return {k: (float(v) if isinstance(v, float) else v)
+            for k, v in dataclasses.asdict(tech).items()}
+
+
+def lattice_signature(tech: TechModel,
+                      memcells: Sequence[MemCellKind]) -> str:
+    """Content hash of everything the enumerated design lattice and its PPA
+    tables depend on besides the spec: the tech calibration and the discrete
+    axis constants (memcell set, CSA rho steps, OFU pipeline depths)."""
+    from ..core.batched import PIPE_STEPS
+    return _digest({
+        "tech": canonical_tech(tech),
+        "memcells": [m.value for m in memcells],
+        "rho_steps": [float(r) for r in RHO_STEPS],
+        "pipe_steps": [int(p) for p in PIPE_STEPS],
+    })
+
+
+def cache_key(spec: MacroSpec, tech: TechModel,
+              memcells: Sequence[MemCellKind], resolution: int,
+              eps: float = PARETO_EPS) -> str:
+    """The content address of one synthesized frontier:
+    ``(spec_key, lattice signature, resolution, eps)`` hashed together."""
+    return _digest({
+        "spec": spec_key(spec),
+        "lattice": lattice_signature(tech, memcells),
+        "resolution": int(resolution),
+        "pareto_eps": float(eps),
+    })

@@ -1,0 +1,216 @@
+"""Online synthesis service: request coalescing over the execution engine.
+
+`SynthesisService` is the serving front of the compiler: callers submit
+single-spec synthesis requests and the service answers them from three tiers,
+cheapest first —
+
+  1. **cache** — the content-addressed :class:`repro.service.cache.
+     FrontierCache` (in-memory LRU, optionally disk-persistent), hit when any
+     earlier request synthesized the same ``(spec, tech, lattice, resolution,
+     eps)`` address;
+  2. **coalescing** — duplicate requests inside one batch collapse onto a
+     single miss (they fan back out after the pass, every duplicate served
+     the same result object);
+  3. **one fused engine pass** — all remaining unique misses go through
+     ``engine.plan`` (which micro-batches them into vmap groups by
+     ``engine.group_key``) and ONE ``engine.execute`` call under the
+     capability-probed strategy registry (vmap for small batches;
+     sharded-jit / pmap / multihost across devices and hosts once the batch
+     clears the sharding payoff threshold).
+
+So N singleton requests cost one fused pass, not N — and a repeated request
+costs zero engine executions (observable through
+:func:`repro.core.engine.add_execute_hook`).  Results are bit-identical to
+fresh unbatched engine runs in every tier: the engine's strategies are
+bit-identical to each other by the differential oracle harness, in-memory
+hits return the engine's own objects, and disk hits round-trip through the
+lossless artifact encoding.
+
+    from repro.service import SynthesisService
+    svc = SynthesisService()
+    results = svc.synthesize_many(specs)        # one fused pass
+    again = svc.synthesize(specs[0])            # zero engine executions
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+
+from ..core import batched as B
+from ..core import engine as E
+from ..core import subcircuits as sc
+from ..core.macro import MacroSpec, calibrated_tech_for_reference
+from ..core.searcher import SearchResult
+from ..core.tech import TechModel
+from .cache import FrontierCache
+from .keys import cache_key
+
+#: Request-side execution modes: "auto" picks vmap for small fused batches
+#: and the capability-probed sharded pick once a batch is big enough to pay
+#: for device placement; "sharded" forces the sharded auto pick; the public
+#: sharded names select one strategy with the engine's fallback semantics
+#: ("multihost" degrades to the single-host path when unavailable).
+SERVICE_MODES = ("auto", "vmap", "sharded", "jit", "pmap", "multihost")
+
+#: "auto" shards a fused miss batch only when it stacks at least this many
+#: spec lanes per visible device — below that, padding the batch up to the
+#: device count plus placement overhead beats the dispatch it saves (the
+#: same payoff-point reasoning as ``pareto.SHARDED_EXTRACT_MIN_POINTS``).
+SHARD_MIN_SPECS_PER_DEVICE = 2
+
+
+def resolve_service_mode(mode: str = "auto",
+                         n_specs: int | None = None) -> str:
+    """Public service mode -> engine strategy name, by the same capability
+    probes the sharded sweeps use (:func:`repro.core.engine.
+    resolve_sharded_mode`).  ``n_specs`` (the fused batch size) lets "auto"
+    apply the sharding payoff threshold; without it "auto" stays on the
+    single-device vmap strategy."""
+    if mode not in SERVICE_MODES:
+        raise ValueError(f"unknown service mode: {mode!r}; "
+                         f"pick from {SERVICE_MODES}")
+    if mode == "auto":
+        n_dev = len(jax.devices())
+        big = (n_specs is not None
+               and n_specs >= SHARD_MIN_SPECS_PER_DEVICE * n_dev)
+        mode = "sharded" if (n_dev > 1 and big) else "vmap"
+    if mode == "vmap":
+        return "vmap"
+    if mode == "sharded":
+        mode = "auto"
+    return E._SHARDED_STRATEGY[E.resolve_sharded_mode(mode)]
+
+
+@dataclass
+class ServiceStats:
+    requests: int = 0
+    cache_hits: int = 0      # answered from the FrontierCache (mem or disk)
+    coalesced: int = 0       # duplicates folded onto an in-batch miss
+    misses: int = 0          # unique specs that reached the engine
+    fused_passes: int = 0    # engine.execute calls this service made
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("requests", "cache_hits", "coalesced", "misses",
+                 "fused_passes")}
+
+
+@dataclass
+class SynthesisService:
+    """The online synthesis front over the shared execution engine.
+
+    ``tech``/``resolution``/``memcells`` are per-service defaults; both can
+    be overridden per call, and the cache address always reflects the values
+    a request actually ran under, so one service instance safely serves
+    mixed tech models and resolutions.  ``mode`` picks the execution
+    strategy for fused miss passes (see :data:`SERVICE_MODES`)."""
+
+    tech: TechModel | None = None
+    resolution: int = 4
+    memcells: tuple[sc.MemCellKind, ...] = (sc.MemCellKind.SRAM_6T,)
+    mode: str = "auto"
+    cache: FrontierCache = field(default_factory=FrontierCache)
+    stats: ServiceStats = field(default_factory=ServiceStats)
+
+    def __post_init__(self):
+        if self.tech is None:
+            self.tech = calibrated_tech_for_reference()
+        resolve_service_mode(self.mode)      # validate eagerly
+        self.memcells = tuple(self.memcells)
+
+    # -- keys ----------------------------------------------------------------
+
+    def request_key(self, spec: MacroSpec, tech: TechModel | None = None,
+                    resolution: int | None = None) -> str:
+        """The content address a request is cached under."""
+        return cache_key(spec, tech or self.tech, self.memcells,
+                         self.resolution if resolution is None
+                         else resolution)
+
+    # -- the service protocol ------------------------------------------------
+
+    def synthesize(self, spec: MacroSpec, tech: TechModel | None = None,
+                   resolution: int | None = None) -> SearchResult:
+        """Serve one single-spec request (the N=1 batch)."""
+        return self.synthesize_many([spec], tech=tech,
+                                    resolution=resolution)[0]
+
+    def synthesize_many(self, specs: Sequence[MacroSpec],
+                        tech: TechModel | None = None,
+                        resolution: int | None = None) -> list[SearchResult]:
+        """Serve a batch of single-spec requests: dedup against the cache
+        and each other, one fused engine pass for the misses, fan results
+        back out in request order.  Per-request results are bit-identical to
+        a fresh ``mso_search_many([spec])`` run."""
+        tech = tech or self.tech
+        resolution = self.resolution if resolution is None else resolution
+        keys = [self.request_key(s, tech, resolution) for s in specs]
+        out: list[SearchResult | None] = [None] * len(specs)
+
+        miss_specs: list[MacroSpec] = []
+        miss_keys: list[str] = []
+        in_batch: set[str] = set()
+        for i, (s, k) in enumerate(zip(specs, keys)):
+            self.stats.requests += 1
+            hit = self.cache.get(k)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                out[i] = hit
+                continue
+            if k in in_batch:
+                self.stats.coalesced += 1
+                continue                     # fans out from the fused pass
+            in_batch.add(k)
+            miss_specs.append(s)
+            miss_keys.append(k)
+
+        fresh: dict[str, SearchResult] = {}
+        if miss_specs:
+            self.stats.misses += len(miss_specs)
+            for k, r in zip(miss_keys, self._fused_pass(miss_specs, tech,
+                                                        resolution)):
+                fresh[k] = r
+                self.cache.put(k, r)
+        for i, k in enumerate(keys):
+            if out[i] is None:
+                out[i] = fresh[k]
+        return out
+
+    # -- the fused miss pass -------------------------------------------------
+
+    def _fused_pass(self, specs: Sequence[MacroSpec], tech: TechModel,
+                    resolution: int) -> list[SearchResult]:
+        """All misses through one ``engine.execute`` call: ``engine.plan``
+        micro-batches them into vmap groups by ``engine.group_key``, the
+        placed strategy runs each group fused, and Algorithm 1 is replayed
+        per spec against the evaluated lattices (exactly the
+        ``mso_search_many`` contract, under whichever strategy the service
+        resolved)."""
+        plan = E.plan(list(specs), tech, self.memcells,
+                      mode=resolve_service_mode(self.mode, len(specs)))
+        evals = E.execute(plan)
+        self.stats.fused_passes += 1
+        return [B._alg1_replay(lat, tab, T, resolution)
+                for lat, tab, T in evals]
+
+
+_DEFAULT_SERVICE: SynthesisService | None = None
+
+
+def get_service() -> SynthesisService:
+    """The process-wide default service — what `serve.select.select_macros`
+    memoizes through, so repeated selections in one process share warm
+    frontiers."""
+    global _DEFAULT_SERVICE
+    if _DEFAULT_SERVICE is None:
+        _DEFAULT_SERVICE = SynthesisService()
+    return _DEFAULT_SERVICE
+
+
+def reset_service() -> None:
+    """Drop the process-wide default service (tests / tech recalibration)."""
+    global _DEFAULT_SERVICE
+    _DEFAULT_SERVICE = None

@@ -1,11 +1,12 @@
 """Differential oracle harness: every execution path of the MSO engine
 agrees bit-for-bit with the scalar reference.
 
-The engine has grown four ways to run Algorithm 1 — the scalar per-point
+The engine has grown five ways to run Algorithm 1 — the scalar per-point
 hierarchy (``mso_search``), the single-spec batched lattice replay
 (``backend="batched"``), the multi-spec vmapped pass (``mso_search_many``),
-and the device-sharded pass (``mso_search_many_sharded``, jit-NamedSharding
-and pmap modes).  PRs 1-2 proved their equivalences ad hoc; this is the
+the device-sharded pass (``mso_search_many_sharded``, jit-NamedSharding and
+pmap modes), and the multi-host ``('host', 'spec')`` strategy
+(:mod:`repro.core.multihost`, single-host fallback).  PRs 1-2 proved their equivalences ad hoc; this is the
 systematic replacement: one parametrized harness asserting, for every
 alternate path, against the scalar oracle,
 
@@ -100,6 +101,12 @@ PATHS = {
     "sharded-pmap": lambda specs, tech, res:
         mso_search_many_sharded(specs, None, tech, resolution=res,
                                 mode="pmap"),
+    # the ('host', 'spec') multi-host strategy (repro.core.multihost);
+    # resolve falls back to the single-host pick where it is unavailable,
+    # so this path is exercised (and must agree) on every runtime.
+    "sharded-multihost": lambda specs, tech, res:
+        mso_search_many_sharded(specs, None, tech, resolution=res,
+                                mode="multihost"),
 }
 
 
@@ -250,7 +257,8 @@ class TestShardedMechanics:
 class TestEngineRouting:
     def test_strategies_registered_and_probed(self):
         from repro.core import engine
-        assert {"jit", "vmap", "sharded-jit", "pmap"} <= set(engine.STRATEGIES)
+        assert {"jit", "vmap", "sharded-jit", "pmap",
+                "multihost"} <= set(engine.STRATEGIES)
         for s in engine.STRATEGIES.values():
             assert callable(s.available) and callable(s.run)
         # the capability-probed dispatcher is the single mode authority
