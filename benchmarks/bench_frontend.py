@@ -1,0 +1,106 @@
+"""Async serving front under a closed-loop Poisson arrival stream.
+
+``bench_service`` measures batch-shaped dispatch (caller already holds a
+wave); this benchmark measures the *serving* question: a client submits
+single-spec requests at Poisson-distributed arrival times (seeded, so runs
+are reproducible) against the :class:`repro.service.ServiceFrontend` —
+bounded admission queue, priority classes, adaptive batching window, one
+fused engine pass per drained batch — and we track what a load test tracks:
+
+  ``service/p50_latency_ms``     median submit-to-served wall latency;
+  ``service/p99_latency_ms``     tail latency (the first cold fused pass —
+                                 jit-warm but cache-cold — dominates it);
+  ``service/sustained_specs_s``  served requests per wall-clock second over
+                                 the whole stream.
+
+All three are asserted present in CI's bench.json.  Every row carries
+``identical=`` — the async path must stay bit-identical to the blocking
+``synthesize_many`` path over the same stream (same cache/coalesce/fused
+tiers, scheduling only) — and the p99 row carries ``shedded=``, which must
+be 0 here (the queue is sized for the stream; overload shedding is
+exercised by the backpressure tests, not the latency benchmark).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import calibrated_tech_for_reference
+from repro.service import (Priority, ServiceFrontend, SynthesisRequest,
+                           SynthesisService)
+from repro.core.shardspec import spec_variants
+
+from .common import frontiers_identical
+
+N_UNIQUE = 6           # distinct postures in the request pool
+N_REQUESTS = 24        # closed-loop stream length
+RATE_HZ = 60.0         # Poisson arrival rate
+STREAM_SEED = 0
+GRID_RESOLUTION = 3
+WINDOW_S = 0.01        # base batching window (adapts to pass latency)
+MAX_BATCH = 8
+MAX_DEPTH = 64         # > N_REQUESTS: the latency bench must not shed
+
+
+def _stream(uniques):
+    rng = np.random.default_rng(STREAM_SEED)
+    picks = rng.integers(0, len(uniques), N_REQUESTS)
+    gaps = rng.exponential(1.0 / RATE_HZ, N_REQUESTS)
+    # every 4th request is a BULK-class submission — the mixed-priority
+    # shape real traffic has (selection vs sweep)
+    prios = [Priority.BULK if i % 4 == 3 else Priority.INTERACTIVE
+             for i in range(N_REQUESTS)]
+    return [uniques[int(i)] for i in picks], gaps, prios
+
+
+def run() -> list[tuple]:
+    tech = calibrated_tech_for_reference()
+    uniques = spec_variants(N_UNIQUE, seed=STREAM_SEED)
+    stream, gaps, prios = _stream(uniques)
+
+    # Blocking reference over the same stream (also warms the jit caches, so
+    # the async run measures serving latency, not XLA compile time).
+    ref_svc = SynthesisService(tech=tech, resolution=GRID_RESOLUTION)
+    ref = [r.result for r in ref_svc.serve(
+        [SynthesisRequest(spec=s) for s in stream])]
+
+    # The closed-loop async run: a fresh service (cache-cold), Poisson
+    # arrivals, latencies measured per request from the response stamps.
+    svc = SynthesisService(tech=tech, resolution=GRID_RESOLUTION)
+    front = ServiceFrontend(svc, window=WINDOW_S, max_batch=MAX_BATCH,
+                            max_depth=MAX_DEPTH)
+    t0 = time.monotonic()
+    tickets = []
+    for spec, gap, prio in zip(stream, gaps, prios):
+        time.sleep(gap)
+        tickets.append(front.submit(SynthesisRequest(
+            spec=spec, priority=prio)))
+    responses = [t.result(timeout=600) for t in tickets]
+    elapsed_s = time.monotonic() - t0
+    front.close()
+
+    served = [r for r in responses if r.result is not None]
+    shedded = len(responses) - len(served)
+    lat_ms = np.array([r.latency_s for r in served]) * 1e3
+    p50, p99 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 99)
+    specs_s = len(served) / elapsed_s
+    identical = (shedded == 0
+                 and frontiers_identical(ref, [r.result for r in served]))
+    s, f = svc.stats, front.stats
+    mix = (f"requests={N_REQUESTS};unique={N_UNIQUE};rate_hz={RATE_HZ};"
+           f"batches={f.batches};max_batch={f.max_batch};"
+           f"window_ms={front.effective_window() * 1e3:.1f}")
+
+    return [
+        ("service/p50_latency_ms", p50 * 1e3,
+         f"p50_ms={p50:.2f};identical={identical};{mix}"),
+        ("service/p99_latency_ms", p99 * 1e3,
+         f"p99_ms={p99:.2f};shedded={shedded};depth_hwm={f.depth_hwm};"
+         f"identical={identical}"),
+        ("service/sustained_specs_s", elapsed_s * 1e6,
+         f"specs_s={specs_s:.2f};identical={identical};"
+         f"cache_hits={s.cache_hits};coalesced={s.coalesced};"
+         f"misses={s.misses};fused_passes={s.fused_passes}"),
+    ]

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core import calibrated_tech_for_reference
 from repro.core.multispec import mso_search_many
 from repro.core.shardspec import spec_variants
-from repro.service import SynthesisService
+from repro.service import SynthesisRequest, SynthesisService
 
 from .common import frontiers_identical, timed
 
@@ -54,7 +54,8 @@ def run() -> list[tuple]:
         svc = SynthesisService(tech=tech, resolution=GRID_RESOLUTION)
         out = []
         for wave in waves:
-            out.extend(svc.synthesize_many(wave))
+            out.extend(r.result for r in svc.serve(
+                [SynthesisRequest(spec=s) for s in wave]))
         return out, svc
 
     ref, us_naive = timed(naive, iters=1)

@@ -12,9 +12,9 @@ import time
 import traceback
 
 from . import (bench_csa, bench_dse, bench_fig7_energy, bench_fig8_pareto,
-               bench_fig9_shmoo, bench_kernels, bench_multispec,
-               bench_pareto, bench_roofline, bench_service, bench_shardspec,
-               bench_table1_features, bench_table2_sota)
+               bench_fig9_shmoo, bench_frontend, bench_kernels,
+               bench_multispec, bench_pareto, bench_roofline, bench_service,
+               bench_shardspec, bench_table1_features, bench_table2_sota)
 from .common import emit, rows_to_dicts
 
 MODULES = [
@@ -30,6 +30,7 @@ MODULES = [
     ("shardspec", bench_shardspec),
     ("pareto", bench_pareto),
     ("service", bench_service),
+    ("frontend", bench_frontend),
     ("roofline", bench_roofline),
 ]
 

@@ -53,6 +53,7 @@ prove cache hits and request coalescing never re-enter the engine.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
@@ -437,6 +438,26 @@ def remove_execute_hook(hook: Callable[[ExecutionPlan], None]) -> None:
     _EXECUTE_HOOKS.remove(hook)
 
 
+#: Observers fired once per :func:`execute` call with the plan and the
+#: wall-clock seconds the pass took — the feedback signal the async serving
+#: front's batching window adapts to (a slow engine grows batches instead
+#: of queues).
+_LATENCY_HOOKS: list[Callable[[ExecutionPlan, float], None]] = []
+
+
+def add_latency_hook(hook: Callable[[ExecutionPlan, float], None]
+                     ) -> Callable[[ExecutionPlan, float], None]:
+    """Register an observer called with ``(plan, elapsed_s)`` after every
+    :func:`execute` pass completes.  Returns ``hook`` so it can be used as
+    a decorator."""
+    _LATENCY_HOOKS.append(hook)
+    return hook
+
+
+def remove_latency_hook(hook: Callable[[ExecutionPlan, float], None]) -> None:
+    _LATENCY_HOOKS.remove(hook)
+
+
 def execute(p: ExecutionPlan
             ) -> list[tuple[DesignLattice, SpecTables, BatchedPPA]]:
     """Run every group of the plan under its placed strategy and finish with
@@ -444,6 +465,7 @@ def execute(p: ExecutionPlan
     bit-identical per spec across every strategy."""
     for hook in tuple(_EXECUTE_HOOKS):
         hook(p)
+    t0 = time.perf_counter()
     strategy = STRATEGIES[p.placement.mode]
     out: list = [None] * len(p)
     for members in p.groups:
@@ -452,6 +474,9 @@ def execute(p: ExecutionPlan
         ppas = unpack_group(packed, strategy.run(packed, p.placement))
         for i, ppa in zip(members, ppas):
             out[i] = (p.lattices[i], p.tables[i], ppa)
+    elapsed = time.perf_counter() - t0
+    for hook in tuple(_LATENCY_HOOKS):
+        hook(p, elapsed)
     return out
 
 

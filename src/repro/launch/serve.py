@@ -5,12 +5,17 @@
 
 ``--dcim-select`` adds the serving-time macro-selection step: the launcher
 synthesizes the multi-spec DCIM frontier through the online synthesis
-service (one fused, cached pass over the scenario specs), co-designs it
-against the deployed arch's GEMM inventory, and reports the macro the
-workload would be served on.  ``--dcim-cache PATH`` points the service at a
-persistent frontier store, making the second launch warm (zero engine
-executions); ``--dcim-profile PATH`` round-trips the preference-profile
-artifact through :func:`repro.serve.select.apply_profile`.
+service (one fused, cached pass over the scenario specs, submitted as
+typed INTERACTIVE requests), co-designs it against the deployed arch's GEMM
+inventory, and reports the macro the workload would be served on.
+``--dcim-cache PATH`` points the service at a persistent frontier store,
+making the second launch warm (zero engine executions); ``--dcim-profile
+PATH`` round-trips the preference-profile artifact through
+:func:`repro.serve.select.apply_profile`.
+
+The ``--dcim-*`` flag cluster is one typed posture,
+:class:`repro.serve.config.ServeConfig`: ``--dcim-config PATH`` loads it
+from a JSON artifact and every explicitly-passed flag overrides the file.
 """
 
 from __future__ import annotations
@@ -28,6 +33,7 @@ from ..models import get_model
 from ..parallel.logical import split_logical
 from ..parallel.sharding import rules_for_mesh
 from ..serve import make_decode_step, make_prefill
+from ..serve.config import serve_config_from_args
 from .mesh import make_host_mesh
 from .train import parse_mesh
 
@@ -40,11 +46,17 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-steps", type=int, default=64)
+    ap.add_argument("--dcim-config", default=None, metavar="PATH",
+                    help="JSON ServeConfig artifact consolidating the "
+                         "--dcim-* posture (schema "
+                         "syndcim-serve-config/v1); explicit --dcim-* "
+                         "flags override the file")
     ap.add_argument("--dcim-select", action="store_true",
                     help="select a DCIM macro for this workload from the "
                          "multi-spec synthesized frontier before serving")
-    ap.add_argument("--dcim-macros", type=int, default=256,
-                    help="macro-array size assumed for --dcim-select")
+    ap.add_argument("--dcim-macros", type=int, default=None,
+                    help="macro-array size assumed for --dcim-select "
+                         "(default 256)")
     ap.add_argument("--dcim-pref", default=None, metavar="W,E,A",
                     help="preference weights wallclock,energy,area for "
                          "--dcim-select (e.g. 0.2,0.6,0.2); default: pure "
@@ -64,32 +76,31 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.dcim_select:
+    dcim = serve_config_from_args(args)
+    if dcim.select:
         from ..core.dse import gemm_inventory
         from ..serve.select import apply_profile, select_macros
         from ..service import FrontierCache, SynthesisService, get_service
-        pref = None
-        if args.dcim_pref is not None:
-            pref = tuple(float(x) for x in args.dcim_pref.split(","))
-        if args.dcim_cache is not None:
+        if dcim.cache is not None:
             service = SynthesisService(
-                cache=FrontierCache(store_dir=args.dcim_cache))
+                cache=FrontierCache(store_dir=dcim.cache))
         else:
             service = get_service()
         sel, _ = apply_profile(
-            args.dcim_profile,
+            dcim.profile,
             lambda profile: select_macros({cfg.name: gemm_inventory(cfg)},
-                                          n_macros=args.dcim_macros,
-                                          preference=pref, profile=profile,
+                                          n_macros=dcim.macros,
+                                          preference=dcim.pref,
+                                          profile=profile,
                                           service=service))
-        if args.dcim_profile is not None:
-            print(f"dcim: preference profile updated: {args.dcim_profile}")
+        if dcim.profile is not None:
+            print(f"dcim: preference profile updated: {dcim.profile}")
         cs, ss = service.cache.stats, service.stats
         print(f"dcim: synthesis service "
               f"{'warm' if ss.misses == 0 else 'cold'} "
               f"(hits={cs.hits + cs.disk_hits} misses={ss.misses} "
               f"fused_passes={ss.fused_passes}"
-              + (f", cache={args.dcim_cache}" if args.dcim_cache else "")
+              + (f", cache={dcim.cache}" if dcim.cache else "")
               + ")")
         wi = sel.codesign.workloads.index(cfg.name)
         di = sel.assignment[cfg.name]
@@ -99,7 +110,7 @@ def main() -> None:
               f"{', '.join(sel.scenarios)}"
               + (f", preference={applied}" if applied else ""))
         print(f"dcim: selected {sel.label_for(cfg.name)} for {cfg.name} "
-              f"({args.dcim_macros} macros, "
+              f"({dcim.macros} macros, "
               f"eff_tops={sel.codesign.effective_tops[wi, di]:.3f}, "
               f"util={sel.codesign.avg_util[wi, di]:.3f})")
         print(f"dcim: serving roofline {est.tokens_per_s:.1f} tok/s "

@@ -1,5 +1,9 @@
+from .config import (SERVE_CONFIG_SCHEMA, ServeConfig, load_serve_config,
+                     parse_pref, save_serve_config, serve_config_from_args)
 from .select import MacroSelection, apply_profile, select_macros
 from .step import make_decode_step, make_prefill, greedy_generate
 
-__all__ = ["MacroSelection", "apply_profile", "select_macros",
+__all__ = ["MacroSelection", "SERVE_CONFIG_SCHEMA", "ServeConfig",
+           "apply_profile", "load_serve_config", "parse_pref",
+           "save_serve_config", "select_macros", "serve_config_from_args",
            "make_decode_step", "make_prefill", "greedy_generate"]

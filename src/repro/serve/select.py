@@ -279,11 +279,15 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     workload's selected macro is fed through the serving roofline so the
     selection carries tokens/s bounds, not just wallclock.
 
-    The multi-spec synthesis pass is served by ``service`` (a
-    :class:`repro.service.SynthesisService`; default: the process-wide
-    instance) — the scenario frontier is synthesized once per process (or
-    once per persistent cache directory) and every later selection is a
-    cache hit with zero engine executions."""
+    The multi-spec synthesis pass is served by ``service`` — a
+    :class:`repro.service.SynthesisService` (default: the process-wide
+    instance) or a :class:`repro.service.ServiceFrontend`; either way the
+    scenario set goes in as typed INTERACTIVE
+    :class:`~repro.service.SynthesisRequest` objects (selection is the
+    user-facing ``--dcim-select`` shape of traffic, served ahead of bulk
+    sweeps), the frontier is synthesized once per process (or once per
+    persistent cache directory) and every later selection is a cache hit
+    with zero engine executions."""
     if not workloads:
         raise ValueError("need at least one deployed workload")
     if tech is None:
@@ -294,8 +298,11 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     if service is None:
         from ..service import get_service
         service = get_service()
-    results = service.synthesize_many([specs[n] for n in names], tech=tech,
-                                      resolution=resolution)
+    from ..service import Priority, SynthesisRequest
+    responses = service.serve(
+        [SynthesisRequest(spec=specs[n], tech=tech, resolution=resolution,
+                          priority=Priority.INTERACTIVE) for n in names])
+    results = [r.result for r in responses]
     pool, labels = frontier_union(results, names)
     report = cross_workload_codesign(workloads, pool, n_macros=n_macros,
                                      ib=ib, wb=wb)

@@ -1,24 +1,37 @@
 """repro.service — the online synthesis service layer.
 
-Turns the offline multi-spec compiler into a serving system: single-spec
-requests are canonicalized (:mod:`repro.service.keys`), answered from a
-content-addressed frontier cache (:mod:`repro.service.cache`), and cache
-misses are coalesced into one fused pass through the shared execution
-engine (:mod:`repro.service.service`).  Responses are bit-identical to
-fresh unbatched engine runs in every tier.
+Turns the offline multi-spec compiler into a serving system: typed
+single-spec requests (:mod:`repro.service.requests`) are canonicalized
+(:mod:`repro.service.keys`), answered from a content-addressed frontier
+cache (:mod:`repro.service.cache`), and cache misses are coalesced into one
+fused pass through the shared execution engine
+(:mod:`repro.service.service`).  The async front
+(:mod:`repro.service.frontend`) builds those batches from an online request
+stream: bounded admission queue, priority classes, an adaptive batching
+window, explicit load shedding, and streamed frontier-so-far partials.
+Responses are bit-identical to fresh unbatched engine runs in every tier.
 """
 
 from .artifacts import (ARTIFACT_SCHEMA, result_from_payload,
                         result_to_payload)
 from .cache import CacheArtifactError, CacheStats, FrontierCache
+from .frontend import (WINDOW_BOUNDS, WINDOW_FRACTION, FrontendStats,
+                       ServiceFrontend, SweepHandle, Ticket)
 from .keys import cache_key, canonical_spec, lattice_signature, spec_key
+from .requests import (FRONTIER_EVENT, SHED_REASONS, Priority, RequestState,
+                       SheddedResponse, StreamEvent, SynthesisRequest,
+                       SynthesisResponse, as_requests)
 from .service import (SERVICE_MODES, ServiceStats, SynthesisService,
                       get_service, reset_service, resolve_service_mode)
 
 __all__ = [
-    "ARTIFACT_SCHEMA", "CacheArtifactError", "CacheStats", "FrontierCache",
-    "SERVICE_MODES", "ServiceStats", "SynthesisService", "cache_key",
-    "canonical_spec", "get_service", "lattice_signature",
-    "reset_service", "resolve_service_mode", "result_from_payload",
-    "result_to_payload", "spec_key",
+    "ARTIFACT_SCHEMA", "CacheArtifactError", "CacheStats", "FRONTIER_EVENT",
+    "FrontendStats", "FrontierCache", "Priority", "RequestState",
+    "SERVICE_MODES", "SHED_REASONS", "ServiceFrontend", "ServiceStats",
+    "SheddedResponse", "StreamEvent", "SweepHandle", "SynthesisRequest",
+    "SynthesisResponse", "SynthesisService", "Ticket", "WINDOW_BOUNDS",
+    "WINDOW_FRACTION", "as_requests", "cache_key", "canonical_spec",
+    "get_service", "lattice_signature", "reset_service",
+    "result_from_payload", "result_to_payload", "resolve_service_mode",
+    "spec_key",
 ]

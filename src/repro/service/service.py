@@ -1,8 +1,8 @@
 """Online synthesis service: request coalescing over the execution engine.
 
 `SynthesisService` is the serving front of the compiler: callers submit
-single-spec synthesis requests and the service answers them from three tiers,
-cheapest first —
+typed :class:`~repro.service.requests.SynthesisRequest`\\ s and the service
+answers them from three tiers, cheapest first —
 
   1. **cache** — the content-addressed :class:`repro.service.cache.
      FrontierCache` (in-memory LRU, optionally disk-persistent), hit when any
@@ -12,11 +12,11 @@ cheapest first —
      single miss (they fan back out after the pass, every duplicate served
      the same result object);
   3. **one fused engine pass** — all remaining unique misses go through
-     ``engine.plan`` (which micro-batches them into vmap groups by
-     ``engine.group_key``) and ONE ``engine.execute`` call under the
-     capability-probed strategy registry (vmap for small batches;
-     sharded-jit / pmap / multihost across devices and hosts once the batch
-     clears the sharding payoff threshold).
+     ``engine.plan_for`` (which micro-batches them into vmap groups by
+     ``engine.group_key``) and ONE ``engine.execute`` call per execution
+     mode under the capability-probed strategy registry (vmap for small
+     batches; sharded-jit / pmap / multihost across devices and hosts once
+     the batch clears the sharding payoff threshold).
 
 So N singleton requests cost one fused pass, not N — and a repeated request
 costs zero engine executions (observable through
@@ -26,16 +26,26 @@ bit-identical to each other by the differential oracle harness, in-memory
 hits return the engine's own objects, and disk hits round-trip through the
 lossless artifact encoding.
 
-    from repro.service import SynthesisService
+    from repro.service import SynthesisRequest, SynthesisService
     svc = SynthesisService()
-    results = svc.synthesize_many(specs)        # one fused pass
-    again = svc.synthesize(specs[0])            # zero engine executions
+    responses = svc.serve([SynthesisRequest(spec=s) for s in specs])
+    again = svc.serve([SynthesisRequest(spec=specs[0])])   # zero executions
+
+The kwarg-tuple entry points of earlier PRs — ``synthesize(spec, tech=,
+resolution=)``, ``synthesize_many(...)``, ``request_key(...)`` — remain as
+thin deprecation shims that construct requests internally and return bare
+``SearchResult``\\ s, bit-identical to the typed path.  The *async* front
+(admission queue, priority classes, backpressure, streaming) lives one
+layer up in :mod:`repro.service.frontend`; this module stays synchronous
+and thread-compatible (callers serialize on the frontend's scheduler).
 """
 
 from __future__ import annotations
 
+import threading
+import warnings
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 
@@ -47,6 +57,7 @@ from ..core.searcher import SearchResult
 from ..core.tech import TechModel
 from .cache import FrontierCache
 from .keys import cache_key
+from .requests import SynthesisRequest, SynthesisResponse, as_requests
 
 #: Request-side execution modes: "auto" picks vmap for small fused batches
 #: and the capability-probed sharded pick once a batch is big enough to pay
@@ -98,15 +109,25 @@ class ServiceStats:
                  "fused_passes")}
 
 
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"SynthesisService.{old} with kwarg tuples is deprecated; build "
+        "SynthesisRequest objects and call serve() (see README migration "
+        "table)", DeprecationWarning, stacklevel=3)
+
+
 @dataclass
 class SynthesisService:
     """The online synthesis front over the shared execution engine.
 
-    ``tech``/``resolution``/``memcells`` are per-service defaults; both can
-    be overridden per call, and the cache address always reflects the values
-    a request actually ran under, so one service instance safely serves
-    mixed tech models and resolutions.  ``mode`` picks the execution
-    strategy for fused miss passes (see :data:`SERVICE_MODES`)."""
+    ``tech``/``resolution``/``memcells`` are per-service defaults; each can
+    be overridden per request, and the cache address always reflects the
+    values a request actually ran under, so one service instance safely
+    serves mixed tech models and resolutions — even inside one fused pass
+    (operands are packed per spec lane with that request's own tech).
+    ``mode`` picks the execution strategy for fused miss passes (see
+    :data:`SERVICE_MODES`); a request's ``mode`` overrides it per request.
+    """
 
     tech: TechModel | None = None
     resolution: int = 4
@@ -121,96 +142,165 @@ class SynthesisService:
         resolve_service_mode(self.mode)      # validate eagerly
         self.memcells = tuple(self.memcells)
 
+    # -- effective per-request parameters -----------------------------------
+
+    def _effective(self, req: SynthesisRequest
+                   ) -> tuple[TechModel, int, str]:
+        tech = req.tech if req.tech is not None else self.tech
+        resolution = (self.resolution if req.resolution is None
+                      else int(req.resolution))
+        mode = req.mode if req.mode is not None else self.mode
+        return tech, resolution, mode
+
     # -- keys ----------------------------------------------------------------
+
+    def key_for(self, request: SynthesisRequest) -> str:
+        """The content address a typed request is cached under."""
+        tech, resolution, _ = self._effective(request)
+        return cache_key(request.spec, tech, self.memcells, resolution)
 
     def request_key(self, spec: MacroSpec, tech: TechModel | None = None,
                     resolution: int | None = None) -> str:
-        """The content address a request is cached under."""
-        return cache_key(spec, tech or self.tech, self.memcells,
-                         self.resolution if resolution is None
-                         else resolution)
+        """Deprecated kwarg-tuple shim for :meth:`key_for`."""
+        _deprecated("request_key(spec, tech=, resolution=)")
+        return self.key_for(SynthesisRequest(spec=spec, tech=tech,
+                                             resolution=resolution))
 
-    # -- the service protocol ------------------------------------------------
+    # -- the typed service protocol ------------------------------------------
 
-    def synthesize(self, spec: MacroSpec, tech: TechModel | None = None,
-                   resolution: int | None = None) -> SearchResult:
-        """Serve one single-spec request (the N=1 batch)."""
-        return self.synthesize_many([spec], tech=tech,
-                                    resolution=resolution)[0]
+    def serve(self, requests: Sequence[SynthesisRequest],
+              on_partial: Optional[Callable[[int, SearchResult], None]]
+              = None) -> list[SynthesisResponse]:
+        """Serve a batch of typed requests: dedup against the cache and each
+        other, one fused engine pass per execution mode for the misses, fan
+        results back out in request order.  Per-request results are
+        bit-identical to a fresh ``mso_search_many([spec])`` run.
 
-    def synthesize_many(self, specs: Sequence[MacroSpec],
-                        tech: TechModel | None = None,
-                        resolution: int | None = None) -> list[SearchResult]:
-        """Serve a batch of single-spec requests: dedup against the cache
-        and each other, one fused engine pass for the misses, fan results
-        back out in request order.  Per-request results are bit-identical to
-        a fresh ``mso_search_many([spec])`` run."""
-        tech = tech or self.tech
-        resolution = self.resolution if resolution is None else resolution
-        keys = [self.request_key(s, tech, resolution) for s in specs]
-        out: list[SearchResult | None] = [None] * len(specs)
+        ``on_partial(index, result)`` streams each request's finished
+        ``SearchResult`` the moment it exists — cache hits immediately,
+        fused-pass lanes as each spec's Algorithm-1 replay completes — so a
+        long sweep's frontier-so-far is observable before the batch returns.
+        """
+        reqs = list(requests)
+        for r in reqs:
+            if not isinstance(r, SynthesisRequest):
+                raise TypeError("serve() takes SynthesisRequest objects; "
+                                "use the synthesize_many shim for bare "
+                                f"specs (got {type(r).__name__})")
+        eff = [self._effective(r) for r in reqs]
+        keys = [cache_key(r.spec, tech, self.memcells, res)
+                for r, (tech, res, _) in zip(reqs, eff)]
+        out: list[SynthesisResponse | None] = [None] * len(reqs)
 
-        miss_specs: list[MacroSpec] = []
-        miss_keys: list[str] = []
-        in_batch: set[str] = set()
-        for i, (s, k) in enumerate(zip(specs, keys)):
+        first_for_key: dict[str, int] = {}
+        dups_of: dict[int, list[int]] = {}
+        miss_by_mode: dict[str, list[int]] = {}
+        for i, (r, k) in enumerate(zip(reqs, keys)):
             self.stats.requests += 1
             hit = self.cache.get(k)
             if hit is not None:
                 self.stats.cache_hits += 1
-                out[i] = hit
+                out[i] = SynthesisResponse(request=r, result=hit,
+                                           served_from="cache")
+                if on_partial is not None:
+                    on_partial(i, hit)
                 continue
-            if k in in_batch:
+            j = first_for_key.get(k)
+            if j is not None:
                 self.stats.coalesced += 1
+                dups_of.setdefault(j, []).append(i)
                 continue                     # fans out from the fused pass
-            in_batch.add(k)
-            miss_specs.append(s)
-            miss_keys.append(k)
+            first_for_key[k] = i
+            miss_by_mode.setdefault(eff[i][2], []).append(i)
 
-        fresh: dict[str, SearchResult] = {}
-        if miss_specs:
-            self.stats.misses += len(miss_specs)
-            for k, r in zip(miss_keys, self._fused_pass(miss_specs, tech,
-                                                        resolution)):
-                fresh[k] = r
-                self.cache.put(k, r)
-        for i, k in enumerate(keys):
-            if out[i] is None:
-                out[i] = fresh[k]
+        for mode, members in miss_by_mode.items():
+            self.stats.misses += len(members)
+
+            def finish(slot: int, res: SearchResult,
+                       _members=members) -> None:
+                i = _members[slot]
+                self.cache.put(keys[i], res)
+                out[i] = SynthesisResponse(request=reqs[i], result=res,
+                                           served_from="engine")
+                if on_partial is not None:
+                    on_partial(i, res)
+                for d in dups_of.get(i, ()):
+                    out[d] = SynthesisResponse(request=reqs[d], result=res,
+                                               served_from="coalesced")
+                    if on_partial is not None:
+                        on_partial(d, res)
+
+            self._fused_pass([reqs[i] for i in members],
+                             [eff[i] for i in members], mode, finish)
         return out
+
+    # -- deprecated kwarg-tuple shims ----------------------------------------
+
+    def synthesize(self, spec: MacroSpec, tech: TechModel | None = None,
+                   resolution: int | None = None) -> SearchResult:
+        """Deprecated shim: one single-spec request (the N=1 batch)."""
+        _deprecated("synthesize(spec, tech=, resolution=)")
+        return self.serve(as_requests([spec], tech=tech,
+                                      resolution=resolution))[0].result
+
+    def synthesize_many(self, specs: Sequence[MacroSpec],
+                        tech: TechModel | None = None,
+                        resolution: int | None = None) -> list[SearchResult]:
+        """Deprecated shim: bare specs in, bare ``SearchResult``\\ s out —
+        constructs typed requests internally; bit-identical to
+        :meth:`serve`."""
+        _deprecated("synthesize_many(specs, tech=, resolution=)")
+        return [r.result for r in
+                self.serve(as_requests(specs, tech=tech,
+                                       resolution=resolution))]
 
     # -- the fused miss pass -------------------------------------------------
 
-    def _fused_pass(self, specs: Sequence[MacroSpec], tech: TechModel,
-                    resolution: int) -> list[SearchResult]:
-        """All misses through one ``engine.execute`` call: ``engine.plan``
-        micro-batches them into vmap groups by ``engine.group_key``, the
-        placed strategy runs each group fused, and Algorithm 1 is replayed
-        per spec against the evaluated lattices (exactly the
-        ``mso_search_many`` contract, under whichever strategy the service
-        resolved)."""
-        plan = E.plan(list(specs), tech, self.memcells,
-                      mode=resolve_service_mode(self.mode, len(specs)))
+    def _fused_pass(self, requests: Sequence[SynthesisRequest],
+                    eff: Sequence[tuple[TechModel, int, str]], mode: str,
+                    on_result: Callable[[int, SearchResult], None]) -> None:
+        """All same-mode misses through one ``engine.execute`` call:
+        ``engine.plan_for`` micro-batches them into vmap groups by
+        ``engine.group_key`` (operands packed with each request's own tech,
+        so mixed-tech batches still fuse), the placed strategy runs each
+        group fused, and Algorithm 1 is replayed per spec at that request's
+        resolution (exactly the ``mso_search_many`` contract, under
+        whichever strategy the service resolved).  ``on_result(slot,
+        result)`` fires as each spec lane finishes — the streaming hook."""
+        lattices = [B.DesignLattice.enumerate(r.spec, self.memcells)
+                    for r in requests]
+        tables = [B.SpecTables(r.spec, tech)
+                  for r, (tech, _, _) in zip(requests, eff)]
+        plan = E.plan_for(lattices, tables,
+                          mode=resolve_service_mode(mode, len(requests)))
         evals = E.execute(plan)
         self.stats.fused_passes += 1
-        return [B._alg1_replay(lat, tab, T, resolution)
-                for lat, tab, T in evals]
+        for slot, (lat, tab, T) in enumerate(evals):
+            on_result(slot, B._alg1_replay(lat, tab, T, eff[slot][1]))
 
 
 _DEFAULT_SERVICE: SynthesisService | None = None
+#: Guards the process-wide singleton: the async front makes `get_service`
+#: reachable from scheduler threads concurrently with the main thread, and
+#: an unlocked check-then-create could hand two callers two different
+#: services (split caches, double synthesis).
+_SERVICE_LOCK = threading.Lock()
 
 
 def get_service() -> SynthesisService:
     """The process-wide default service — what `serve.select.select_macros`
     memoizes through, so repeated selections in one process share warm
-    frontiers."""
+    frontiers.  Thread-safe: concurrent callers always observe the same
+    instance."""
     global _DEFAULT_SERVICE
-    if _DEFAULT_SERVICE is None:
-        _DEFAULT_SERVICE = SynthesisService()
-    return _DEFAULT_SERVICE
+    with _SERVICE_LOCK:
+        if _DEFAULT_SERVICE is None:
+            _DEFAULT_SERVICE = SynthesisService()
+        return _DEFAULT_SERVICE
 
 
 def reset_service() -> None:
     """Drop the process-wide default service (tests / tech recalibration)."""
     global _DEFAULT_SERVICE
-    _DEFAULT_SERVICE = None
+    with _SERVICE_LOCK:
+        _DEFAULT_SERVICE = None

@@ -1,0 +1,557 @@
+"""Tests for the async/streaming synthesis front and the typed request API.
+
+Same contract as the rest of the serving stack: the frontend adds
+*scheduling* — admission queue, priority classes, batching window,
+backpressure, streaming — and must add no arithmetic.  Every served answer
+is pinned bit-identical to the blocking path (which the differential oracle
+harness pins to the scalar oracle), the request lifecycle
+(queued → batched → served / shedded) is observable and typed, overload
+sheds explicitly with bounded queue depth, and the deprecated kwarg-tuple
+shims return the very bits the typed API serves.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+from argparse import Namespace
+from pathlib import Path
+
+import pytest
+
+from repro.core import calibrated_tech_for_reference, engine
+from repro.core.multispec import frontier_union, mso_search_many
+from repro.core.shardspec import spec_variants
+from repro.serve.config import (SERVE_CONFIG_SCHEMA, ServeConfig,
+                                load_serve_config, parse_pref,
+                                save_serve_config, serve_config_from_args)
+from repro.service import (FRONTIER_EVENT, Priority, RequestState,
+                           ServiceFrontend, SheddedResponse, SynthesisRequest,
+                           SynthesisResponse, SynthesisService, get_service,
+                           reset_service)
+from repro.service.frontend import WINDOW_BOUNDS
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def tech():
+    return calibrated_tech_for_reference()
+
+
+@pytest.fixture()
+def execute_counter():
+    calls = []
+    engine.add_execute_hook(calls.append)
+    yield calls
+    engine.remove_execute_hook(calls.append)
+
+
+def assert_ppa_equal(a, b):
+    assert a.design.name() == b.design.name()
+    assert a.paths == b.paths
+    assert a.fmax_hz == b.fmax_hz
+    assert a.area_um2 == b.area_um2
+    assert a.e_cycle_fj == b.e_cycle_fj
+    assert a.latency_cycles == b.latency_cycles
+    assert a.meets_timing == b.meets_timing
+
+
+def assert_search_identical(got, oracle):
+    assert got.spec == oracle.spec
+    assert got.n_evaluated == oracle.n_evaluated
+    assert [p.design.name() for p in got.explored] == \
+           [p.design.name() for p in oracle.explored]
+    assert len(got.frontier) == len(oracle.frontier)
+    for x, y in zip(got.frontier, oracle.frontier):
+        assert_ppa_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# The typed request API on the (blocking) service
+# ---------------------------------------------------------------------------
+
+
+class TestTypedRequestAPI:
+    def test_serve_bit_identical_to_oracle(self, tech, execute_counter):
+        specs = spec_variants(4, seed=61)
+        oracle = mso_search_many(specs, None, tech, resolution=3)
+        svc = SynthesisService(tech=tech, resolution=3)
+        n0 = len(execute_counter)
+        responses = svc.serve([SynthesisRequest(spec=s) for s in specs])
+        assert len(execute_counter) == n0 + 1        # still ONE fused pass
+        for r, o in zip(responses, oracle):
+            assert isinstance(r, SynthesisResponse)
+            assert r.state is RequestState.SERVED
+            assert r.served_from == "engine"
+            assert_search_identical(r.result, o)
+
+    def test_served_from_tiers(self, tech):
+        specs = spec_variants(2, seed=67)
+        svc = SynthesisService(tech=tech, resolution=3)
+        batch = [SynthesisRequest(spec=specs[0]),
+                 SynthesisRequest(spec=specs[1]),
+                 SynthesisRequest(spec=specs[0])]     # in-batch duplicate
+        first = svc.serve(batch)
+        assert [r.served_from for r in first] == \
+            ["engine", "engine", "coalesced"]
+        assert first[2].result is first[0].result
+        again = svc.serve([SynthesisRequest(spec=specs[0])])
+        assert again[0].served_from == "cache"
+        assert again[0].result is first[0].result
+
+    def test_per_request_resolution_and_tech(self, tech):
+        spec = spec_variants(1, seed=71)[0]
+        svc = SynthesisService(tech=tech, resolution=3)
+        (r5,) = svc.serve([SynthesisRequest(spec=spec, resolution=5)])
+        (oracle5,) = mso_search_many([spec], None, tech, resolution=5)
+        assert_search_identical(r5.result, oracle5)
+        # mixed resolutions in ONE batch each honor their own request
+        r3, r5b = svc.serve([SynthesisRequest(spec=spec, resolution=3),
+                             SynthesisRequest(spec=spec, resolution=5)])
+        (oracle3,) = mso_search_many([spec], None, tech, resolution=3)
+        assert_search_identical(r3.result, oracle3)
+        assert_search_identical(r5b.result, oracle5)
+
+    def test_mixed_tech_requests_fuse_into_one_pass(self, tech,
+                                                    execute_counter):
+        import dataclasses
+        specs = spec_variants(2, seed=73)
+        slow = dataclasses.replace(tech, tau_ps=tech.tau_ps * 1.25)
+        oracle_a = mso_search_many(specs[:1], None, tech, resolution=3)[0]
+        oracle_b = mso_search_many(specs[1:], None, slow, resolution=3)[0]
+        svc = SynthesisService(tech=tech, resolution=3)
+        n0 = len(execute_counter)
+        ra, rb = svc.serve([SynthesisRequest(spec=specs[0]),
+                            SynthesisRequest(spec=specs[1], tech=slow)])
+        assert len(execute_counter) == n0 + 1
+        assert_search_identical(ra.result, oracle_a)
+        assert_search_identical(rb.result, oracle_b)
+
+    def test_on_partial_streams_every_request(self, tech):
+        specs = spec_variants(3, seed=79)
+        stream = [specs[0], specs[1], specs[0], specs[2]]
+        svc = SynthesisService(tech=tech, resolution=3)
+        events = []
+        responses = svc.serve([SynthesisRequest(spec=s) for s in stream],
+                              on_partial=lambda i, r: events.append(i))
+        assert sorted(events) == [0, 1, 2, 3]   # hits, dups and misses alike
+        for i, r in zip(events, responses):
+            assert responses[i].result is not None
+        assert responses[2].result is responses[0].result
+
+    def test_rejects_bare_specs_and_bad_requests(self, tech):
+        spec = spec_variants(1, seed=83)[0]
+        svc = SynthesisService(tech=tech, resolution=3)
+        with pytest.raises(TypeError):
+            svc.serve([spec])
+        with pytest.raises(TypeError):
+            SynthesisRequest(spec="not a spec")
+        with pytest.raises(ValueError):
+            SynthesisRequest(spec=spec, deadline_s=0.0)
+        with pytest.raises(ValueError):
+            svc.serve([SynthesisRequest(spec=spec, mode="warp-drive")])
+
+
+class TestDeprecationShims:
+    def test_shims_warn_and_match_typed_api(self, tech):
+        specs = spec_variants(3, seed=89)
+        typed = SynthesisService(tech=tech, resolution=3)
+        ref = [r.result for r in
+               typed.serve([SynthesisRequest(spec=s) for s in specs])]
+        legacy = SynthesisService(tech=tech, resolution=3)
+        with pytest.deprecated_call():
+            one = legacy.synthesize(specs[0])
+        with pytest.deprecated_call():
+            many = legacy.synthesize_many(specs)
+        assert_search_identical(one, ref[0])
+        for g, r in zip(many, ref):
+            assert_search_identical(g, r)
+
+    def test_request_key_shim_matches_key_for(self, tech):
+        spec = spec_variants(1, seed=97)[0]
+        svc = SynthesisService(tech=tech, resolution=3)
+        with pytest.deprecated_call():
+            old = svc.request_key(spec, resolution=5)
+        assert old == svc.key_for(SynthesisRequest(spec=spec, resolution=5))
+        # the shim and the typed path address the same cache entry
+        svc.serve([SynthesisRequest(spec=spec, resolution=5)])
+        assert svc.cache.get(old) is not None
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle through the frontend (deterministic run_pending drive)
+# ---------------------------------------------------------------------------
+
+
+def make_front(tech, **kw):
+    svc = SynthesisService(tech=tech, resolution=3)
+    kw.setdefault("start", False)
+    return ServiceFrontend(svc, **kw)
+
+
+class TestLifecycle:
+    def test_queued_batched_served_transitions(self, tech):
+        front = make_front(tech)
+        try:
+            spec = spec_variants(1, seed=101)[0]
+            events = []
+            t = front.submit(SynthesisRequest(spec=spec),
+                             on_event=lambda e: events.append(e.kind))
+            assert t.state is RequestState.QUEUED and not t.done()
+            assert front.depth == 1
+            served = front.run_pending()
+            assert served == 1 and front.depth == 0
+            resp = t.result(timeout=0)
+            assert t.state is RequestState.SERVED
+            lifecycle = [k for k in events if k != FRONTIER_EVENT]
+            assert lifecycle == ["queued", "batched", "served"]
+            assert FRONTIER_EVENT in events
+            assert resp.queued_at <= resp.batched_at <= resp.served_at
+            assert resp.latency_s >= 0 and resp.queue_delay_s >= 0
+            (oracle,) = mso_search_many([spec], None, tech, resolution=3)
+            assert_search_identical(resp.result, oracle)
+        finally:
+            front.close()
+
+    def test_deadline_expired_request_is_shedded(self, tech):
+        front = make_front(tech)
+        try:
+            spec = spec_variants(1, seed=103)[0]
+            t = front.submit(SynthesisRequest(spec=spec, deadline_s=1e-6))
+            time.sleep(0.01)
+            front.run_pending()
+            resp = t.result(timeout=0)
+            assert isinstance(resp, SheddedResponse)
+            assert resp.reason == "deadline"
+            assert resp.state is RequestState.SHEDDED
+            assert front.stats.shedded == 1 and front.stats.served == 0
+        finally:
+            front.close()
+
+    def test_result_timeout_raises(self, tech):
+        front = make_front(tech)
+        try:
+            t = front.submit(SynthesisRequest(
+                spec=spec_variants(1, seed=107)[0]))
+            with pytest.raises(TimeoutError):
+                t.result(timeout=0.01)
+        finally:
+            front.close()
+
+
+class TestPriorityOrdering:
+    def test_interactive_ahead_of_bulk_fifo_within_class(self, tech):
+        front = make_front(tech, max_batch=16)
+        try:
+            specs = spec_variants(5, seed=109)
+            order = []
+
+            def watch(tag):
+                return lambda e: (order.append(tag)
+                                  if e.kind == "batched" else None)
+
+            front.submit(SynthesisRequest(spec=specs[0], tag="b0",
+                                          priority=Priority.BULK),
+                         on_event=watch("b0"))
+            front.submit(SynthesisRequest(spec=specs[1], tag="b1",
+                                          priority=Priority.BULK),
+                         on_event=watch("b1"))
+            front.submit(SynthesisRequest(spec=specs[2], tag="i0",
+                                          priority=Priority.INTERACTIVE),
+                         on_event=watch("i0"))
+            front.submit(SynthesisRequest(spec=specs[3], tag="i1",
+                                          priority=Priority.INTERACTIVE),
+                         on_event=watch("i1"))
+            front.submit(SynthesisRequest(spec=specs[4], tag="b2",
+                                          priority=Priority.BULK),
+                         on_event=watch("b2"))
+            front.run_pending()
+            assert order == ["i0", "i1", "b0", "b1", "b2"]
+        finally:
+            front.close()
+
+
+class TestBackpressure:
+    def test_bounded_depth_sheds_typed_never_silent(self, tech):
+        front = make_front(tech, max_depth=3)
+        try:
+            specs = spec_variants(5, seed=113)
+            tickets = [front.submit(SynthesisRequest(spec=s)) for s in specs]
+            # the queue never exceeded its bound
+            assert front.stats.depth_hwm == 3
+            shed = [t for t in tickets if t.done()]
+            assert len(shed) == 2                    # overload -> typed shed
+            for t in shed:
+                resp = t.result(timeout=0)
+                assert isinstance(resp, SheddedResponse)
+                assert resp.reason == "queue_full"
+                assert resp.queue_depth == 3
+            assert front.stats.shedded == 2
+            front.run_pending()
+            oracle = mso_search_many(specs[:3], None, tech, resolution=3)
+            for t, o in zip(tickets[:3], oracle):
+                assert_search_identical(t.result(timeout=0).result, o)
+        finally:
+            front.close()
+
+    def test_close_without_drain_sheds_shutdown(self, tech):
+        front = make_front(tech)
+        t = front.submit(SynthesisRequest(spec=spec_variants(1, seed=127)[0]))
+        front.close(drain=False)
+        resp = t.result(timeout=0)
+        assert isinstance(resp, SheddedResponse)
+        assert resp.reason == "shutdown"
+        # submits after shutdown shed immediately too
+        t2 = front.submit(SynthesisRequest(
+            spec=spec_variants(1, seed=127)[0]))
+        assert t2.result(timeout=0).reason == "shutdown"
+
+
+class TestStreaming:
+    def test_sweep_streams_frontier_so_far(self, tech):
+        front = make_front(tech, max_batch=2)
+        try:
+            specs = spec_variants(5, seed=131)
+            seen = []
+            handle = front.submit_sweep(
+                specs, on_frontier=lambda done, total, pool:
+                seen.append((done, total, len(pool))))
+            while front.run_pending():
+                pass
+            responses = handle.results(timeout=0)
+            assert [r.state for r in responses] == \
+                [RequestState.SERVED] * len(specs)
+            # one partial per finished lane, progress monotonic, total right
+            assert [d for d, _, _ in seen] == list(range(1, len(specs) + 1))
+            assert all(t == len(specs) for _, t, _ in seen)
+            # the final pooled frontier matches the blocking sweep's union
+            ref = mso_search_many(specs, None, tech, resolution=3)
+            ref_pool, _ = frontier_union(
+                ref, [f"sweep[{i}]" for i in range(len(specs))])
+            assert seen[-1][2] == len(ref_pool)
+        finally:
+            front.close()
+
+
+# ---------------------------------------------------------------------------
+# The threaded scheduler end to end
+# ---------------------------------------------------------------------------
+
+
+class TestThreadedFrontend:
+    def test_burst_served_bit_identical(self, tech):
+        specs = spec_variants(4, seed=137)
+        stream = [specs[i % 4] for i in range(10)]
+        oracle = mso_search_many(specs, None, tech, resolution=3)
+        svc = SynthesisService(tech=tech, resolution=3)
+        with ServiceFrontend(svc, window=0.02, max_batch=16) as front:
+            tickets = [front.submit(SynthesisRequest(spec=s))
+                       for s in stream]
+            responses = [t.result(timeout=600) for t in tickets]
+        assert front.stats.served == len(stream)
+        assert front.stats.shedded == 0
+        assert svc.stats.fused_passes >= 1
+        for resp, spec in zip(responses, stream):
+            assert_search_identical(resp.result, oracle[specs.index(spec)])
+
+    def test_frontend_serve_helper_and_select_macros(self, tech):
+        """select_macros runs unchanged through a frontend (duck-typed
+        ``serve``), proving the caller-facing API is one surface."""
+        from repro.configs import smoke_config
+        from repro.core.dse import gemm_inventory
+        from repro.serve.select import select_macros
+        workloads = {"qwen3-4b": gemm_inventory(smoke_config("qwen3-4b"))}
+        svc = SynthesisService(tech=tech)
+        direct = select_macros(workloads, tech=tech, service=svc)
+        with ServiceFrontend(SynthesisService(tech=tech)) as front:
+            routed = select_macros(workloads, tech=tech, service=front)
+        assert routed.assignment == direct.assignment
+        assert routed.pool_labels == direct.pool_labels
+        assert routed.summary() == direct.summary()
+
+    def test_adaptive_window_tracks_engine_latency(self, tech):
+        front = make_front(tech, window=0.005)
+        try:
+            assert front.effective_window() == 0.005
+            front._observe_pass(None, 1.0)
+            w1 = front.effective_window()
+            assert WINDOW_BOUNDS[0] <= w1 <= WINDOW_BOUNDS[1]
+            assert w1 > 0.005                    # grew toward 10% of 1s
+            front._observe_pass(None, 100.0)
+            assert front.effective_window() == WINDOW_BOUNDS[1]  # clamped
+        finally:
+            front.close()
+
+    def test_engine_latency_hook_fires_with_elapsed(self, tech):
+        seen = []
+        hook = lambda plan, s: seen.append((plan, s))
+        engine.add_latency_hook(hook)
+        try:
+            svc = SynthesisService(tech=tech, resolution=3)
+            svc.serve([SynthesisRequest(spec=spec_variants(1, seed=139)[0])])
+        finally:
+            engine.remove_latency_hook(hook)
+        assert len(seen) == 1
+        plan, elapsed = seen[0]
+        assert elapsed > 0 and len(plan) == 1
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig: the consolidated --dcim-* posture
+# ---------------------------------------------------------------------------
+
+
+def _args(**kw):
+    base = dict(dcim_config=None, dcim_select=False, dcim_pref=None,
+                dcim_profile=None, dcim_cache=None, dcim_macros=None)
+    base.update(kw)
+    return Namespace(**base)
+
+
+class TestServeConfig:
+    def test_round_trip(self, tmp_path):
+        cfg = ServeConfig(select=True, pref=(0.2, 0.6, 0.2),
+                          profile="p.json", cache="frontiers", macros=128)
+        path = tmp_path / "serve.json"
+        save_serve_config(path, cfg)
+        assert json.loads(path.read_text())["schema"] == SERVE_CONFIG_SCHEMA
+        assert load_serve_config(path) == cfg
+
+    def test_unknown_key_and_bad_schema_rejected(self, tmp_path):
+        path = tmp_path / "serve.json"
+        path.write_text(json.dumps({"schema": SERVE_CONFIG_SCHEMA,
+                                    "selekt": True}))
+        with pytest.raises(ValueError, match="unknown serve-config keys"):
+            load_serve_config(path)
+        path.write_text(json.dumps({"schema": "other/v1"}))
+        with pytest.raises(ValueError, match="not a serve config"):
+            load_serve_config(path)
+
+    def test_defaults_without_config(self):
+        assert serve_config_from_args(_args()) == ServeConfig()
+        got = serve_config_from_args(_args(dcim_select=True,
+                                           dcim_pref="1,0,0"))
+        assert got.select and got.pref == (1.0, 0.0, 0.0)
+        assert got.macros == 256
+
+    def test_cli_flags_override_file(self, tmp_path):
+        path = tmp_path / "serve.json"
+        save_serve_config(path, ServeConfig(select=True, pref=(0.2, 0.6, 0.2),
+                                            cache="from-file", macros=64))
+        # no explicit flags: the file wins wholesale
+        got = serve_config_from_args(_args(dcim_config=str(path)))
+        assert got == ServeConfig(select=True, pref=(0.2, 0.6, 0.2),
+                                  cache="from-file", macros=64)
+        # explicit flags override their fields, the rest stays from the file
+        got = serve_config_from_args(_args(dcim_config=str(path),
+                                           dcim_pref="1,0,0",
+                                           dcim_macros=512))
+        assert got.pref == (1.0, 0.0, 0.0) and got.macros == 512
+        assert got.select and got.cache == "from-file"
+
+    def test_parse_pref_validates(self):
+        with pytest.raises(ValueError):
+            parse_pref("0.5,0.5")
+        with pytest.raises(ValueError):
+            ServeConfig(pref=(1.0, 2.0))
+        with pytest.raises(ValueError):
+            ServeConfig(macros=0)
+
+
+# ---------------------------------------------------------------------------
+# The process-wide singleton under concurrency (async-front regression)
+# ---------------------------------------------------------------------------
+
+
+class TestSingletonThreadSafety:
+    def test_concurrent_get_service_one_instance(self):
+        reset_service()
+        n = 16
+        barrier = threading.Barrier(n)
+        seen = []
+        lock = threading.Lock()
+
+        def grab():
+            barrier.wait()
+            svc = get_service()
+            with lock:
+                seen.append(id(svc))
+
+        threads = [threading.Thread(target=grab) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(seen) == n
+        assert len(set(seen)) == 1      # every thread saw the SAME service
+        reset_service()
+
+
+# ---------------------------------------------------------------------------
+# 8-fake-device drill through the async path
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncEightDevices:
+    def test_eight_fake_devices_bit_identical(self):
+        """Subprocess drill (device count is fixed at first jax init): a
+        13-spec ragged request stream submitted through the async frontend
+        over a multihost-mode service on 8 fake host devices — every
+        response bit-identical to the unsharded blocking pass, nothing
+        shedded."""
+        env = {**os.environ,
+               "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+               "PYTHONPATH": str(REPO / "src"),
+               "JAX_PLATFORMS": "cpu"}
+        code = textwrap.dedent("""
+            import json
+            import jax
+            from repro.core import calibrated_tech_for_reference
+            from repro.core.multispec import mso_search_many
+            from repro.core.shardspec import spec_variants
+            from repro.service import (ServiceFrontend, SynthesisRequest,
+                                       SynthesisService)
+
+            tech = calibrated_tech_for_reference()
+            specs = spec_variants(13, seed=5)       # ragged on 8 devices
+            ref = mso_search_many(specs, None, tech, resolution=3)
+
+            svc = SynthesisService(tech=tech, resolution=3,
+                                   mode="multihost")
+            with ServiceFrontend(svc, window=0.05, max_batch=16) as front:
+                tickets = [front.submit(SynthesisRequest(spec=s))
+                           for s in specs]
+                responses = [t.result(timeout=600) for t in tickets]
+
+            identical = all(
+                [p.design.name() for p in resp.result.explored]
+                == [p.design.name() for p in r.explored]
+                and len(resp.result.frontier) == len(r.frontier)
+                and all(x.paths == y.paths
+                        and x.fmax_hz == y.fmax_hz
+                        and x.area_um2 == y.area_um2
+                        and x.e_cycle_fj == y.e_cycle_fj
+                        and x.latency_cycles == y.latency_cycles
+                        for x, y in zip(resp.result.frontier, r.frontier))
+                for resp, r in zip(responses, ref))
+            print(json.dumps({"devices": len(jax.devices()),
+                              "identical": identical,
+                              "served": front.stats.served,
+                              "shedded": front.stats.shedded,
+                              "fused_passes": svc.stats.fused_passes}))
+        """)
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, env=env,
+                           timeout=600, cwd=REPO)
+        assert r.returncode == 0, f"drill failed:\n{r.stderr[-3000:]}"
+        last = [ln for ln in r.stdout.strip().splitlines()
+                if ln.startswith("{")][-1]
+        out = json.loads(last)
+        assert out["devices"] == 8
+        assert out["identical"]
+        assert out["served"] == 13 and out["shedded"] == 0
+        assert out["fused_passes"] >= 1
