@@ -3,7 +3,6 @@ pass region, peaking at 1.1 GHz @ 1.2 V and 300 MHz @ 0.7 V (9 TOPS)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import reference_chip_ppa
 

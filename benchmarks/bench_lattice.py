@@ -1,0 +1,92 @@
+"""Axis-generic lattice: incremental re-synthesis vs re-rolling the full
+product, plus the registry's axis scale-up headroom.
+
+The incremental scenario is the one the per-axis cache keys were built for:
+a sweep is served cold (seeding the per-axis slice caches), then a single
+axis changes — here the rho axis grows by one step, the "try one more
+compression ratio" recalibration — and the service re-evaluates ONLY the
+invalidated sublattice, merging it with the cached slice frontiers.
+
+Tracked rows (asserted present in CI's bench.json):
+
+  ``lattice/incremental_speedup``   cold full-product pass vs incremental
+                                    merge on the same changed input —
+                                    required >= 5x by the acceptance bar,
+                                    and carries ``identical=`` (the merged
+                                    frontier must be bit-identical to the
+                                    cold pass's);
+  ``lattice/axis_scaleup_points``   the full registered axis product
+                                    (precision modes x approximate adder
+                                    cells x seed axes) enumerated through
+                                    the same registry the seed axes use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import calibrated_tech_for_reference
+from repro.core import subcircuits as sc
+from repro.core.axes import LatticeConfig
+from repro.core.batched import DesignLattice
+from repro.core.macro import MacroSpec
+from repro.service import FrontierCache, SynthesisRequest, SynthesisService
+
+from .common import timed
+
+#: Base config for the incremental scenario: one memcell keeps the cold
+#: pass inside bench-smoke budget; three precision modes scale the lattice
+#: so kernel evaluation (the part incrementality saves) dominates.
+BASE = LatticeConfig(memcells=(sc.MemCellKind.SRAM_6T,), precision_modes=3)
+
+
+def _sweep(svc: SynthesisService, spec, tech, config):
+    (resp,) = svc.serve([SynthesisRequest(spec=spec, tech=tech,
+                                          kind="sweep", config=config)])
+    return resp.result
+
+
+def run() -> list[tuple]:
+    tech = calibrated_tech_for_reference()
+    spec = MacroSpec()
+    grown = dataclasses.replace(BASE, rho_steps=BASE.rho_steps + (0.9,))
+
+    # Warm service: cold sweep on BASE seeds the per-axis slice caches;
+    # the grown-axis request then reuses every unchanged rho slice.
+    warm_svc = SynthesisService(tech=tech, config=BASE)
+    _sweep(warm_svc, spec, tech, BASE)
+    incremental, us_inc = timed(
+        lambda: _sweep(warm_svc, spec, tech, grown), warmup=0, iters=1)
+
+    # Cold baseline: a fresh service re-rolls the full grown product.
+    def cold_pass():
+        svc = SynthesisService(cache=FrontierCache(), tech=tech, config=BASE)
+        return _sweep(svc, spec, tech, grown)
+
+    cold, us_cold = timed(cold_pass, warmup=0, iters=1)
+
+    identical = dataclasses.asdict(incremental) == dataclasses.asdict(cold)
+    s = warm_svc.stats
+    n_grown = len(DesignLattice.enumerate(spec, config=grown))
+    reused = len(BASE.rho_steps)
+
+    # Axis scale-up: the full registered product, enumerated (not evaluated)
+    # through the same registry — the lattice the compiler can now address.
+    full = LatticeConfig(precision_modes=3, approx_cells=sc.APPROX_CELLS)
+    lat_full, us_enum = timed(
+        lambda: DesignLattice.enumerate(spec, config=full), iters=3)
+    n_seed = len(DesignLattice.enumerate(spec))
+
+    return [
+        (f"lattice/cold_sweep/{n_grown}pt", us_cold,
+         f"points={n_grown};axes={len(grown.rho_steps)}rho"),
+        (f"lattice/incremental_sweep/{n_grown}pt", us_inc,
+         f"slice_hits={s.slice_hits};incremental_passes="
+         f"{s.incremental_passes};reused_slices={reused}/{reused + 1}"),
+        ("lattice/incremental_speedup", us_inc,
+         f"speedup={us_cold / us_inc:.2f}x;identical={identical};"
+         f"floor=5x;points={n_grown}"),
+        ("lattice/axis_scaleup_points", us_enum,
+         f"points={len(lat_full)};axes={len(lat_full.dims)};"
+         f"vs_seed={len(lat_full) / n_seed:.0f}x"),
+    ]

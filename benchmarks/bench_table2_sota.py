@@ -4,7 +4,6 @@ designs, under the paper's technology-scaling rules (scaled to 40nm, 1b-1b:
 
 from __future__ import annotations
 
-import math
 
 from repro.core import reference_chip_ppa
 

@@ -55,14 +55,17 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from . import subcircuits as sc
-from .csa import CSADesign, CSAReport, characterize, valid_splits
+from .axes import (LatticeConfig, PrecisionPlan, ResolvedAxis, dims_of,
+                   resolve_axes, seed_config, strides_of)
+from .axes import PIPE_STEPS  # noqa: F401  (re-export; historical home)
+from .csa import CSADesign, CSAReport, characterize
 from .macro import (ACT_IN_MEAS, ACT_WT_MEAS, MacroDesign, MacroPPA,
                     MacroSpec, PathReport, _mode_bits, _product_bits,
                     reporting_frequency)
 from .pareto import (PARETO_EPS, chunk_dominated, nondominated_mask,
                      pareto_chunk_size, preference_grid)
-from .searcher import (RHO_STEPS, SearchResult, _throughput_overdrive,
-                       max_crit_rel)
+from .searcher import (RHO_STEPS, SearchResult,  # noqa: F401  (re-export)
+                       _throughput_overdrive, max_crit_rel)
 from .tech import TechModel, delay_scale, energy_scale, leakage_scale
 
 # CSA characterization is pure in (design, rows, product_bits, tech); memoize
@@ -72,7 +75,6 @@ _characterize = functools.lru_cache(maxsize=None)(characterize)
 
 MEMCELLS: tuple[sc.MemCellKind, ...] = tuple(sc.MemCellKind)
 MULTMUXES: tuple[sc.MultMuxKind, ...] = tuple(sc.MultMuxKind)
-PIPE_STEPS: tuple[int, ...] = (0, 1, 2, 3)
 BOOLS: tuple[bool, bool] = (False, True)
 
 _MM_INDEX = {k: i for i, k in enumerate(MULTMUXES)}
@@ -84,33 +86,73 @@ _MM_INDEX = {k: i for i, k in enumerate(MULTMUXES)}
 
 
 class SpecTables:
-    """Subcircuit PPA factored along the lattice axes for one spec.
+    """Subcircuit PPA factored along the *registered* lattice axes for one
+    spec (:mod:`repro.core.axes`).
 
     All entries come from the scalar model functions (``characterize``,
     ``multmux_ppa``, ``ofu_ppa``, ...) with exactly the arguments the scalar
     roll-up would pass, and the derived per-term constants reproduce the
     scalar accumulation expressions float-for-float.
+
+    Axis-dependent tables are flattened so the jitted kernel needs no new
+    gathers when an optional axis is enabled:
+
+      * CSA tables are ``approx_cell``-major: flat index
+        ``csa_index(rho_i, ro, rt, sp_i, apx_i) = apx_i*n_csa_base + base``;
+        with the approx axis disabled ``n_apx == 1`` and the layout is the
+        seed layout bit-for-bit.
+      * OFU tables are ``precision``-plan-major: flat index
+        ``ofu_index(pipe_i, prec_i) = prec_i*n_pipe + pipe_i``; with the
+        precision axis disabled ``n_prec == 1`` — the seed layout.
+      * Alignment-unit area/energy become per-plan vectors gathered by the
+        precision coordinate (a single seed entry when disabled).
     """
 
-    def __init__(self, spec: MacroSpec, tech: TechModel):
+    def __init__(self, spec: MacroSpec, tech: TechModel,
+                 config: LatticeConfig | None = None,
+                 axes: tuple[ResolvedAxis, ...] | None = None):
         self.spec = spec
         self.tech = tech
-        self.splits = valid_splits(spec.h)
-        self.n_rho = len(RHO_STEPS)
+        self.config = config if config is not None else seed_config()
+        self.axes = axes if axes is not None else resolve_axes(spec,
+                                                               self.config)
+        by_name = {a.name: a for a in self.axes}
+        self.memcells: tuple[sc.MemCellKind, ...] = by_name["memcell"].values
+        self.multmuxes: tuple[sc.MultMuxKind, ...] = by_name["multmux"].values
+        self.rho_steps: tuple[float, ...] = by_name["rho"].values
+        self.splits: tuple[int, ...] = by_name["split"].values
+        self.pipe_steps: tuple[int, ...] = by_name["pipe"].values
+        prec_ax = by_name.get("precision")
+        apx_ax = by_name.get("approx_cell")
+        # Effective values when the axis is disabled: one seed entry, so the
+        # flattened tables reduce to the seed layout.
+        self.plans: tuple[PrecisionPlan, ...] = (
+            prec_ax.values if prec_ax is not None
+            else (PrecisionPlan(tuple(spec.int_precisions),
+                                tuple(spec.fp_precisions)),))
+        self.approx_cells: tuple[sc.ApproxCellSpec, ...] = (
+            apx_ax.values if apx_ax is not None else (sc.EXACT_CELL,))
+        self.n_rho = len(self.rho_steps)
         self.n_sp = len(self.splits)
+        self.n_pipe = len(self.pipe_steps)
+        self.n_prec = len(self.plans)
+        self.n_apx = len(self.approx_cells)
+        self.n_csa_base = self.n_rho * 2 * 2 * self.n_sp
 
-        # --- CSA family axis (rho x reorder x retimed x split) --------------
+        # --- CSA family axis (approx_cell x rho x reorder x retimed x split) -
         self.csa_designs: list[CSADesign] = []
         self.csa_reports: list[CSAReport] = []
-        for ri, rho in enumerate(RHO_STEPS):
-            for ro in BOOLS:
-                for rt in BOOLS:
-                    for sp in self.splits:
-                        d = CSADesign(rho=rho, reorder=ro, retimed=rt, split=sp)
-                        self.csa_designs.append(d)
-                        self.csa_reports.append(
-                            _characterize(d, spec.h, _product_bits(spec),
-                                          tech))
+        for cell in self.approx_cells:
+            for rho in self.rho_steps:
+                for ro in BOOLS:
+                    for rt in BOOLS:
+                        for sp in self.splits:
+                            d = CSADesign(rho=rho, reorder=ro, retimed=rt,
+                                          split=sp)
+                            self.csa_designs.append(d)
+                            self.csa_reports.append(sc.approx_tree_report(
+                                _characterize(d, spec.h, _product_bits(spec),
+                                              tech), cell))
         self.csa_crit = np.array([r.crit_path_rel for r in self.csa_reports])
         self.csa_energy = np.array([r.energy_rel for r in self.csa_reports])
         self.csa_area = np.array([r.area_um2 for r in self.csa_reports])
@@ -120,19 +162,19 @@ class SpecTables:
 
         # --- mult/mux axis ---------------------------------------------------
         self.mm_valid = np.array([sc.multmux_valid(k, spec.mcr)
-                                  for k in MULTMUXES])
+                                  for k in self.multmuxes])
         mm_ppa = [sc.multmux_ppa(k, spec.mcr, tech) if v else None
-                  for k, v in zip(MULTMUXES, self.mm_valid)]
+                  for k, v in zip(self.multmuxes, self.mm_valid)]
         nanppa = sc.PPA(float("nan"), float("nan"), float("nan"))
         self.mm_ppa = [p if p is not None else nanppa for p in mm_ppa]
 
         # --- memcell axis (area only: timing/energy use the array drivers) --
         self.cell_area = np.array([sc.memcell_ppa(k, tech).area_um2
-                                   for k in MEMCELLS])
+                                   for k in self.memcells])
 
-        # --- OFU pipeline axis ----------------------------------------------
-        self.ofu_ppa = [sc.ofu_ppa(spec.w, tuple(spec.int_precisions),
-                                   self.out_w, ps, tech) for ps in PIPE_STEPS]
+        # --- OFU pipeline x precision-plan axes ------------------------------
+        self.ofu_ppa = [sc.ofu_ppa(spec.w, plan.ints, self.out_w, ps, tech)
+                        for plan in self.plans for ps in self.pipe_steps]
 
         # --- spec-constant subcircuits ---------------------------------------
         self.wl = sc.wl_driver_ppa(spec.h, spec.w, spec.mcr, tech)
@@ -140,15 +182,34 @@ class SpecTables:
         # _mode_energy_rel uses base-unit BL constants (rel consts only):
         self.bl_base = sc.bl_driver_ppa(spec.h, spec.w, spec.mcr, TechModel())
         self.sa = sc.shift_adder_ppa(self.acc_width, spec.max_input_bits, tech)
-        self.align = sc.align_ppa(spec.w, tuple(spec.fp_precisions), tech)
+        # Alignment unit per precision plan (plan 0 == the spec's own FP set).
+        self.align_t = [sc.align_ppa(spec.w, plan.fps, tech)
+                        for plan in self.plans]
+        self.align = self.align_t[0]
 
         self.modes = ["int_lo", "int_hi"] + list(spec.fp_precisions)
         self._build_terms()
 
-    def csa_index(self, rho_i, ro, rt, sp_i):
-        """Flat index into the CSA axis (vectorized-friendly)."""
-        return ((np.asarray(rho_i) * 2 + np.asarray(ro)) * 2
+    def csa_index(self, rho_i, ro, rt, sp_i, apx_i=0):
+        """Flat index into the CSA tables (vectorized-friendly)."""
+        base = ((np.asarray(rho_i) * 2 + np.asarray(ro)) * 2
                 + np.asarray(rt)) * self.n_sp + np.asarray(sp_i)
+        return np.asarray(apx_i) * self.n_csa_base + base
+
+    def ofu_index(self, pipe_i, prec_i=0):
+        """Flat index into the OFU tables (vectorized-friendly)."""
+        return np.asarray(prec_i) * self.n_pipe + np.asarray(pipe_i)
+
+    def compatible_with(self, lattice: "DesignLattice") -> bool:
+        """Whether this table set can serve gathers for ``lattice`` — the
+        lattice's axis values must prefix-match the table axes (the seed
+        service path enumerates a memcell subset against full tables)."""
+        mine = {a.name: a.values for a in self.axes}
+        for ax in lattice.axes:
+            vals = mine.get(ax.name)
+            if vals is None or vals[:len(ax.values)] != tuple(ax.values):
+                return False
+        return True
 
     # -- per-term constants mirroring the scalar accumulation expressions ----
     def _build_terms(self) -> None:
@@ -169,7 +230,8 @@ class SpecTables:
         self.a_tree = np.array([a * spec.w for a in self.csa_area])
         self.a_sa = self.sa.area_um2 * spec.w
         self.a_ofu = np.array([p.area_um2 for p in self.ofu_ppa])
-        self.a_align = self.align.area_um2
+        self.a_align_t = np.array([p.area_um2 for p in self.align_t])
+        self.a_align = float(self.a_align_t[0])
         self.a_drv = self.wl.area_um2 + self.bl.area_um2
 
         # energy: term tables per _mode_energy_rel accumulation step
@@ -184,19 +246,22 @@ class SpecTables:
                 * 1.0 / (spec.h * spec.mcr))
         self.e_bl = (self.bl_base.energy_rel / (spec.h * spec.mcr)) * duty
         self.e_ofu: dict[str, np.ndarray] = {}
-        self.e_align: dict[str, float] = {}
+        self.e_align: dict[str, np.ndarray] = {}
         for m in self.modes:
             ib = _mode_bits(spec, m)
             self.e_ofu[m] = np.array([p.energy_rel * (0.5 / max(1, ib))
                                       for p in self.ofu_ppa])
-            if m in sc.FP_FORMATS:
-                exp, man = sc.FP_FORMATS[m]
-                emax = max(sc.FP_FORMATS[f][0] for f in spec.fp_precisions)
-                mmax = max(sc.FP_FORMATS[f][1] for f in spec.fp_precisions)
-                frac = (exp + 0.5 * man) / (emax + 0.5 * mmax)
-                self.e_align[m] = self.align.energy_rel * 0.62 * frac
-            else:
-                self.e_align[m] = self.align.energy_rel * 0.04
+            per_plan = []
+            for plan, align in zip(self.plans, self.align_t):
+                if m in sc.FP_FORMATS:
+                    exp, man = sc.FP_FORMATS[m]
+                    emax = max(sc.FP_FORMATS[f][0] for f in plan.fps)
+                    mmax = max(sc.FP_FORMATS[f][1] for f in plan.fps)
+                    frac = (exp + 0.5 * man) / (emax + 0.5 * mmax)
+                    per_plan.append(align.energy_rel * 0.62 * frac)
+                else:
+                    per_plan.append(align.energy_rel * 0.04)
+            self.e_align[m] = np.array(per_plan)
 
         # latency components (ints)
         self.l_csa = self.csa_lat
@@ -209,83 +274,282 @@ class SpecTables:
 # ---------------------------------------------------------------------------
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class DesignLattice:
-    """Flattened enumeration of the discrete macro design space."""
+    """Flattened enumeration of the discrete macro design space.
+
+    The lattice is a composition of the *registered* axes
+    (:mod:`repro.core.axes`): dims, strides, the mixed-radix flat-index
+    round-trip, per-point validity and the materialized ``MacroDesign`` are
+    all derived from the resolved axis tuple.  The seed ten axes keep their
+    historical coordinate attributes (``mem_i`` ... ``fso``); optional axes
+    (``precision``, ``approx_cell``) append after them, so seed flat indices
+    — and any caller passing only the leading coordinates to
+    :meth:`index_of` — are unchanged (missing trailing coordinates address
+    the axis default, index 0).
+    """
 
     spec: MacroSpec
-    memcells: tuple[sc.MemCellKind, ...]
-    splits: tuple[int, ...]
-    mem_i: np.ndarray
-    mm_i: np.ndarray
-    rho_i: np.ndarray
-    ro: np.ndarray
-    rt: np.ndarray
-    sp_i: np.ndarray
-    pipe_i: np.ndarray
-    ort: np.ndarray
-    fts: np.ndarray
-    fso: np.ndarray
-    valid: np.ndarray          # mult/mux validity for this spec's MCR
+    config: LatticeConfig
+    axes: tuple[ResolvedAxis, ...]
+    coords: tuple[np.ndarray, ...]   # one flat coordinate array per axis
+    valid: np.ndarray                # per-point validity (axis masks ANDed)
+    # Satellite bugfix: dims/strides used to be properties recomputed on
+    # every index_of call (hot in the oracle harness) — now computed once
+    # at construction.
+    dims: tuple[int, ...]
+    strides: tuple[int, ...]
 
     @classmethod
     def enumerate(cls, spec: MacroSpec,
-                  memcells: tuple[sc.MemCellKind, ...] = MEMCELLS
-                  ) -> "DesignLattice":
-        splits = valid_splits(spec.h)
-        axes = [np.arange(len(memcells)), np.arange(len(MULTMUXES)),
-                np.arange(len(RHO_STEPS)), np.arange(2), np.arange(2),
-                np.arange(len(splits)), np.arange(len(PIPE_STEPS)),
-                np.arange(2), np.arange(2), np.arange(2)]
-        grids = np.meshgrid(*axes, indexing="ij")
-        flat = [g.ravel() for g in grids]
-        mem_i, mm_i, rho_i, ro, rt, sp_i, pipe_i, ort, fts, fso = flat
-        mm_valid = np.array([sc.multmux_valid(k, spec.mcr) for k in MULTMUXES])
-        return cls(spec=spec, memcells=tuple(memcells), splits=splits,
-                   mem_i=mem_i, mm_i=mm_i, rho_i=rho_i,
-                   ro=ro.astype(bool), rt=rt.astype(bool), sp_i=sp_i,
-                   pipe_i=pipe_i, ort=ort.astype(bool),
-                   fts=fts.astype(bool), fso=fso.astype(bool),
-                   valid=mm_valid[mm_i])
+                  memcells: tuple[sc.MemCellKind, ...] | None = None,
+                  config: LatticeConfig | None = None) -> "DesignLattice":
+        if config is None:
+            config = seed_config(memcells)
+        elif memcells is not None:
+            config = config.with_memcells(memcells)
+        return cls.from_axes(spec, config, resolve_axes(spec, config))
+
+    @classmethod
+    def from_axes(cls, spec: MacroSpec, config: LatticeConfig,
+                  axes: tuple[ResolvedAxis, ...]) -> "DesignLattice":
+        dims = dims_of(axes)
+        grids = np.meshgrid(*[np.arange(n) for n in dims], indexing="ij")
+        coords = []
+        valid = None
+        for ax, g in zip(axes, grids):
+            c = g.ravel()
+            if ax.validity is not None:
+                v = np.asarray(ax.validity, dtype=bool)[c]
+                valid = v if valid is None else (valid & v)
+            coords.append(c.astype(bool) if ax.bool_coords else c)
+        n = coords[0].shape[0] if coords else 0
+        if valid is None:
+            valid = np.ones(n, dtype=bool)
+        return cls(spec=spec, config=config, axes=axes, coords=tuple(coords),
+                   valid=valid, dims=dims, strides=strides_of(dims))
 
     def __len__(self) -> int:
-        return self.mem_i.shape[0]
+        return self.coords[0].shape[0]
+
+    # -- axis access ---------------------------------------------------------
+
+    def axis(self, name: str) -> ResolvedAxis | None:
+        for ax in self.axes:
+            if ax.name == name:
+                return ax
+        return None
+
+    def axis_pos(self, name: str) -> int:
+        for k, ax in enumerate(self.axes):
+            if ax.name == name:
+                return k
+        raise KeyError(name)
+
+    def coord(self, name: str) -> np.ndarray | None:
+        for ax, c in zip(self.axes, self.coords):
+            if ax.name == name:
+                return c
+        return None
+
+    def _coord_or_zeros(self, name: str) -> np.ndarray:
+        c = self.coord(name)
+        return c if c is not None else np.zeros(len(self), dtype=np.int64)
+
+    # Historical coordinate attributes (seed axes; always present).
+    @property
+    def mem_i(self) -> np.ndarray:
+        return self.coord("memcell")
 
     @property
-    def dims(self) -> tuple[int, ...]:
-        return (len(self.memcells), len(MULTMUXES), len(RHO_STEPS), 2, 2,
-                len(self.splits), len(PIPE_STEPS), 2, 2, 2)
+    def mm_i(self) -> np.ndarray:
+        return self.coord("multmux")
 
     @property
-    def strides(self) -> tuple[int, ...]:
-        dims = self.dims
-        out = []
-        acc = 1
-        for n in reversed(dims):
-            out.append(acc)
-            acc *= n
-        return tuple(reversed(out))
+    def rho_i(self) -> np.ndarray:
+        return self.coord("rho")
 
-    def index_of(self, mem_i, mm_i, rho_i, ro, rt, sp_i, pipe_i, ort, fts,
-                 fso):
+    @property
+    def ro(self) -> np.ndarray:
+        return self.coord("reorder")
+
+    @property
+    def rt(self) -> np.ndarray:
+        return self.coord("retimed")
+
+    @property
+    def sp_i(self) -> np.ndarray:
+        return self.coord("split")
+
+    @property
+    def pipe_i(self) -> np.ndarray:
+        return self.coord("pipe")
+
+    @property
+    def ort(self) -> np.ndarray:
+        return self.coord("ofu_retime")
+
+    @property
+    def fts(self) -> np.ndarray:
+        return self.coord("fuse_tree_sa")
+
+    @property
+    def fso(self) -> np.ndarray:
+        return self.coord("fuse_sa_ofu")
+
+    # Optional-axis coordinates (zeros when the axis is disabled — the
+    # seed design).
+    @property
+    def prec_i(self) -> np.ndarray:
+        return self._coord_or_zeros("precision")
+
+    @property
+    def apx_i(self) -> np.ndarray:
+        return self._coord_or_zeros("approx_cell")
+
+    @property
+    def memcells(self) -> tuple[sc.MemCellKind, ...]:
+        return self.axis("memcell").values
+
+    @property
+    def splits(self) -> tuple[int, ...]:
+        return self.axis("split").values
+
+    def index_of(self, *coords):
         """Mixed-radix flat index — O(1) addressing for masked selection.
-        Bool flags participate directly (False=0/True=1)."""
-        s = self.strides
-        return (mem_i * s[0] + mm_i * s[1] + rho_i * s[2] + ro * s[3]
-                + rt * s[4] + sp_i * s[5] + pipe_i * s[6] + ort * s[7]
-                + fts * s[8] + fso * s[9])
+        Bool flags participate directly (False=0/True=1).  Callers may pass
+        only the leading coordinates: missing trailing axes address index 0
+        (their default value), so seed-axis call sites work unchanged on an
+        extended lattice."""
+        if len(coords) > len(self.strides):
+            raise ValueError(f"got {len(coords)} coordinates for "
+                             f"{len(self.strides)} axes")
+        total = 0
+        for c, s in zip(coords, self.strides):
+            total = total + c * s
+        return total
+
+    def coords_of(self, i: int) -> tuple[int, ...]:
+        """Inverse of :meth:`index_of` (per-axis coordinates of a point)."""
+        return tuple(int((i // s) % n)
+                     for s, n in zip(self.strides, self.dims))
 
     def design_at(self, i: int, audit: tuple[str, ...] = ()) -> MacroDesign:
-        csa = CSADesign(rho=RHO_STEPS[self.rho_i[i]], reorder=bool(self.ro[i]),
+        rho_ax = self.axis("rho")
+        pipe_ax = self.axis("pipe")
+        mm_ax = self.axis("multmux")
+        csa = CSADesign(rho=rho_ax.values[self.rho_i[i]],
+                        reorder=bool(self.ro[i]),
                         retimed=bool(self.rt[i]),
                         split=self.splits[self.sp_i[i]])
+        kw = {}
+        prec_ax = self.axis("precision")
+        if prec_ax is not None and self.prec_i[i] != 0:
+            plan = prec_ax.values[self.prec_i[i]]
+            kw["ofu_precisions"] = plan.ints
+            kw["align_fp"] = plan.fps
+        apx_ax = self.axis("approx_cell")
+        if apx_ax is not None:
+            cell = apx_ax.values[self.apx_i[i]]
+            if not cell.is_exact():
+                kw["approx_cell"] = cell
         return MacroDesign(spec=self.spec,
                            memcell=self.memcells[self.mem_i[i]],
-                           multmux=MULTMUXES[self.mm_i[i]], csa=csa,
-                           ofu_pipe_stages=PIPE_STEPS[self.pipe_i[i]],
+                           multmux=mm_ax.values[self.mm_i[i]], csa=csa,
+                           ofu_pipe_stages=pipe_ax.values[self.pipe_i[i]],
                            ofu_retimed_into_sa=bool(self.ort[i]),
                            fuse_tree_sa=bool(self.fts[i]),
-                           fuse_sa_ofu=bool(self.fso[i]), audit=audit)
+                           fuse_sa_ofu=bool(self.fso[i]), audit=audit,
+                           **kw)
+
+    def index_of_design(self, design: MacroDesign) -> int:
+        """Flat index of the point that materializes ``design`` — the inverse
+        of :meth:`design_at` up to the audit trail.  The incremental merge
+        uses this to re-anchor cached slice-frontier points in the parent
+        lattice's flat order (deterministic duplicate collapse).  Raises
+        ``ValueError`` when a design coordinate is not on this lattice."""
+        coords = []
+        for ax in self.axes:
+            if ax.name == "precision":
+                if design.ofu_precisions is None and design.align_fp is None:
+                    coords.append(0)
+                    continue
+                v = next((k for k, p in enumerate(ax.values)
+                          if p.ints == design.ofu_precisions
+                          and p.fps == design.align_fp), None)
+                if v is None:
+                    raise ValueError(f"precision plan "
+                                     f"{design.ofu_precisions}/"
+                                     f"{design.align_fp} not on this lattice")
+                coords.append(v)
+                continue
+            if ax.name == "approx_cell":
+                cell = design.approx_cell
+                if cell is None:
+                    v = next((k for k, c in enumerate(ax.values)
+                              if c.is_exact()), None)
+                else:
+                    v = next((k for k, c in enumerate(ax.values)
+                              if c == cell), None)
+                if v is None:
+                    raise ValueError(f"approx cell {cell!r} not on this "
+                                     "lattice")
+                coords.append(v)
+                continue
+            value = {
+                "memcell": design.memcell,
+                "multmux": design.multmux,
+                "rho": design.csa.rho,
+                "reorder": design.csa.reorder,
+                "retimed": design.csa.retimed,
+                "split": design.csa.split,
+                "pipe": design.ofu_pipe_stages,
+                "ofu_retime": design.ofu_retimed_into_sa,
+                "fuse_tree_sa": design.fuse_tree_sa,
+                "fuse_sa_ofu": design.fuse_sa_ofu,
+            }[ax.name]
+            try:
+                coords.append(ax.values.index(value))
+            except ValueError:
+                raise ValueError(f"{ax.name} value {value!r} not on this "
+                                 "lattice") from None
+        return int(self.index_of(*coords))
+
+    def sublattice(self, axis_name: str, value_indices: tuple[int, ...]
+                   ) -> tuple["DesignLattice", np.ndarray]:
+        """Restrict one axis to a subset of its values.
+
+        Returns ``(sub, parent_flat)`` where ``sub`` is a proper product
+        lattice over the restricted axis (evaluable by every strategy) and
+        ``parent_flat[j]`` is the flat index of ``sub`` point ``j`` in this
+        lattice.  This is the unit of incremental re-synthesis: when one
+        axis's cache signature changes, only the invalidated value slices
+        are re-evaluated and merged with the cached per-slice frontiers.
+        """
+        value_indices = tuple(int(v) for v in value_indices)
+        pos = self.axis_pos(axis_name)
+        src = self.axes[pos]
+        if not value_indices or not all(0 <= v < src.size
+                                        for v in value_indices):
+            raise ValueError(f"bad value indices {value_indices} for axis "
+                             f"{axis_name} of size {src.size}")
+        sub_axis = ResolvedAxis(
+            name=src.name,
+            values=tuple(src.values[v] for v in value_indices),
+            payloads=tuple(src.payloads[v] for v in value_indices),
+            tech_fields=(tuple(src.tech_fields[v] for v in value_indices)
+                         if src.tech_fields else ()),
+            validity=(tuple(src.validity[v] for v in value_indices)
+                      if src.validity is not None else None),
+            bool_coords=src.bool_coords)
+        axes = self.axes[:pos] + (sub_axis,) + self.axes[pos + 1:]
+        sub = DesignLattice.from_axes(self.spec, self.config, axes)
+        remap = np.asarray(value_indices, dtype=np.int64)
+        parent_flat = np.zeros(len(sub), dtype=np.int64)
+        for k, (st, c) in enumerate(zip(self.strides, sub.coords)):
+            ci = remap[c.astype(np.int64)] if k == pos else c
+            parent_flat = parent_flat + ci * st
+        return sub, parent_flat
 
 
 # ---------------------------------------------------------------------------
@@ -333,13 +597,14 @@ class BatchedPPA:
                 int(self.tables.csa_index(self.lattice.rho_i[i],
                                           self.lattice.ro[i],
                                           self.lattice.rt[i],
-                                          self.lattice.sp_i[i]))])
+                                          self.lattice.sp_i[i],
+                                          self.lattice.apx_i[i]))])
 
 
 # Scalar constants packed into one f64 argument so every (spec, tech) change
 # reaches the jitted kernel as data — never as a baked-in trace constant
 # (which would also expose literal divisors to reciprocal strength-reduction).
-_CONST_FIELDS = ("apr", "a_sa", "a_align", "a_drv", "e_wl", "e_sa", "e_bl",
+_CONST_FIELDS = ("apr", "a_sa", "a_drv", "e_wl", "e_sa", "e_bl",
                  "eps_fj", "escale")
 
 
@@ -354,34 +619,41 @@ def _eval_kernel(idx, tabs, consts, e_ofu_m, e_align_m):
     multiplies that never feed an add (XLA's FMA contraction rewrites
     mul-then-add chains even across an optimization_barrier, so the retiming
     timing chain is computed eagerly by the caller instead).
+
+    Axis-generic addressing: ``csa_j`` indexes the approx-cell-flattened CSA
+    tables, ``ofu_j`` the precision-plan-flattened OFU tables, and ``prec_j``
+    gathers the per-plan alignment-unit terms.  With the optional axes
+    disabled these degenerate to the seed gathers (index 0 everywhere) and
+    every gathered value equals the former scalar constant — bit-identical.
     """
-    mem_i, mm_i, csa_j, pipe_i, ort, fts, fso = idx
+    mem_i, mm_i, csa_j, ofu_j, prec_j, ort, fts, fso = idx
     (t_wl_mm, csa_crit, t_ofu, a_array_t, a_mult_t, a_tree_t, a_ofu_t,
-     e_mm_t, e_tree_t) = tabs
+     a_align_t, e_mm_t, e_tree_t) = tabs
     c = {k: consts[i] for i, k in enumerate(_CONST_FIELDS)}
     n = mm_i.shape[0]
 
     # ---- raw timing components (the fixup chain runs in numpy) -------------
     mac_base = t_wl_mm[mm_i] + csa_crit[csa_j]
-    ofu_base = t_ofu[pipe_i]
+    ofu_base = t_ofu[ofu_j]
 
     # ---- area (accumulated in the scalar breakdown order) -------------------
     a_array = a_array_t[mem_i]
     a_mult = a_mult_t[mm_i]
     a_tree = a_tree_t[csa_j]
-    a_ofu = a_ofu_t[pipe_i]
+    a_ofu = a_ofu_t[ofu_j]
+    a_align = a_align_t[prec_j]
     placed = a_array + a_mult
     placed = placed + a_tree
     placed = placed + c["a_sa"]
     placed = placed + a_ofu
-    placed = placed + c["a_align"]
+    placed = placed + a_align
     placed = placed + c["a_drv"]
     area = placed * c["apr"]
     breakdown = {
         "sram_array": a_array, "multmux": a_mult, "adder_tree": a_tree,
         "shift_adder": jnp.broadcast_to(c["a_sa"], (n,)),
         "ofu": a_ofu,
-        "align": jnp.broadcast_to(c["a_align"], (n,)),
+        "align": a_align,
         "drivers": jnp.broadcast_to(c["a_drv"], (n,)),
     }
 
@@ -393,8 +665,8 @@ def _eval_kernel(idx, tabs, consts, e_ofu_m, e_align_m):
         e = e + e_mm_t[mm_i]
         e = e + e_tree_t[csa_j]
         e = e + c["e_sa"]
-        e = e + e_ofu_m[m][pipe_i]
-        e = e + e_align_m[m]
+        e = e + e_ofu_m[m][ofu_j]
+        e = e + e_align_m[m][prec_j]
         e = e + c["e_bl"]
         e_cycle.append((e * c["eps_fj"]) * c["escale"])
     e_cycle = jnp.stack(e_cycle)                       # (M, n)
@@ -412,16 +684,16 @@ def _kernel_inputs(tables: SpecTables
     spec, tech = tables.spec, tables.tech
     consts = np.array([
         tech.apr_overhead,
-        tables.a_sa, tables.a_align, tables.a_drv,
+        tables.a_sa, tables.a_drv,
         tables.e_wl, tables.e_sa, tables.e_bl,
         tech.eps_fj,
         energy_scale(spec.vdd),
     ], dtype=np.float64)
     tabs = (tables.t_wl_mm, tables.csa_crit, tables.t_ofu,
             tables.a_array, tables.a_mult, tables.a_tree,
-            tables.a_ofu, tables.e_mm, tables.e_tree)
+            tables.a_ofu, tables.a_align_t, tables.e_mm, tables.e_tree)
     e_ofu_m = np.stack([tables.e_ofu[m] for m in tables.modes])
-    e_align_m = np.array([tables.e_align[m] for m in tables.modes])
+    e_align_m = np.stack([tables.e_align[m] for m in tables.modes])
     return tabs, consts, e_ofu_m, e_align_m
 
 
@@ -438,7 +710,7 @@ def evaluate(lattice: DesignLattice, tables: SpecTables) -> BatchedPPA:
 
 
 def _finish(lattice: DesignLattice, tables: SpecTables, csa_i: np.ndarray,
-            out: dict) -> BatchedPPA:
+            ofu_j: np.ndarray, out: dict) -> BatchedPPA:
     """numpy tail of the roll-up, applied to one spec's kernel outputs."""
     spec, tech = tables.spec, tables.tech
     e_cycle = {m: out["e_cycle"][k] for k, m in enumerate(tables.modes)}
@@ -475,7 +747,7 @@ def _finish(lattice: DesignLattice, tables: SpecTables, csa_i: np.ndarray,
     # latency is pure integer bookkeeping.
     ib = max(spec.int_precisions)
     pipe_lat = (tables.l_csa[csa_i] + tables.l_sa
-                + tables.l_ofu[lattice.pipe_i]
+                + tables.l_ofu[ofu_j]
                 - lattice.fts.astype(np.int64)
                 - lattice.fso.astype(np.int64))
     latency = ib + np.maximum(1, pipe_lat)
@@ -489,14 +761,13 @@ def _finish(lattice: DesignLattice, tables: SpecTables, csa_i: np.ndarray,
 
 
 @functools.lru_cache(maxsize=32)
-def _evaluated(spec: MacroSpec, tech: TechModel,
-               memcells: tuple[sc.MemCellKind, ...]
+def _evaluated(spec: MacroSpec, tech: TechModel, config: LatticeConfig
                ) -> tuple[DesignLattice, SpecTables, BatchedPPA]:
     """Characterize-once cache (the SCL-LUT philosophy): the evaluated
-    lattice for a (spec, tech) pair is immutable and reused by every
-    preference sweep and co-design query against it."""
-    lattice = DesignLattice.enumerate(spec, memcells)
-    tables = SpecTables(spec, tech)
+    lattice for a (spec, tech, config) triple is immutable and reused by
+    every preference sweep and co-design query against it."""
+    lattice = DesignLattice.enumerate(spec, config=config)
+    tables = SpecTables(spec, tech, config=config)
     return lattice, tables, evaluate(lattice, tables)
 
 
@@ -570,10 +841,14 @@ class BatchedSweep:
 
 
 def design_space_sweep(spec: MacroSpec, tech: TechModel,
-                       memcells: tuple[sc.MemCellKind, ...] = MEMCELLS
-                       ) -> BatchedSweep:
+                       memcells: tuple[sc.MemCellKind, ...] | None = None,
+                       config: LatticeConfig | None = None) -> BatchedSweep:
     """Evaluate every discrete design point for ``spec`` in one fused pass."""
-    lattice, tables, ppa = _evaluated(spec, tech, tuple(memcells))
+    if config is None:
+        config = seed_config(memcells)
+    elif memcells is not None:
+        config = config.with_memcells(memcells)
+    lattice, tables, ppa = _evaluated(spec, tech, config)
     return BatchedSweep(lattice=lattice, tables=tables, ppa=ppa)
 
 
@@ -596,15 +871,24 @@ def _first_feasible(values: np.ndarray, budget: np.ndarray
 
 
 def mso_search_batched(spec: MacroSpec, scl=None, tech: TechModel = None,
-                       resolution: int = 4) -> SearchResult:
+                       resolution: int = 4,
+                       config: LatticeConfig | None = None) -> SearchResult:
     """Multi-spec sweep with the hierarchical search replayed as masked
     selection over the batched lattice tensors.  Frontier is identical to the
     scalar :func:`repro.core.searcher.mso_search` (``scl`` is accepted for
-    signature parity; the batched path reads the same models directly)."""
+    signature parity; the batched path reads the same models directly).
+
+    ``config`` may enable optional axes: the replay walks the seed axes with
+    every optional coordinate pinned at its default (index 0), so the result
+    stays identical to the scalar search while the evaluated lattice covers
+    the extended space."""
     if tech is None:
         raise ValueError("tech model required")
-    memcell = sc.MemCellKind.SRAM_6T
-    lattice, tables, T = _evaluated(spec, tech, (memcell,))
+    if config is None:
+        config = seed_config((sc.MemCellKind.SRAM_6T,))
+    else:
+        config = config.with_memcells((sc.MemCellKind.SRAM_6T,))
+    lattice, tables, T = _evaluated(spec, tech, config)
     return _alg1_replay(lattice, tables, T, resolution)
 
 
@@ -629,12 +913,14 @@ def _alg1_replay(lattice: DesignLattice, tables: SpecTables, T: BatchedPPA,
                                fts, fso)
         return arr[idx]
 
+    n_rho, n_pipe = tables.n_rho, tables.n_pipe
+
     # ---- step 2, MAC path: tt1 -> tt2 -> tt3 as a first-feasible chain -----
     # cumulative transform chain from the step-1 state
     chain: list[tuple[int, int, int, int]] = [(0, 0, 0, 0), (0, 1, 0, 0)]
-    for ri in range(1, len(RHO_STEPS)):
+    for ri in range(1, n_rho):
         chain.append((ri, 1, 0, 0))
-    last_rho = len(RHO_STEPS) - 1
+    last_rho = n_rho - 1
     chain.append((last_rho, 1, 1, 0))
     for sp_i in range(1, len(tables.splits)):
         chain.append((last_rho, 1, 1, sp_i))
@@ -652,14 +938,14 @@ def _alg1_replay(lattice: DesignLattice, tables: SpecTables, T: BatchedPPA,
     # tt1-relax: cheapest adder mix (highest rho) still meeting timing.
     mac_rho = np.stack([gather(T.mac, np.full(P, mm_tg), np.full(P, j), ro,
                                rt, sp_i, zeros, zeros, zeros, zeros)
-                        for j in range(len(RHO_STEPS))], axis=1)
-    elig = (np.arange(len(RHO_STEPS))[None, :] < rho_i[:, None]) \
+                        for j in range(n_rho)], axis=1)
+    elig = (np.arange(n_rho)[None, :] < rho_i[:, None]) \
         & (mac_rho <= budget[:, None])
     has_relax = elig.any(axis=1) & mac_ok
     rho_i = np.where(has_relax, elig.argmax(axis=1), rho_i)
 
     # ---- step 2, OFU path: tt4 -> tt5 as a first-feasible chain ------------
-    ofu_states = [(0, 0), (1, 0), (1, 1), (1, 2), (1, 3)]
+    ofu_states = [(0, 0), (1, 0)] + [(1, p) for p in range(1, n_pipe)]
     ofu_chain = np.array([
         max(T.ofu[lattice.index_of(0, mm_tg, 0, 0, 0, 0, p, o, 0, 0)],
             T.sa[lattice.index_of(0, mm_tg, 0, 0, 0, 0, p, o, 0, 0)])
@@ -697,8 +983,8 @@ def _alg1_replay(lattice: DesignLattice, tables: SpecTables, T: BatchedPPA,
     # ft1 (power): rho back up, then un-split, then drop OFU pipe stages.
     crit_rho = np.stack([meets(mm_cur, np.full(P, j), ro, rt, sp_i, pipe, ort,
                                fts, fso)
-                         for j in range(len(RHO_STEPS))], axis=1)
-    elig = (np.arange(len(RHO_STEPS))[None, :] < rho_i[:, None]) & crit_rho
+                         for j in range(n_rho)], axis=1)
+    elig = (np.arange(n_rho)[None, :] < rho_i[:, None]) & crit_rho
     take = elig.any(axis=1) & power_pref
     rho_i = np.where(take, elig.argmax(axis=1), rho_i)
 
@@ -712,7 +998,7 @@ def _alg1_replay(lattice: DesignLattice, tables: SpecTables, T: BatchedPPA,
         active = apply_     # a failed halving stops the walk
 
     active = power_pref.copy()
-    for _ in range(len(PIPE_STEPS) - 1):
+    for _ in range(n_pipe - 1):
         can = active & (pipe > 0)
         ok = meets(mm_cur, rho_i, ro, rt, sp_i, np.maximum(pipe - 1, 0), ort,
                    fts, fso)

@@ -97,9 +97,13 @@ _eval_kernel_pmap = jax.pmap(
 
 
 def group_key(lattice: DesignLattice, tables: SpecTables):
-    """Specs share a vmap group iff their lattices address identically and
-    their mode axes have equal length (mode *names* may differ per spec)."""
-    return (lattice.dims, lattice.splits, len(tables.modes))
+    """Specs share a vmap group iff their lattices address identically —
+    same registered axes at the same sizes — and their mode axes have equal
+    length (mode *names* may differ per spec).  Axis names participate so an
+    extended lattice (precision / approx_cell axes enabled) can never fuse
+    with a seed lattice that happens to share its flat shape."""
+    return (tuple(a.name for a in lattice.axes), lattice.dims,
+            lattice.splits, len(tables.modes))
 
 
 @dataclass(frozen=True)
@@ -111,6 +115,7 @@ class PackedGroup:
     lattices: tuple[DesignLattice, ...]
     tables_list: tuple[SpecTables, ...]
     csa_i: np.ndarray
+    ofu_j: np.ndarray
     idx: tuple[np.ndarray, ...]
     operands: tuple      # (tabs_s, consts_s, e_ofu_s, e_align_s)
 
@@ -122,19 +127,31 @@ def pack_group(lattices: Sequence[DesignLattice],
                tables_list: Sequence[SpecTables]) -> PackedGroup:
     """Pack one vmap group's kernel operands (every strategy — vmap, sharded
     jit, pmap, and the single-spec jit launch — executes from this one
-    packing, so the paths cannot drift)."""
+    packing, so the paths cannot drift).  Gather indices come from the
+    tables' axis-flattening helpers (``csa_index`` / ``ofu_index``), so an
+    optional axis's coordinates reach the kernel as wider gathers into the
+    flattened tables — never as new kernel code."""
     lat0, t0 = lattices[0], tables_list[0]
-    csa_i = np.asarray(t0.csa_index(lat0.rho_i, lat0.ro, lat0.rt, lat0.sp_i))
+    for lat, tab in zip(lattices, tables_list):
+        if not tab.compatible_with(lat):
+            raise ValueError(
+                f"tables built for axes {[(a.name, a.size) for a in tab.axes]}"
+                f" cannot serve lattice axes "
+                f"{[(a.name, a.size) for a in lat.axes]}")
+    csa_i = np.asarray(t0.csa_index(lat0.rho_i, lat0.ro, lat0.rt, lat0.sp_i,
+                                    lat0.apx_i))
+    ofu_j = np.asarray(t0.ofu_index(lat0.pipe_i, lat0.prec_i))
     packed = [B._kernel_inputs(t) for t in tables_list]
     tabs_s = tuple(np.stack([p[0][j] for p in packed], dtype=np.float64)
                    for j in range(len(packed[0][0])))
     consts_s = np.stack([p[1] for p in packed], dtype=np.float64)
     e_ofu_s = np.stack([p[2] for p in packed], dtype=np.float64)
     e_align_s = np.stack([p[3] for p in packed], dtype=np.float64)
-    idx = (lat0.mem_i, lat0.mm_i, csa_i, lat0.pipe_i, lat0.ort, lat0.fts,
-           lat0.fso)
+    idx = (lat0.mem_i, lat0.mm_i, csa_i, ofu_j, lat0.prec_i, lat0.ort,
+           lat0.fts, lat0.fso)
     return PackedGroup(lattices=tuple(lattices),
-                       tables_list=tuple(tables_list), csa_i=csa_i, idx=idx,
+                       tables_list=tuple(tables_list), csa_i=csa_i,
+                       ofu_j=ofu_j, idx=idx,
                        operands=(tabs_s, consts_s, e_ofu_s, e_align_s))
 
 
@@ -142,7 +159,7 @@ def unpack_group(packed: PackedGroup, out: dict) -> list[BatchedPPA]:
     """The shared single-spec numpy tail, applied per spec lane of one
     group's kernel outputs (bit-identity by construction)."""
     return [B._finish(packed.lattices[s], packed.tables_list[s], packed.csa_i,
-                      jax.tree.map(lambda a: a[s], out))
+                      packed.ofu_j, jax.tree.map(lambda a: a[s], out))
             for s in range(len(packed))]
 
 
@@ -410,12 +427,19 @@ def plan_for(lattices: Sequence[DesignLattice],
 
 
 def plan(specs: Sequence[MacroSpec], tech: TechModel,
-         memcells: tuple[sc.MemCellKind, ...], mode: str = "auto", mesh=None,
-         sharded: bool = False) -> ExecutionPlan:
+         memcells: tuple[sc.MemCellKind, ...] | None = None,
+         mode: str = "auto", mesh=None, sharded: bool = False,
+         config: "B.LatticeConfig | None" = None) -> ExecutionPlan:
     """Characterize every spec and bucket them into vmap groups — the one
-    grouping every execution path shares, so all paths group identically."""
-    lattices = [DesignLattice.enumerate(s, tuple(memcells)) for s in specs]
-    tables = [SpecTables(s, tech) for s in specs]
+    grouping every execution path shares, so all paths group identically.
+    ``config`` selects the lattice axis set (seed when None); ``memcells``
+    overrides its memcell axis (the historical argument)."""
+    if config is None:
+        config = B.seed_config(memcells)
+    elif memcells is not None:
+        config = config.with_memcells(memcells)
+    lattices = [DesignLattice.enumerate(s, config=config) for s in specs]
+    tables = [SpecTables(s, tech, config=config) for s in specs]
     return plan_for(lattices, tables, mode=mode, mesh=mesh, sharded=sharded)
 
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .csa import Gate, TreeNetlist
+from .csa import TreeNetlist
 
 
 def _fa(a: np.ndarray, b: np.ndarray, c: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

@@ -16,14 +16,13 @@ are reproduced by construction via :func:`calibrated_tech_for_reference`.
 from __future__ import annotations
 
 import functools
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import numpy as np
 
 from . import subcircuits as sc
-from .csa import CSADesign, CSAReport, characterize
-from .tech import TechModel, calibrated_tech
+from .csa import CSADesign, CSAReport
+from .tech import TechModel
 
 # Table II measurement conditions (used for calibration + default reporting).
 ACT_IN_MEAS = 0.125    # input sparsity 12.5%
@@ -102,12 +101,27 @@ class MacroDesign:
     ofu_retimed_into_sa: bool = False     # tt4
     fuse_tree_sa: bool = False            # Step 3 register fusion
     fuse_sa_ofu: bool = False
+    # Precision provisioning (lattice "precision" axis): the weight-precision
+    # set the OFU fusion chain is built for and the FP format set the
+    # alignment unit is built for.  None means the spec's own lists — the
+    # seed behavior, bit-identical.
+    ofu_precisions: tuple[int, ...] | None = None
+    align_fp: tuple[str, ...] | None = None
+    # Approximate adder-tree cell (lattice "approx_cell" axis); None/exact
+    # reproduces the characterized exact tree bit-for-bit.
+    approx_cell: sc.ApproxCellSpec | None = None
     audit: tuple[str, ...] = ()           # searcher decision log
 
     def name(self) -> str:
         bits = [self.memcell.value, self.multmux.value, self.csa.name()]
+        if self.approx_cell is not None and not self.approx_cell.is_exact():
+            bits.append(self.approx_cell.name)
         if self.ofu_pipe_stages:
             bits.append(f"ofuP{self.ofu_pipe_stages}")
+        if self.ofu_precisions:
+            bits.append(f"provW{max(self.ofu_precisions)}")
+        if self.align_fp:
+            bits.append(f"provF{len(self.align_fp)}")
         if self.fuse_tree_sa:
             bits.append("fTS")
         if self.fuse_sa_ofu:
@@ -185,12 +199,16 @@ def timing_paths(design: MacroDesign, tech: TechModel) -> tuple[PathReport, CSAR
     spec = design.spec
     wl = sc.wl_driver_ppa(spec.h, spec.w, spec.mcr, tech)
     mm = sc.multmux_ppa(design.multmux, spec.mcr, tech)
-    tree_ppa, csa_rep = sc.adder_tree_ppa(design.csa, spec.h, _product_bits(spec), tech)
+    tree_ppa, csa_rep = sc.adder_tree_ppa(design.csa, spec.h,
+                                          _product_bits(spec), tech,
+                                          cell=design.approx_cell)
     sa = sc.shift_adder_ppa(csa_rep.acc_width, spec.max_input_bits, tech)
     out_w = csa_rep.acc_width + spec.max_input_bits
-    ofu = sc.ofu_ppa(spec.w, tuple(spec.int_precisions), out_w,
-                     design.ofu_pipe_stages, tech)
-    align = sc.align_ppa(spec.w, tuple(spec.fp_precisions), tech)
+    ofu = sc.ofu_ppa(spec.w,
+                     design.ofu_precisions or tuple(spec.int_precisions),
+                     out_w, design.ofu_pipe_stages, tech)
+    align = sc.align_ppa(spec.w,
+                         design.align_fp or tuple(spec.fp_precisions), tech)
 
     mac_path = wl.delay_rel + mm.delay_rel + tree_ppa.delay_rel
     sa_path = sa.delay_rel
@@ -249,8 +267,9 @@ def _mode_energy_rel(design: MacroDesign, parts: dict, mode: str,
         # Alignment activity scales with the active format's width relative to
         # the widest format the unit was built for.
         exp, man = sc.FP_FORMATS[mode]
-        emax = max(sc.FP_FORMATS[f][0] for f in spec.fp_precisions)
-        mmax = max(sc.FP_FORMATS[f][1] for f in spec.fp_precisions)
+        built_for = design.align_fp or spec.fp_precisions
+        emax = max(sc.FP_FORMATS[f][0] for f in built_for)
+        mmax = max(sc.FP_FORMATS[f][1] for f in built_for)
         frac = (exp + 0.5 * man) / (emax + 0.5 * mmax)
         e += align.energy_rel * 0.62 * frac
     else:

@@ -47,8 +47,8 @@ from .batched import BatchedPPA, BatchedSweep, DesignLattice, SpecTables
 from .macro import MacroSpec
 # Chunk sizing lives with the shared Pareto predicate; re-exported here
 # because multi-spec sweeps are where accelerator-sized chunking matters.
-from .pareto import (DEFAULT_PARETO_BUDGET_BYTES, PARETO_EPS,  # noqa: F401
-                     nondominated_mask_auto, pareto_chunk_size)
+from .pareto import PARETO_EPS, nondominated_mask_auto
+from .pareto import DEFAULT_PARETO_BUDGET_BYTES, pareto_chunk_size  # noqa: F401  (re-export)
 from .searcher import SearchResult
 from .tech import TechModel
 
@@ -91,17 +91,21 @@ def scenario_specs() -> dict[str, MacroSpec]:
 
 
 def evaluate_many(specs: Sequence[MacroSpec], tech: TechModel,
-                  memcells: tuple[sc.MemCellKind, ...] = B.MEMCELLS
+                  memcells: tuple[sc.MemCellKind, ...] = B.MEMCELLS,
+                  config: B.LatticeConfig | None = None
                   ) -> list[tuple[DesignLattice, SpecTables, BatchedPPA]]:
     """Evaluate every design point of every spec, batching same-shape specs
     through one vmapped kernel launch.  Results are returned in input order
-    and are bit-identical per spec to :func:`repro.core.batched.evaluate`."""
-    return E.execute(E.plan(list(specs), tech, tuple(memcells), mode="vmap"))
+    and are bit-identical per spec to :func:`repro.core.batched.evaluate`.
+    ``config`` selects the registered axis set (seed when None)."""
+    return E.execute(E.plan(list(specs), tech, tuple(memcells), mode="vmap",
+                            config=config))
 
 
 def mso_search_many(specs: Sequence[MacroSpec], scl=None,
-                    tech: TechModel = None,
-                    resolution: int = 4) -> list[SearchResult]:
+                    tech: TechModel = None, resolution: int = 4,
+                    config: B.LatticeConfig | None = None
+                    ) -> list[SearchResult]:
     """Synthesize N macro specs in one fused pass.
 
     Per-spec results (explored set, frontier, every PPA field) are
@@ -111,18 +115,21 @@ def mso_search_many(specs: Sequence[MacroSpec], scl=None,
     signature parity with :func:`repro.core.searcher.mso_search`."""
     if tech is None:
         raise ValueError("tech model required")
-    evals = evaluate_many(specs, tech, memcells=(sc.MemCellKind.SRAM_6T,))
+    evals = evaluate_many(specs, tech, memcells=(sc.MemCellKind.SRAM_6T,),
+                          config=config)
     return [B._alg1_replay(lat, tab, T, resolution)
             for lat, tab, T in evals]
 
 
 def design_space_sweep_many(specs: Sequence[MacroSpec], tech: TechModel,
-                            memcells: tuple[sc.MemCellKind, ...] = B.MEMCELLS
+                            memcells: tuple[sc.MemCellKind, ...] = B.MEMCELLS,
+                            config: B.LatticeConfig | None = None
                             ) -> list[BatchedSweep]:
     """Exhaustive sweeps for N specs in one fused pass (the multi-spec
     counterpart of :func:`repro.core.batched.design_space_sweep`)."""
     return [BatchedSweep(lattice=lat, tables=tab, ppa=T)
-            for lat, tab, T in evaluate_many(specs, tech, memcells)]
+            for lat, tab, T in evaluate_many(specs, tech, memcells,
+                                             config=config)]
 
 
 def frontier_union(results: Iterable[SearchResult],

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import textwrap
 
-from .csa import CSADesign, TreeNetlist, build_netlist
+from .csa import TreeNetlist, build_netlist
 from .macro import MacroDesign, MacroPPA
 
 

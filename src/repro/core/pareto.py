@@ -318,6 +318,31 @@ def pareto_indices(objs: Sequence[Sequence[float]],
     return [i for _, i in front]
 
 
+def merged_pareto_indices(parent_idx: Sequence[int],
+                          objs: Sequence[Sequence[float]],
+                          mask_fn: Callable[[np.ndarray], np.ndarray]
+                          | None = None) -> list[int]:
+    """:func:`pareto_indices` over a pool assembled from several lattice
+    *slices* (the incremental re-synthesis merge): candidate ``i`` carries the
+    flat index ``parent_idx[i]`` of the design point in the parent lattice.
+
+    Rows are visited in ascending parent-flat-index order before extraction,
+    so the near-duplicate collapse keeps the *same representative* a cold
+    full-lattice pass would keep (that pass visits points in flat order) — no
+    matter how the pool was partitioned into slices or in which order the
+    slices arrived.  Returns positions into the pool as given, frontier
+    sorted by objective tuple, exactly like :func:`pareto_indices`.  A pool
+    whose slices are disjoint in parent index (the incremental contract)
+    therefore merges bit-identically to extracting the union in one pass."""
+    parent_idx = np.asarray(parent_idx, dtype=np.int64)
+    objs = list(objs)
+    if len(parent_idx) != len(objs):
+        raise ValueError("parent_idx must match objs one-to-one")
+    order = np.argsort(parent_idx, kind="stable")
+    picked = pareto_indices([objs[int(j)] for j in order], mask_fn=mask_fn)
+    return [int(order[p]) for p in picked]
+
+
 def pareto_front(items: Iterable[T], objectives: Callable[[T], Sequence[float]]
                  ) -> list[T]:
     """Filter ``items`` to the non-dominated set, stably ordered by the first

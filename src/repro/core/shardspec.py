@@ -68,22 +68,26 @@ resolve_mode = E.resolve_sharded_mode
 
 def evaluate_many_sharded(specs: Sequence[MacroSpec], tech: TechModel,
                           memcells: tuple[sc.MemCellKind, ...] = B.MEMCELLS,
-                          mesh=None, mode: str = "auto"
+                          mesh=None, mode: str = "auto",
+                          config: B.LatticeConfig | None = None
                           ) -> list[tuple[DesignLattice, SpecTables,
                                           BatchedPPA]]:
     """Device-sharded counterpart of :func:`repro.core.multispec.
     evaluate_many`: same grouping, same kernel, same numpy tail — the spec
     axis of each group is simply partitioned across ``mesh`` (default: a
     ``('spec',)`` mesh over every visible device).  Results are returned in
-    input order, bit-identical per spec to the unsharded path."""
+    input order, bit-identical per spec to the unsharded path.  ``config``
+    selects the registered axis set (seed when None)."""
     plan = E.plan(list(specs), tech, tuple(memcells),
-                  mode=_ENGINE_MODE[resolve_mode(mode)], mesh=mesh)
+                  mode=_ENGINE_MODE[resolve_mode(mode)], mesh=mesh,
+                  config=config)
     return E.execute(plan)
 
 
 def mso_search_many_sharded(specs: Sequence[MacroSpec], scl=None,
                             tech: TechModel = None, resolution: int = 4,
-                            mesh=None, mode: str = "auto"
+                            mesh=None, mode: str = "auto",
+                            config: B.LatticeConfig | None = None
                             ) -> list[SearchResult]:
     """Synthesize 100+ macro specs in one device-sharded pass.
 
@@ -97,7 +101,7 @@ def mso_search_many_sharded(specs: Sequence[MacroSpec], scl=None,
         raise ValueError("tech model required")
     evals = evaluate_many_sharded(specs, tech,
                                   memcells=(sc.MemCellKind.SRAM_6T,),
-                                  mesh=mesh, mode=mode)
+                                  mesh=mesh, mode=mode, config=config)
     return [B._alg1_replay(lat, tab, T, resolution)
             for lat, tab, T in evals]
 
@@ -118,7 +122,8 @@ def design_space_sweep_many_sharded(specs: Sequence[MacroSpec],
                                     tech: TechModel,
                                     memcells: tuple[sc.MemCellKind, ...]
                                     = B.MEMCELLS,
-                                    mesh=None, mode: str = "auto"
+                                    mesh=None, mode: str = "auto",
+                                    config: B.LatticeConfig | None = None
                                     ) -> list[BatchedSweep]:
     """Exhaustive sweeps for N specs, spec axis sharded across devices.
 
@@ -132,7 +137,8 @@ def design_space_sweep_many_sharded(specs: Sequence[MacroSpec],
                                 mesh=mesh)
     return [BatchedSweep(lattice=lat, tables=tab, ppa=T, extract_mask=extract)
             for lat, tab, T in evaluate_many_sharded(specs, tech, memcells,
-                                                     mesh=mesh, mode=mode)]
+                                                     mesh=mesh, mode=mode,
+                                                     config=config)]
 
 
 # ---------------------------------------------------------------------------

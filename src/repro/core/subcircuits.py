@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import enum
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from . import csa as csa_mod
 from .tech import TechModel
@@ -214,14 +214,67 @@ def align_ppa(w_cols: int, fp_formats: tuple[str, ...], tech: TechModel) -> PPA:
 
 
 # ---------------------------------------------------------------------------
-# Adder tree (delegates to csa.py)
+# Adder tree (delegates to csa.py) + approximate compressor cells
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class ApproxCellSpec:
+    """An approximate adder-tree cell variant (OpenACM-style): the exact
+    4:2 compressor / full-adder cells are swapped for approximate ones whose
+    error is absorbed by the workload.  PPA is modeled as first-order scale
+    factors on the characterized exact tree — the tree *structure* (stage
+    count, register placement, accumulator widths, latency) is unchanged, so
+    an approximate variant slots into the same lattice point shape."""
+
+    name: str = "exact"
+    k_delay: float = 1.0
+    k_energy: float = 1.0
+    k_area: float = 1.0
+
+    def __post_init__(self):
+        if min(self.k_delay, self.k_energy, self.k_area) <= 0.0:
+            raise ValueError("approximate-cell scale factors must be > 0")
+
+    def is_exact(self) -> bool:
+        return self.k_delay == self.k_energy == self.k_area == 1.0
+
+
+#: The exact (seed) cell — scale factors of 1.0 reproduce the characterized
+#: tree bit-for-bit.
+EXACT_CELL = ApproxCellSpec()
+
+#: A small catalog of approximate compressor variants (first-order numbers in
+#: the spirit of the OpenACM lower-part-OR / truncation families).
+APPROX_CELLS: tuple[ApproxCellSpec, ...] = (
+    EXACT_CELL,
+    ApproxCellSpec(name="loa4", k_delay=0.92, k_energy=0.71, k_area=0.78),
+    ApproxCellSpec(name="trunc8", k_delay=0.85, k_energy=0.55, k_area=0.64),
+)
+
+
+def approx_tree_report(rep: csa_mod.CSAReport,
+                       cell: ApproxCellSpec | None) -> csa_mod.CSAReport:
+    """Apply an approximate cell's scale factors to a characterized exact
+    tree.  ``None`` or the exact cell returns the report unchanged (the same
+    object — bit-identity with the pre-approximation path)."""
+    if cell is None or cell.is_exact():
+        return rep
+    return replace(rep,
+                   crit_path_rel=rep.crit_path_rel * cell.k_delay,
+                   energy_rel=rep.energy_rel * cell.k_energy,
+                   area_um2=rep.area_um2 * cell.k_area)
+
+
 def adder_tree_ppa(design: csa_mod.CSADesign, h_rows: int, product_bits: int,
-                   tech: TechModel) -> tuple[PPA, csa_mod.CSAReport]:
-    rep = csa_mod.characterize(design, h_rows, product_bits, tech)
+                   tech: TechModel,
+                   cell: ApproxCellSpec | None = None
+                   ) -> tuple[PPA, csa_mod.CSAReport]:
+    rep = approx_tree_report(
+        csa_mod.characterize(design, h_rows, product_bits, tech), cell)
+    meta = (design.name(),) if cell is None or cell.is_exact() \
+        else (design.name(), cell.name)
     ppa = PPA(delay_rel=rep.crit_path_rel, energy_rel=rep.energy_rel,
               area_um2=rep.area_um2, latency_cycles=rep.latency_cycles,
-              meta=(design.name(),))
+              meta=meta)
     return ppa, rep

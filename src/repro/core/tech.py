@@ -28,7 +28,6 @@ Units used throughout ``repro.core``:
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 
 # ---------------------------------------------------------------------------

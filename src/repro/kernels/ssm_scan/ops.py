@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import ssm_scan_pallas
-from .ref import ssm_scan_assoc_ref, ssm_scan_ref
+from .ref import ssm_scan_assoc_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

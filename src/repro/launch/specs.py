@@ -12,10 +12,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..configs.base import ArchConfig, SHAPES, ShapeCfg
+from ..configs.base import ArchConfig, ShapeCfg
 from ..models.registry import ModelApi
 from ..parallel.logical import abstract_init, split_logical
-from ..parallel.sharding import rules_for_mesh
 
 
 def sds(shape, dtype):

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
 from ..ckpt import CheckpointManager
-from ..configs import SHAPES, get_config, smoke_config
+from ..configs import get_config, smoke_config
 from ..data import DataConfig, SyntheticCorpus
 from ..models import get_model
 from ..optim.adamw import AdamWConfig, adamw_init

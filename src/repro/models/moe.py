@@ -21,10 +21,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..parallel.logical import Logical, param
+from ..parallel.logical import param
 from . import layers as L
 from .transformer import (_logits, init_decode_state, scan_layers, stack_init)
-from .transformer import block_init as dense_block_init
 
 MOE_GROUP = 256      # tokens per dispatch group
 

@@ -10,7 +10,7 @@ forward_train returns (logits, aux_loss) uniformly (aux = 0 for non-MoE).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax.numpy as jnp
 

@@ -12,7 +12,6 @@ Decode state per mamba layer: conv cache (K-1 last inputs) + SSD state
 
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax

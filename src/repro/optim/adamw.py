@@ -9,7 +9,6 @@ optimizer state is ZeRO-sharded automatically.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

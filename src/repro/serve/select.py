@@ -51,6 +51,7 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+from ..core.axes import LatticeConfig
 from ..core.dse import CodesignReport, GemmShape, cross_workload_codesign
 from ..core.macro import MacroSpec, calibrated_tech_for_reference
 from ..core.multispec import frontier_union, scenario_specs
@@ -262,7 +263,8 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
                   n_macros: int = 256, ib: int = 8, wb: int = 8,
                   preference: Sequence[float] | None = None,
                   profile: PreferenceProfile | None = None,
-                  service=None) -> MacroSelection:
+                  service=None,
+                  config: LatticeConfig | None = None) -> MacroSelection:
     """Synthesize the multi-spec frontier and pick a macro per workload.
 
     ``workloads`` maps deployed-workload names to GEMM inventories (see
@@ -287,7 +289,12 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     user-facing ``--dcim-select`` shape of traffic, served ahead of bulk
     sweeps), the frontier is synthesized once per process (or once per
     persistent cache directory) and every later selection is a cache hit
-    with zero engine executions."""
+    with zero engine executions.
+
+    ``config`` selects the lattice axis set candidates are drawn from
+    (:class:`repro.core.axes.LatticeConfig` — e.g. extra precision-headroom
+    plans or approximate adder-tree cells); the seed axes when unset, so
+    existing selections are untouched."""
     if not workloads:
         raise ValueError("need at least one deployed workload")
     if tech is None:
@@ -301,7 +308,8 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     from ..service import Priority, SynthesisRequest
     responses = service.serve(
         [SynthesisRequest(spec=specs[n], tech=tech, resolution=resolution,
-                          priority=Priority.INTERACTIVE) for n in names])
+                          config=config, priority=Priority.INTERACTIVE)
+         for n in names])
     results = [r.result for r in responses]
     pool, labels = frontier_union(results, names)
     report = cross_workload_codesign(workloads, pool, n_macros=n_macros,

@@ -17,10 +17,11 @@ from .artifacts import (ARTIFACT_SCHEMA, result_from_payload,
 from .cache import CacheArtifactError, CacheStats, FrontierCache
 from .frontend import (WINDOW_BOUNDS, WINDOW_FRACTION, FrontendStats,
                        ServiceFrontend, SweepHandle, Ticket)
-from .keys import cache_key, canonical_spec, lattice_signature, spec_key
-from .requests import (FRONTIER_EVENT, SHED_REASONS, Priority, RequestState,
-                       SheddedResponse, StreamEvent, SynthesisRequest,
-                       SynthesisResponse, as_requests)
+from .keys import (axis_signatures, cache_key, canonical_spec,
+                   lattice_signature, slice_key, spec_key, sweep_key)
+from .requests import (FRONTIER_EVENT, REQUEST_KINDS, SHED_REASONS, Priority,
+                       RequestState, SheddedResponse, StreamEvent,
+                       SynthesisRequest, SynthesisResponse, as_requests)
 from .service import (SERVICE_MODES, ServiceStats, SynthesisService,
                       get_service, reset_service, resolve_service_mode)
 
@@ -29,9 +30,9 @@ __all__ = [
     "FrontendStats", "FrontierCache", "Priority", "RequestState",
     "SERVICE_MODES", "SHED_REASONS", "ServiceFrontend", "ServiceStats",
     "SheddedResponse", "StreamEvent", "SweepHandle", "SynthesisRequest",
-    "SynthesisResponse", "SynthesisService", "Ticket", "WINDOW_BOUNDS",
-    "WINDOW_FRACTION", "as_requests", "cache_key", "canonical_spec",
-    "get_service", "lattice_signature", "reset_service",
-    "result_from_payload", "result_to_payload", "resolve_service_mode",
-    "spec_key",
+    "REQUEST_KINDS", "SynthesisResponse", "SynthesisService", "Ticket",
+    "WINDOW_BOUNDS", "WINDOW_FRACTION", "as_requests", "axis_signatures",
+    "cache_key", "canonical_spec", "get_service", "lattice_signature",
+    "reset_service", "result_from_payload", "result_to_payload",
+    "resolve_service_mode", "slice_key", "spec_key", "sweep_key",
 ]

@@ -15,7 +15,7 @@ from __future__ import annotations
 from ..core.csa import CSADesign, CSAReport
 from ..core.macro import MacroDesign, MacroPPA, MacroSpec, PathReport
 from ..core.searcher import SearchResult
-from ..core.subcircuits import MemCellKind, MultMuxKind
+from ..core.subcircuits import ApproxCellSpec, MemCellKind, MultMuxKind
 from .keys import canonical_spec
 
 #: Schema tag of one persisted frontier artifact.
@@ -45,6 +45,17 @@ def _design_to_payload(d: MacroDesign) -> dict:
         "fuse_tree_sa": d.fuse_tree_sa,
         "fuse_sa_ofu": d.fuse_sa_ofu,
         "audit": list(d.audit),
+        # Optional-axis coordinates (absent for seed designs, so seed
+        # artifacts keep their historical byte layout).
+        **({"ofu_precisions": list(d.ofu_precisions)}
+           if d.ofu_precisions is not None else {}),
+        **({"align_fp": list(d.align_fp)}
+           if d.align_fp is not None else {}),
+        **({"approx_cell": {"name": d.approx_cell.name,
+                            "k_delay": d.approx_cell.k_delay,
+                            "k_energy": d.approx_cell.k_energy,
+                            "k_area": d.approx_cell.k_area}}
+           if d.approx_cell is not None else {}),
     }
 
 
@@ -60,7 +71,17 @@ def _design_from_payload(p: dict, spec: MacroSpec) -> MacroDesign:
         ofu_retimed_into_sa=bool(p["ofu_retimed_into_sa"]),
         fuse_tree_sa=bool(p["fuse_tree_sa"]),
         fuse_sa_ofu=bool(p["fuse_sa_ofu"]),
-        audit=tuple(p["audit"]))
+        audit=tuple(p["audit"]),
+        ofu_precisions=(tuple(int(b) for b in p["ofu_precisions"])
+                        if "ofu_precisions" in p else None),
+        align_fp=(tuple(str(f) for f in p["align_fp"])
+                  if "align_fp" in p else None),
+        approx_cell=(ApproxCellSpec(name=str(p["approx_cell"]["name"]),
+                                    k_delay=float(p["approx_cell"]["k_delay"]),
+                                    k_energy=float(
+                                        p["approx_cell"]["k_energy"]),
+                                    k_area=float(p["approx_cell"]["k_area"]))
+                     if "approx_cell" in p else None))
 
 
 _CSA_REPORT_FIELDS = ("crit_path_rel", "energy_rel", "area_um2", "n_fa",

@@ -45,7 +45,7 @@ from __future__ import annotations
 import heapq
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
 from ..core import engine as E

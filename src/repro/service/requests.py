@@ -29,12 +29,19 @@ they can key dicts and travel between threads without copying.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
+from ..core.axes import LatticeConfig
 from ..core.macro import MacroSpec
 from ..core.searcher import SearchResult
 from ..core.tech import TechModel
+
+#: ``SynthesisRequest.kind`` values: ``"search"`` replays Algorithm 1 over
+#: the preference grid (the historical request shape); ``"sweep"`` returns
+#: the exhaustive design-space frontier — the shape the service answers
+#: incrementally from per-axis slice caches when only one axis changed.
+REQUEST_KINDS = ("search", "sweep")
 
 
 class Priority(enum.IntEnum):
@@ -70,18 +77,26 @@ SHED_REASONS = ("queue_full", "deadline", "shutdown", "internal_error")
 class SynthesisRequest:
     """One synthesis request: what to synthesize plus how to serve it.
 
-    ``tech`` / ``resolution`` / ``mode`` default to the serving
+    ``tech`` / ``resolution`` / ``mode`` / ``config`` default to the serving
     :class:`~repro.service.service.SynthesisService`'s own defaults when
     ``None`` — the response's cache address always reflects the values the
-    request actually ran under.  ``priority`` orders the admission queue;
-    ``deadline_s`` is a relative admission deadline (seconds from submit):
-    a request still queued past it is shedded, never served stale.
+    request actually ran under.  ``kind`` selects the result shape
+    (:data:`REQUEST_KINDS`): a ``"search"`` replays Algorithm 1 over the
+    preference grid, a ``"sweep"`` returns the exhaustive lattice frontier
+    (and is eligible for incremental re-synthesis from per-axis slice
+    caches).  ``config`` picks the lattice axis set
+    (:class:`repro.core.axes.LatticeConfig`; the seed axes when unset).
+    ``priority`` orders the admission queue; ``deadline_s`` is a relative
+    admission deadline (seconds from submit): a request still queued past it
+    is shedded, never served stale.
     """
 
     spec: MacroSpec
     tech: Optional[TechModel] = None
     resolution: Optional[int] = None
     mode: Optional[str] = None
+    kind: str = "search"
+    config: Optional[LatticeConfig] = None
     priority: Priority = Priority.INTERACTIVE
     deadline_s: Optional[float] = None
     tag: Optional[str] = None        # caller correlation id, echoed back
@@ -90,6 +105,13 @@ class SynthesisRequest:
         if not isinstance(self.spec, MacroSpec):
             raise TypeError(f"spec must be a MacroSpec, got "
                             f"{type(self.spec).__name__}")
+        if self.kind not in REQUEST_KINDS:
+            raise ValueError(f"unknown request kind {self.kind!r}; "
+                             f"pick from {REQUEST_KINDS}")
+        if self.config is not None and not isinstance(self.config,
+                                                      LatticeConfig):
+            raise TypeError(f"config must be a LatticeConfig, got "
+                            f"{type(self.config).__name__}")
         object.__setattr__(self, "priority", Priority(self.priority))
         if self.resolution is not None and int(self.resolution) < 1:
             raise ValueError("resolution must be >= 1")

@@ -48,15 +48,18 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 import jax
+import numpy as np
 
 from ..core import batched as B
 from ..core import engine as E
 from ..core import subcircuits as sc
+from ..core.axes import SLICEABLE_AXES, LatticeConfig, seed_config
 from ..core.macro import MacroSpec, calibrated_tech_for_reference
+from ..core.pareto import merged_pareto_indices, nondominated_mask_auto
 from ..core.searcher import SearchResult
 from ..core.tech import TechModel
 from .cache import FrontierCache
-from .keys import cache_key
+from .keys import cache_key, slice_key, sweep_key
 from .requests import SynthesisRequest, SynthesisResponse, as_requests
 
 #: Request-side execution modes: "auto" picks vmap for small fused batches
@@ -102,11 +105,13 @@ class ServiceStats:
     coalesced: int = 0       # duplicates folded onto an in-batch miss
     misses: int = 0          # unique specs that reached the engine
     fused_passes: int = 0    # engine.execute calls this service made
+    slice_hits: int = 0      # per-axis slice frontiers reused by sweeps
+    incremental_passes: int = 0  # sweeps answered by slice merge, not re-roll
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in
                 ("requests", "cache_hits", "coalesced", "misses",
-                 "fused_passes")}
+                 "fused_passes", "slice_hits", "incremental_passes")}
 
 
 def _deprecated(old: str) -> None:
@@ -133,6 +138,7 @@ class SynthesisService:
     resolution: int = 4
     memcells: tuple[sc.MemCellKind, ...] = (sc.MemCellKind.SRAM_6T,)
     mode: str = "auto"
+    config: LatticeConfig | None = None
     cache: FrontierCache = field(default_factory=FrontierCache)
     stats: ServiceStats = field(default_factory=ServiceStats)
 
@@ -145,19 +151,30 @@ class SynthesisService:
     # -- effective per-request parameters -----------------------------------
 
     def _effective(self, req: SynthesisRequest
-                   ) -> tuple[TechModel, int, str]:
+                   ) -> tuple[TechModel, int, str, LatticeConfig]:
         tech = req.tech if req.tech is not None else self.tech
         resolution = (self.resolution if req.resolution is None
                       else int(req.resolution))
         mode = req.mode if req.mode is not None else self.mode
-        return tech, resolution, mode
+        if req.config is not None:
+            config = req.config
+        elif self.config is not None:
+            config = self.config
+        else:
+            config = seed_config(self.memcells)
+        return tech, resolution, mode, config
 
     # -- keys ----------------------------------------------------------------
 
     def key_for(self, request: SynthesisRequest) -> str:
-        """The content address a typed request is cached under."""
-        tech, resolution, _ = self._effective(request)
-        return cache_key(request.spec, tech, self.memcells, resolution)
+        """The content address a typed request is cached under: the search
+        address for ``kind="search"``, the exhaustive-sweep address for
+        ``kind="sweep"`` (see :mod:`repro.service.keys`)."""
+        tech, resolution, _, config = self._effective(request)
+        if request.kind == "sweep":
+            return sweep_key(request.spec, tech, config)
+        return cache_key(request.spec, tech, resolution=resolution,
+                         config=config)
 
     def request_key(self, spec: MacroSpec, tech: TechModel | None = None,
                     resolution: int | None = None) -> str:
@@ -188,13 +205,13 @@ class SynthesisService:
                                 "use the synthesize_many shim for bare "
                                 f"specs (got {type(r).__name__})")
         eff = [self._effective(r) for r in reqs]
-        keys = [cache_key(r.spec, tech, self.memcells, res)
-                for r, (tech, res, _) in zip(reqs, eff)]
+        keys = [self.key_for(r) for r in reqs]
         out: list[SynthesisResponse | None] = [None] * len(reqs)
 
         first_for_key: dict[str, int] = {}
         dups_of: dict[int, list[int]] = {}
         miss_by_mode: dict[str, list[int]] = {}
+        sweep_misses: list[int] = []
         for i, (r, k) in enumerate(zip(reqs, keys)):
             self.stats.requests += 1
             hit = self.cache.get(k)
@@ -211,27 +228,34 @@ class SynthesisService:
                 dups_of.setdefault(j, []).append(i)
                 continue                     # fans out from the fused pass
             first_for_key[k] = i
-            miss_by_mode.setdefault(eff[i][2], []).append(i)
+            if r.kind == "sweep":
+                sweep_misses.append(i)
+            else:
+                miss_by_mode.setdefault(eff[i][2], []).append(i)
+
+        def finish(i: int, res: SearchResult) -> None:
+            self.cache.put(keys[i], res)
+            out[i] = SynthesisResponse(request=reqs[i], result=res,
+                                       served_from="engine")
+            if on_partial is not None:
+                on_partial(i, res)
+            for d in dups_of.get(i, ()):
+                out[d] = SynthesisResponse(request=reqs[d], result=res,
+                                           served_from="coalesced")
+                if on_partial is not None:
+                    on_partial(d, res)
 
         for mode, members in miss_by_mode.items():
             self.stats.misses += len(members)
-
-            def finish(slot: int, res: SearchResult,
-                       _members=members) -> None:
-                i = _members[slot]
-                self.cache.put(keys[i], res)
-                out[i] = SynthesisResponse(request=reqs[i], result=res,
-                                           served_from="engine")
-                if on_partial is not None:
-                    on_partial(i, res)
-                for d in dups_of.get(i, ()):
-                    out[d] = SynthesisResponse(request=reqs[d], result=res,
-                                               served_from="coalesced")
-                    if on_partial is not None:
-                        on_partial(d, res)
-
             self._fused_pass([reqs[i] for i in members],
-                             [eff[i] for i in members], mode, finish)
+                             [eff[i] for i in members], mode,
+                             lambda slot, res, _m=members: finish(_m[slot],
+                                                                  res))
+
+        for i in sweep_misses:
+            self.stats.misses += 1
+            tech, _res, _mode, config = eff[i]
+            finish(i, self._serve_sweep(reqs[i].spec, tech, config))
         return out
 
     # -- deprecated kwarg-tuple shims ----------------------------------------
@@ -257,7 +281,8 @@ class SynthesisService:
     # -- the fused miss pass -------------------------------------------------
 
     def _fused_pass(self, requests: Sequence[SynthesisRequest],
-                    eff: Sequence[tuple[TechModel, int, str]], mode: str,
+                    eff: Sequence[tuple[TechModel, int, str, LatticeConfig]],
+                    mode: str,
                     on_result: Callable[[int, SearchResult], None]) -> None:
         """All same-mode misses through one ``engine.execute`` call:
         ``engine.plan_for`` micro-batches them into vmap groups by
@@ -267,16 +292,172 @@ class SynthesisService:
         resolution (exactly the ``mso_search_many`` contract, under
         whichever strategy the service resolved).  ``on_result(slot,
         result)`` fires as each spec lane finishes — the streaming hook."""
-        lattices = [B.DesignLattice.enumerate(r.spec, self.memcells)
-                    for r in requests]
-        tables = [B.SpecTables(r.spec, tech)
-                  for r, (tech, _, _) in zip(requests, eff)]
+        lattices = [B.DesignLattice.enumerate(r.spec, config=cfg)
+                    for r, (_, _, _, cfg) in zip(requests, eff)]
+        tables = [B.SpecTables(r.spec, tech, config=cfg)
+                  for r, (tech, _, _, cfg) in zip(requests, eff)]
         plan = E.plan_for(lattices, tables,
                           mode=resolve_service_mode(mode, len(requests)))
         evals = E.execute(plan)
         self.stats.fused_passes += 1
         for slot, (lat, tab, T) in enumerate(evals):
             on_result(slot, B._alg1_replay(lat, tab, T, eff[slot][1]))
+
+    # -- exhaustive sweeps: slice caching + incremental re-synthesis ---------
+
+    def _serve_sweep(self, spec: MacroSpec, tech: TechModel,
+                     config: LatticeConfig) -> SearchResult:
+        """One exhaustive-sweep miss.
+
+        Probes the per-axis-value *slice* caches first: if some sliceable
+        axis has cached frontiers for a subset of its values (the shape left
+        behind by a scoped tech recalibration or a single-axis growth — see
+        :mod:`repro.service.keys`), only the sublattice of the missing
+        values is evaluated and its slice frontiers are merged with the
+        cached ones (:func:`repro.core.pareto.merged_pareto_indices`), never
+        re-rolling the full axis product.  A fully cold sweep evaluates the
+        whole lattice once and leaves slice records behind for every
+        sliceable axis, so the *next* single-axis change is incremental."""
+        lattice = B.DesignLattice.enumerate(spec, config=config)
+        best: tuple[str, dict[int, SearchResult], list[str]] | None = None
+        for axis in SLICEABLE_AXES:
+            ax = lattice.axis(axis)
+            if ax is None:
+                continue
+            skeys = [slice_key(spec, tech, axis, v, config=config)
+                     for v in range(ax.size)]
+            cached = {}
+            for v, sk in enumerate(skeys):
+                rec = self.cache.get(sk)
+                if rec is not None:
+                    cached[v] = rec
+            if cached and (best is None or len(cached) > len(best[1])):
+                best = (axis, cached, skeys)
+
+        if best is None:
+            return self._cold_sweep(spec, tech, config, lattice)
+
+        axis, cached, skeys = best
+        self.stats.incremental_passes += 1
+        self.stats.slice_hits += len(cached)
+        missing = [v for v in range(lattice.axis(axis).size)
+                   if v not in cached]
+        fresh: dict[int, SearchResult] = {}
+        if missing:
+            sub, _parent = lattice.sublattice(axis, tuple(missing))
+            subtab = B.SpecTables(spec, tech, axes=sub.axes)
+            sweep = B.BatchedSweep(lattice=sub, tables=subtab,
+                                   ppa=B.evaluate(sub, subtab))
+            local = sub.coord(axis)
+            for li, v in enumerate(missing):
+                rec = _slice_record(sweep, local == li)
+                fresh[v] = rec
+                self.cache.put(skeys[v], rec)
+        records = [cached[v] if v in cached else fresh[v]
+                   for v in range(lattice.axis(axis).size)]
+        return _merge_slice_results(lattice, records)
+
+    def _cold_sweep(self, spec: MacroSpec, tech: TechModel,
+                    config: LatticeConfig,
+                    lattice: B.DesignLattice) -> SearchResult:
+        sweep = B.design_space_sweep(spec, tech, config=config)
+        for axis in SLICEABLE_AXES:
+            ax = sweep.lattice.axis(axis)
+            if ax is None:
+                continue
+            coord = sweep.lattice.coord(axis)
+            for v in range(ax.size):
+                self.cache.put(slice_key(spec, tech, axis, v, config=config),
+                               _slice_record(sweep, coord == v))
+        return _sweep_result(sweep)
+
+
+# -- sweep-result helpers (shared by the cold and incremental paths) --------
+
+
+def _sweep_objectives(points) -> list[tuple[float, float, float]]:
+    """The searcher's objective tuple (energy/cycle INT-lo, area, period)
+    recomputed from materialized points — the same float64 values the
+    batched sweep's objective matrix holds, so merged extraction compares
+    exactly what a full-lattice extraction would."""
+    return [(p.e_cycle_fj["int_lo"], p.area_um2, 1.0 / p.fmax_hz)
+            for p in points]
+
+
+def _extract_sweep_indices(sweep: B.BatchedSweep,
+                           cand: np.ndarray) -> list[int]:
+    """Frontier flat indices over an explicit candidate set (no feasibility
+    fallback — the slice records need the raw feasible/valid split)."""
+    if cand.size == 0:
+        return []
+    objs = sweep.objectives()[cand]
+    return [int(cand[j])
+            for j in E.extract_frontier(objs, nondominated_mask_auto)]
+
+
+def _slice_record(sweep: B.BatchedSweep, sel: np.ndarray) -> SearchResult:
+    """The cacheable frontier record of one axis-value slice of a sweep.
+
+    Encoded as a :class:`SearchResult` so it rides the existing artifact
+    codec: ``frontier`` is the slice's *feasible* frontier (empty when no
+    point meets timing — deliberately no fallback, so "any feasible point in
+    the full lattice" is recoverable as "any slice frontier non-empty"),
+    ``explored`` is the slice's frontier over all valid points regardless of
+    feasibility (the fallback pool), and ``n_evaluated`` is the slice's
+    valid-point count (slices partition the lattice along one axis, so these
+    sum to the full count)."""
+    valid = sweep.lattice.valid & sel
+    feas = valid & sweep.ppa.meets
+    f_idx = _extract_sweep_indices(sweep, np.flatnonzero(feas))
+    e_idx = _extract_sweep_indices(sweep, np.flatnonzero(valid))
+    return SearchResult(
+        spec=sweep.lattice.spec,
+        frontier=tuple(sweep.materialize(i) for i in f_idx),
+        explored=tuple(sweep.materialize(i) for i in e_idx),
+        n_evaluated=int(valid.sum()))
+
+
+def _sweep_result(sweep: B.BatchedSweep) -> SearchResult:
+    """The full-sweep :class:`SearchResult`: ``frontier`` under the public
+    sweep semantics (feasible, falling back to all valid points when nothing
+    meets timing), ``explored`` the feasibility-blind frontier, and
+    ``n_evaluated`` the valid-point count."""
+    f_idx = sweep.frontier_indices()
+    e_idx = _extract_sweep_indices(sweep, np.flatnonzero(sweep.lattice.valid))
+    return SearchResult(
+        spec=sweep.lattice.spec,
+        frontier=tuple(sweep.materialize(i) for i in f_idx),
+        explored=tuple(sweep.materialize(i) for i in e_idx),
+        n_evaluated=int(sweep.lattice.valid.sum()))
+
+
+def _merge_slice_results(lattice: B.DesignLattice,
+                         records: Sequence[SearchResult]) -> SearchResult:
+    """Merge one record per axis value into the full-sweep result.
+
+    Soundness: a point on the full-lattice frontier is on its own slice's
+    frontier (dominance over a subset is implied by dominance over the set),
+    so the union of slice frontiers is a superset of the true frontier and
+    one pooled extraction recovers it.  Candidates are re-anchored at their
+    parent flat index (:meth:`repro.core.batched.DesignLattice.
+    index_of_design`) so duplicate collapse picks the same representatives a
+    cold full pass would (:func:`repro.core.pareto.merged_pareto_indices`).
+    The feasibility fallback composes across slices because slice records
+    keep the feasible/valid split explicit (see :func:`_slice_record`)."""
+    any_feasible = any(len(r.frontier) for r in records)
+
+    def pool(points_lists) -> tuple:
+        pts = [p for ps in points_lists for p in ps]
+        parent = [lattice.index_of_design(p.design) for p in pts]
+        keep = merged_pareto_indices(parent, _sweep_objectives(pts))
+        return tuple(pts[i] for i in keep)
+
+    return SearchResult(
+        spec=lattice.spec,
+        frontier=pool([r.frontier if any_feasible else r.explored
+                       for r in records]),
+        explored=pool([r.explored for r in records]),
+        n_evaluated=sum(int(r.n_evaluated) for r in records))
 
 
 _DEFAULT_SERVICE: SynthesisService | None = None

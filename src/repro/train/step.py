@@ -10,7 +10,6 @@ multi-pod mesh.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

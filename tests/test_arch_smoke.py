@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import applicable_shapes, get_config, list_archs, smoke_config
 from repro.models import cross_entropy_loss, get_model
-from repro.parallel.logical import split_logical, values_of
+from repro.parallel.logical import split_logical
 from repro.parallel.sharding import MESH_RULES
 
 ARCHS = list_archs()

@@ -1,0 +1,238 @@
+"""Axis-registry lattice properties and per-axis cache-key scoping.
+
+Property-tests (hypothesis; deterministic fallback shim offline) pin the
+mixed-radix contract of the registry-composed :class:`DesignLattice` —
+``index_of`` / ``coords_of`` round-trip, stride/dim consistency, trailing
+zero-padding, ``design_at`` / ``index_of_design`` inversion — over
+randomized axis configurations.  The key tests pin the scoped-invalidation
+semantics of :mod:`repro.service.keys`: a per-axis signature moves exactly
+when that axis's payload moves, and slice keys of unchanged values survive
+both a scoped tech recalibration and an axis growth.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import subcircuits as sc
+from repro.core.axes import (SLICEABLE_AXES, LatticeConfig, precision_plans,
+                             resolve_axes, seed_config)
+from repro.core.batched import DesignLattice
+from repro.core.macro import MacroSpec, calibrated_tech_for_reference
+from repro.service.keys import (axis_signatures, lattice_signature, slice_key,
+                                sweep_key)
+
+SPEC = MacroSpec()
+TECH = calibrated_tech_for_reference()
+
+MEMCELL_SUBSETS = [
+    (sc.MemCellKind.SRAM_6T,),
+    (sc.MemCellKind.SRAM_6T, sc.MemCellKind.DLATCH_8T),
+    (sc.MemCellKind.SRAM_6T, sc.MemCellKind.DLATCH_8T,
+     sc.MemCellKind.OAI_12T),
+]
+RHO_SUBSETS = [(1.0,), (1.0, 0.5), (1.0, 0.75, 0.5, 0.25, 0.0),
+               (1.0, 0.75, 0.5, 0.25, 0.0, 0.9)]
+PIPE_SUBSETS = [(0,), (0, 1), (0, 1, 2, 3)]
+APPROX_SUBSETS = [(), sc.APPROX_CELLS[:2], sc.APPROX_CELLS]
+
+
+def random_config(mem_i, rho_i, pipe_i, prec, apx_i) -> LatticeConfig:
+    return LatticeConfig(memcells=MEMCELL_SUBSETS[mem_i],
+                         rho_steps=RHO_SUBSETS[rho_i],
+                         pipe_steps=PIPE_SUBSETS[pipe_i],
+                         precision_modes=prec,
+                         approx_cells=APPROX_SUBSETS[apx_i])
+
+
+config_strategy = st.tuples(
+    st.integers(min_value=0, max_value=len(MEMCELL_SUBSETS) - 1),
+    st.integers(min_value=0, max_value=len(RHO_SUBSETS) - 1),
+    st.integers(min_value=0, max_value=len(PIPE_SUBSETS) - 1),
+    st.integers(min_value=0, max_value=4),
+    st.integers(min_value=0, max_value=len(APPROX_SUBSETS) - 1),
+)
+
+
+class TestLatticeProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(cfg_i=config_strategy, seed=st.integers(min_value=0,
+                                                   max_value=10**6))
+    def test_index_roundtrip_and_strides(self, cfg_i, seed):
+        lat = DesignLattice.enumerate(SPEC, config=random_config(*cfg_i))
+        # dims/strides: mixed-radix consistency, computed once at build
+        assert lat.dims == tuple(ax.size for ax in lat.axes)
+        assert lat.strides[-1] == 1
+        for k in range(len(lat.dims) - 1):
+            assert lat.strides[k] == lat.strides[k + 1] * lat.dims[k + 1]
+        assert len(lat) == int(np.prod(lat.dims))
+        rng = np.random.default_rng(seed)
+        for i in rng.integers(0, len(lat), size=16):
+            i = int(i)
+            coords = lat.coords_of(i)
+            assert int(lat.index_of(*coords)) == i
+            for k, c in enumerate(coords):
+                assert int(lat.coords[k][i]) == c
+
+    @settings(max_examples=25, deadline=None)
+    @given(cfg_i=config_strategy, seed=st.integers(min_value=0,
+                                                   max_value=10**6))
+    def test_trailing_coordinates_zero_pad(self, cfg_i, seed):
+        """Callers passing only leading coordinates address the trailing
+        axes' defaults (index 0) — the seed-call-site compatibility rule."""
+        lat = DesignLattice.enumerate(SPEC, config=random_config(*cfg_i))
+        rng = np.random.default_rng(seed)
+        for i in rng.integers(0, len(lat), size=8):
+            coords = lat.coords_of(int(i))
+            for cut in range(1, len(coords) + 1):
+                expect = sum(c * s for c, s in
+                             zip(coords[:cut], lat.strides[:cut]))
+                assert int(lat.index_of(*coords[:cut])) == expect
+        with pytest.raises(ValueError):
+            lat.index_of(*([0] * (len(lat.dims) + 1)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(cfg_i=config_strategy, seed=st.integers(min_value=0,
+                                                   max_value=10**6))
+    def test_design_index_inversion(self, cfg_i, seed):
+        lat = DesignLattice.enumerate(SPEC, config=random_config(*cfg_i))
+        rng = np.random.default_rng(seed)
+        for i in rng.integers(0, len(lat), size=8):
+            assert lat.index_of_design(lat.design_at(int(i))) == int(i)
+
+    def test_seed_lattice_shape_unchanged(self):
+        """The registry re-expression of the seed axes keeps the historical
+        dims/strides byte-for-byte (flat indices are cache currency)."""
+        lat = DesignLattice.enumerate(SPEC)
+        assert lat.dims == (3, 3, 5, 2, 2, 3, 4, 2, 2, 2)
+        assert lat.strides == (5760, 1920, 384, 192, 96, 32, 8, 4, 2, 1)
+        assert [ax.name for ax in lat.axes] == [
+            "memcell", "multmux", "rho", "reorder", "retimed", "split",
+            "pipe", "ofu_retime", "fuse_tree_sa", "fuse_sa_ofu"]
+
+    def test_optional_axes_append_after_seed(self):
+        cfg = LatticeConfig(precision_modes=3, approx_cells=sc.APPROX_CELLS)
+        lat = DesignLattice.enumerate(SPEC, config=cfg)
+        assert [ax.name for ax in lat.axes[-2:]] == ["precision",
+                                                     "approx_cell"]
+        seed = DesignLattice.enumerate(SPEC)
+        # seed point i maps to extended index i * (n_prec * n_apx)
+        scale = lat.dims[-1] * lat.dims[-2]
+        for i in (0, 17, 5759):
+            assert int(lat.index_of(*seed.coords_of(i))) == i * scale
+
+    def test_sublattice_parent_mapping(self):
+        cfg = LatticeConfig(precision_modes=2)
+        lat = DesignLattice.enumerate(SPEC, config=cfg)
+        sub, parent = lat.sublattice("rho", (1, 3))
+        assert len(sub) == len(lat) // lat.axis("rho").size * 2
+        rng = np.random.default_rng(0)
+        for j in rng.integers(0, len(sub), size=32):
+            j = int(j)
+            d_sub = sub.design_at(j)
+            d_par = lat.design_at(int(parent[j]))
+            assert dataclasses.asdict(d_sub) == dataclasses.asdict(d_par)
+
+    def test_precision_plans_prefix(self):
+        plans = precision_plans(SPEC, 4)
+        assert plans[0].ints == tuple(SPEC.int_precisions)
+        assert plans[0].fps == tuple(SPEC.fp_precisions)
+        assert precision_plans(SPEC, 2) == plans[:2]
+        with pytest.raises(ValueError):
+            precision_plans(SPEC, 5)
+
+    def test_resolved_axes_cover_config(self):
+        cfg = LatticeConfig(precision_modes=1, approx_cells=sc.APPROX_CELLS)
+        names = [a.name for a in resolve_axes(SPEC, cfg)]
+        assert "precision" in names and "approx_cell" in names
+        names0 = [a.name for a in resolve_axes(SPEC, seed_config())]
+        assert "precision" not in names0 and "approx_cell" not in names0
+
+
+class TestPerAxisSignatures:
+    """A per-axis signature moves exactly when that axis's payload moves."""
+
+    CFG = LatticeConfig()       # all memcells/multmuxes, seed steps
+
+    def _sigs(self, tech, cfg=None):
+        return axis_signatures(tech, cfg or self.CFG)
+
+    def _changed(self, tech2, cfg2=None) -> set:
+        base = self._sigs(TECH)
+        new = self._sigs(tech2, cfg2)
+        assert set(base) == set(new)
+        return {k for k in base if base[k] != new[k]}
+
+    def test_memcell_scoped_field_moves_only_memcell(self):
+        tech2 = dataclasses.replace(TECH, a_sram8t=TECH.a_sram8t * 1.01)
+        assert self._changed(tech2) == {"memcell"}
+
+    def test_multmux_scoped_field_moves_only_multmux(self):
+        tech2 = dataclasses.replace(TECH,
+                                    d_mult_oai22=TECH.d_mult_oai22 * 1.01)
+        assert self._changed(tech2) == {"multmux"}
+
+    def test_global_field_moves_only_global(self):
+        tech2 = dataclasses.replace(TECH, d_fa_sum=TECH.d_fa_sum * 1.01)
+        assert self._changed(tech2) == {"__global__"}
+
+    def test_shared_mux_field_is_global(self):
+        """d_mux2 feeds the OFU/align models for every design, not just the
+        TG_NOR multmux — it must invalidate globally."""
+        tech2 = dataclasses.replace(TECH, d_mux2=TECH.d_mux2 * 1.01)
+        assert self._changed(tech2) == {"__global__"}
+
+    def test_axis_growth_moves_only_that_axis(self):
+        cfg2 = dataclasses.replace(self.CFG,
+                                   rho_steps=self.CFG.rho_steps + (0.9,))
+        assert self._changed(TECH, cfg2) == {"rho"}
+
+    def test_lattice_signature_tracks_every_axis(self):
+        base = lattice_signature(TECH, config=self.CFG)
+        for tech2 in (dataclasses.replace(TECH, a_sram6t=1.5),
+                      dataclasses.replace(TECH, d_fa_sum=9.9)):
+            assert lattice_signature(tech2, config=self.CFG) != base
+        assert lattice_signature(TECH, config=self.CFG) == base
+
+    def test_slice_keys_survive_scoped_change(self):
+        """The incremental contract: a change scoped to one memcell leaves
+        the OTHER memcell values' slice keys intact — and only those."""
+        tech2 = dataclasses.replace(TECH, a_sram8t=TECH.a_sram8t * 1.03)
+        kinds = list(self.CFG.memcells)
+        changed_v = kinds.index(sc.MemCellKind.DLATCH_8T)
+        for v in range(len(kinds)):
+            k1 = slice_key(SPEC, TECH, "memcell", v, config=self.CFG)
+            k2 = slice_key(SPEC, tech2, "memcell", v, config=self.CFG)
+            assert (k1 != k2) == (v == changed_v)
+        # every other axis's slices cover the memcell axis -> all invalidated
+        for axis in SLICEABLE_AXES:
+            if axis == "memcell":
+                continue
+            ax_values = {"multmux": self.CFG.multmuxes,
+                         "rho": self.CFG.rho_steps,
+                         "pipe": self.CFG.pipe_steps}.get(axis)
+            if ax_values is None:
+                continue        # precision/approx absent in seed config
+            for v in range(len(ax_values)):
+                assert (slice_key(SPEC, TECH, axis, v, config=self.CFG)
+                        != slice_key(SPEC, tech2, axis, v, config=self.CFG))
+        assert sweep_key(SPEC, TECH, self.CFG) != sweep_key(SPEC, tech2,
+                                                            self.CFG)
+
+    def test_slice_keys_survive_axis_growth(self):
+        cfg2 = dataclasses.replace(self.CFG,
+                                   rho_steps=self.CFG.rho_steps + (0.9,))
+        for v in range(len(self.CFG.rho_steps)):
+            assert (slice_key(SPEC, TECH, "rho", v, config=self.CFG)
+                    == slice_key(SPEC, TECH, "rho", v, config=cfg2))
+        for v in range(len(self.CFG.memcells)):
+            assert (slice_key(SPEC, TECH, "memcell", v, config=self.CFG)
+                    != slice_key(SPEC, TECH, "memcell", v, config=cfg2))
+
+    def test_spec_is_part_of_slice_identity(self):
+        spec2 = dataclasses.replace(SPEC, f_mac_hz=SPEC.f_mac_hz * 2)
+        assert (slice_key(SPEC, TECH, "rho", 0, config=self.CFG)
+                != slice_key(spec2, TECH, "rho", 0, config=self.CFG))

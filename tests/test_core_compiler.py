@@ -8,17 +8,13 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import (CSADesign, FAMILY, GemmShape, MacroSpec,
-                        MemCellKind, MultMuxKind, SubcircuitLibrary,
-                        accelerator_report, at_voltage, build_netlist,
+from repro.core import (CSADesign, GemmShape, MacroSpec, MultMuxKind,
+                        SubcircuitLibrary, accelerator_report, build_netlist,
                         calibrated_tech_for_reference, characterize,
                         emit_verilog, mso_search, pareto_experiment_spec,
                         pareto_front, reference_chip_design,
                         reference_chip_ppa, reference_chip_spec, rollup,
-                        simulate, synthesize_one, timing_paths, tree_netlist,
-                        verify_tree)
-from repro.core import tech as tech_mod
-from repro.core.searcher import max_crit_rel
+                        simulate, synthesize_one, tree_netlist, verify_tree)
 
 
 @pytest.fixture(scope="module")

@@ -1,7 +1,6 @@
 """SDP floorplanner tests (paper §III-D): geometric invariants + DEF/SDP
 emission for searched designs."""
 
-import dataclasses
 
 import pytest
 

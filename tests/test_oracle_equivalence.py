@@ -415,3 +415,199 @@ class TestShardedParetoExtraction:
         out = json.loads(last)
         assert out["devices"] == 8
         assert out["jit"] and out["pmap"]
+
+
+# ---------------------------------------------------------------------------
+# Registry-backed lattice: seed + each optional axis, every path, 1/8 devices
+# ---------------------------------------------------------------------------
+
+
+def _axis_configs():
+    from repro.core import subcircuits as sc
+    from repro.core.axes import LatticeConfig
+    one = (sc.MemCellKind.SRAM_6T,)
+    return {
+        "seed": LatticeConfig(memcells=one),
+        "precision": LatticeConfig(memcells=one, precision_modes=3),
+        "approx_cell": LatticeConfig(memcells=one,
+                                     approx_cells=sc.APPROX_CELLS),
+        "precision+approx": LatticeConfig(memcells=one, precision_modes=2,
+                                          approx_cells=sc.APPROX_CELLS[:3]),
+    }
+
+
+class TestRegistryLatticeEquivalence:
+    """The tentpole's differential contract: the registry-composed lattice —
+    the seed axes AND each new optional axis (precision modes, approximate
+    adder-tree cells) — evaluates bit-identically through every execution
+    path, and every batched point agrees with the scalar per-design
+    roll-up."""
+
+    @pytest.fixture(scope="class")
+    def spec(self):
+        return MacroSpec()
+
+    @pytest.mark.parametrize("name", sorted(_axis_configs()))
+    def test_batched_points_match_scalar_rollup(self, name, spec, tech):
+        """The scalar-oracle gate for each registered axis: a sample of
+        lattice points (always including nonzero new-axis coordinates)
+        materializes to the same PPA the scalar hierarchy computes."""
+        from repro.core.batched import design_space_sweep
+        from repro.core.macro import rollup
+        cfg = _axis_configs()[name]
+        sweep = design_space_sweep(spec, tech, config=cfg)
+        lat = sweep.lattice
+        rng = np.random.default_rng(len(lat))
+        picks = {0, len(lat) - 1} | set(
+            int(i) for i in rng.integers(0, len(lat), size=24))
+        for i in sorted(picks):
+            got = sweep.materialize(i)
+            ref = rollup(lat.design_at(i), tech)
+            assert_ppa_equal(got, ref)
+
+    @pytest.mark.parametrize("name", sorted(_axis_configs()))
+    def test_multispec_and_sharded_match_batched(self, name, spec, tech):
+        """Objectives and frontier membership identical across the single-
+        spec batched sweep, the vmapped multi-spec pass and both sharded
+        placements on however many devices tier-1 sees."""
+        from repro.core.batched import design_space_sweep
+        from repro.core.multispec import design_space_sweep_many
+        from repro.core.shardspec import design_space_sweep_many_sharded
+        cfg = _axis_configs()[name]
+        ref = design_space_sweep(spec, tech, config=cfg)
+        runs = {"multispec": design_space_sweep_many(
+                    [spec], tech, memcells=cfg.memcells, config=cfg)[0]}
+        for mode in ("jit", "pmap"):
+            runs[f"sharded-{mode}"] = design_space_sweep_many_sharded(
+                [spec], tech, memcells=cfg.memcells, mode=mode,
+                config=cfg)[0]
+        ref_obj = ref.objectives()
+        for path, sweep in runs.items():
+            assert sweep.lattice.dims == ref.lattice.dims, path
+            assert np.array_equal(ref_obj, sweep.objectives()), path
+            assert sweep.frontier_indices() == ref.frontier_indices(), path
+
+    def test_extended_lattice_embeds_seed_block(self, spec, tech):
+        """New axes append AFTER the seed axes with the seed design at
+        coordinate 0 — so the seed sweep is a strided sub-block of the
+        extended sweep, bit for bit."""
+        import dataclasses
+        from repro.core.batched import design_space_sweep
+        cfgs = _axis_configs()
+        seed_sweep = design_space_sweep(spec, tech, config=cfgs["seed"])
+        ext_sweep = design_space_sweep(spec, tech, config=cfgs["precision"])
+        scale = ext_sweep.lattice.axis("precision").size
+        assert len(ext_sweep.lattice) == len(seed_sweep.lattice) * scale
+        assert np.array_equal(seed_sweep.objectives(),
+                              ext_sweep.objectives()[::scale])
+        for i in (0, 7, 31):
+            assert dataclasses.asdict(seed_sweep.lattice.design_at(i)) == \
+                dataclasses.asdict(ext_sweep.lattice.design_at(i * scale))
+
+    def test_registry_lattice_eight_fake_devices(self, tech):
+        """Subprocess drill: the extended (precision + approx-cell) lattice
+        on 8 fake host devices — both sharded placements bit-identical to
+        the vmapped pass."""
+        env = {**os.environ,
+               "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+               "PYTHONPATH": str(REPO / "src"),
+               "JAX_PLATFORMS": "cpu"}
+        code = textwrap.dedent("""
+            import json
+            import numpy as np
+            import jax
+            from repro.core import calibrated_tech_for_reference
+            from repro.core import subcircuits as sc
+            from repro.core.axes import LatticeConfig
+            from repro.core.macro import MacroSpec
+            from repro.core.multispec import design_space_sweep_many
+            from repro.core.shardspec import (design_space_sweep_many_sharded,
+                                              spec_variants)
+
+            tech = calibrated_tech_for_reference()
+            cfg = LatticeConfig(memcells=(sc.MemCellKind.SRAM_6T,),
+                                precision_modes=2,
+                                approx_cells=sc.APPROX_CELLS[:3])
+            specs = [MacroSpec()] + spec_variants(2, seed=11)
+            ref = design_space_sweep_many(specs, tech,
+                                          memcells=cfg.memcells, config=cfg)
+            verdict = {"devices": len(jax.devices())}
+            for mode in ("jit", "pmap"):
+                got = design_space_sweep_many_sharded(
+                    specs, tech, memcells=cfg.memcells, mode=mode,
+                    config=cfg)
+                verdict[mode] = all(
+                    np.array_equal(r.objectives(), g.objectives())
+                    and r.frontier_indices() == g.frontier_indices()
+                    for r, g in zip(ref, got))
+            print(json.dumps(verdict))
+        """)
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, env=env,
+                           timeout=600, cwd=REPO)
+        assert r.returncode == 0, f"drill failed:\n{r.stderr[-3000:]}"
+        last = [ln for ln in r.stdout.strip().splitlines()
+                if ln.startswith("{")][-1]
+        out = json.loads(last)
+        assert out["devices"] == 8
+        assert out["jit"] and out["pmap"]
+
+
+# ---------------------------------------------------------------------------
+# Incremental re-synthesis == cold full pass, bit for bit
+# ---------------------------------------------------------------------------
+
+
+class TestIncrementalSweepEquivalence:
+    """The service's incremental path — merging cached per-axis slice
+    frontiers with a re-evaluated invalidated sublattice — must be
+    indistinguishable from re-rolling the whole product."""
+
+    def _service(self, tmp_path, config):
+        from repro.service import FrontierCache, SynthesisService
+        return SynthesisService(cache=FrontierCache(store_dir=tmp_path),
+                                config=config)
+
+    def test_scoped_recalibration_merges_bit_identical(self, tmp_path, tech):
+        import dataclasses
+        from repro.core import subcircuits as sc
+        from repro.core.axes import LatticeConfig
+        from repro.service import SynthesisRequest
+        cfg = LatticeConfig(memcells=(sc.MemCellKind.SRAM_6T,
+                                      sc.MemCellKind.DLATCH_8T))
+        svc = self._service(tmp_path / "a", cfg)
+        spec = MacroSpec()
+        req = SynthesisRequest(spec=spec, tech=tech, kind="sweep")
+        svc.serve([req])                       # warm the slice caches
+        tech2 = dataclasses.replace(tech, a_sram8t=tech.a_sram8t * 1.05)
+        (warm,) = svc.serve([SynthesisRequest(spec=spec, tech=tech2,
+                                              kind="sweep")])
+        assert svc.stats.incremental_passes == 1
+        assert svc.stats.slice_hits >= 1
+        cold_svc = self._service(tmp_path / "b", cfg)
+        (cold,) = cold_svc.serve([SynthesisRequest(spec=spec, tech=tech2,
+                                                   kind="sweep")])
+        assert cold_svc.stats.incremental_passes == 0
+        assert dataclasses.asdict(warm.result) == \
+            dataclasses.asdict(cold.result)
+
+    def test_axis_growth_merges_bit_identical(self, tmp_path, tech):
+        import dataclasses
+        from repro.core import subcircuits as sc
+        from repro.core.axes import LatticeConfig
+        from repro.service import SynthesisRequest
+        cfg = LatticeConfig(memcells=(sc.MemCellKind.SRAM_6T,))
+        svc = self._service(tmp_path / "a", cfg)
+        spec = MacroSpec()
+        svc.serve([SynthesisRequest(spec=spec, tech=tech, kind="sweep")])
+        grown = dataclasses.replace(cfg, rho_steps=cfg.rho_steps + (0.9,))
+        (warm,) = svc.serve([SynthesisRequest(spec=spec, tech=tech,
+                                              kind="sweep", config=grown)])
+        assert svc.stats.incremental_passes == 1
+        assert svc.stats.slice_hits == len(cfg.rho_steps)
+        cold_svc = self._service(tmp_path / "b", cfg)
+        (cold,) = cold_svc.serve([SynthesisRequest(spec=spec, tech=tech,
+                                                   kind="sweep",
+                                                   config=grown)])
+        assert dataclasses.asdict(warm.result) == \
+            dataclasses.asdict(cold.result)

@@ -11,7 +11,7 @@ from hypothesis import strategies as st
 from repro.ckpt import CheckpointManager, FailureInjector, run_with_restarts
 from repro.data import DataConfig, SyntheticCorpus, host_sharded_loader
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, compress_int8,
-                         cosine_schedule, decompress_int8, ef_state_init,
+                         cosine_schedule, decompress_int8,
                          linear_warmup_cosine)
 from repro.quant import (block_fp_align, dequantize, fake_quant,
                          fp8_e4m3_quant, quantize_int)

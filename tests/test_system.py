@@ -3,15 +3,13 @@ spec -> search -> Pareto -> RTL -> functional-verification pipeline, and the
 compiler-to-framework bridge (macro design driving the DCIM-quantized model
 layer + the accelerator-level DSE)."""
 
-import dataclasses
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import (GemmShape, MacroSpec, SubcircuitLibrary,
+from repro.core import (GemmShape, SubcircuitLibrary,
                         accelerator_report, calibrated_tech_for_reference,
                         emit_verilog, mso_search, pareto_experiment_spec,
                         reference_chip_ppa, tree_netlist, verify_tree)

@@ -14,7 +14,7 @@ from repro.optim.adamw import adamw_init
 from repro.optim.schedules import constant_lr
 from repro.parallel.logical import split_logical
 from repro.parallel.sharding import MESH_RULES
-from repro.train.step import make_loss_fn, make_train_step
+from repro.train.step import make_train_step
 
 
 def _setup(arch="llama3.2-3b", seed=0):
