@@ -9,19 +9,25 @@ cold with its own engine pass; the service dedups against the content-
 addressed frontier cache, coalesces in-batch duplicates, and fuses the
 remaining misses into one engine pass per wave.
 
-The tracked row is ``service/coalesce_speedup`` (asserted present in CI's
-bench.json, required >= 2x by the acceptance bar) and carries
-``identical=`` — per-request results must stay bit-identical to the naive
-passes while the dispatch collapses."""
+The tracked rows are ``service/coalesce_speedup`` (asserted present in CI's
+bench.json, required >= 2x by the acceptance bar) and
+``service/shared_hit_rate`` (the fleet drill: a second service instance
+over one shared artifact registry must answer the whole stream from the
+shared tier — hit_rate 1.0, zero fused passes); both carry ``identical=`` —
+per-request results must stay bit-identical to the naive passes while the
+dispatch collapses."""
 
 from __future__ import annotations
+
+import tempfile
 
 import numpy as np
 
 from repro.core import calibrated_tech_for_reference
 from repro.core.multispec import mso_search_many
 from repro.core.shardspec import spec_variants
-from repro.service import SynthesisRequest, SynthesisService
+from repro.service import (ArtifactRegistry, FrontierCache,
+                           SynthesisRequest, SynthesisService)
 
 from .common import frontiers_identical, timed
 
@@ -64,6 +70,31 @@ def run() -> list[tuple]:
     identical = frontiers_identical(ref, got)
     s = svc.stats
 
+    # The fleet drill: host A fills a shared registry, host B (a separate
+    # service instance with its own empty LRU) serves the same stream
+    # entirely off the shared tier — zero engine passes.
+    with tempfile.TemporaryDirectory() as reg_root:
+        host_a = SynthesisService(
+            tech=tech, resolution=GRID_RESOLUTION,
+            cache=FrontierCache(registry=ArtifactRegistry(reg_root)))
+        for wave in waves:
+            host_a.serve([SynthesisRequest(spec=sp) for sp in wave])
+
+        def shared_warm():
+            host_b = SynthesisService(
+                tech=tech, resolution=GRID_RESOLUTION,
+                cache=FrontierCache(registry=ArtifactRegistry(reg_root)))
+            out = []
+            for wave in waves:
+                out.extend(r.result for r in host_b.serve(
+                    [SynthesisRequest(spec=sp) for sp in wave]))
+            return out, host_b
+
+        (warm, host_b), us_shared = timed(shared_warm, iters=1)
+    shared_identical = frontiers_identical(ref, warm)
+    cs = host_b.cache.stats
+    hit_rate = (cs.hits + cs.shared_hits) / max(cs.gets, 1)
+
     return [
         (f"service/synthesize_naive/{N_REQUESTS}req", us_naive,
          f"requests={N_REQUESTS};unique={N_UNIQUE}"),
@@ -73,4 +104,10 @@ def run() -> list[tuple]:
         ("service/coalesce_speedup", us_svc,
          f"speedup={us_naive / us_svc:.2f}x;identical={identical};"
          f"requests={N_REQUESTS};unique={N_UNIQUE};waves={len(waves)}"),
+        ("service/shared_hit_rate", us_shared,
+         f"hit_rate={hit_rate:.2f};shared_hits={cs.shared_hits};"
+         f"fused_passes={host_b.stats.fused_passes};"
+         f"fills={host_b.cache.registry.stats.fills};"
+         f"identical={shared_identical};"
+         f"speedup={us_naive / us_shared:.2f}x;requests={N_REQUESTS}"),
     ]

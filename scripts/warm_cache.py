@@ -1,0 +1,97 @@
+"""Pre-fill the frontier cache tiers ahead of a deployment.
+
+Synthesizes the ``scenario_specs()`` × preference-grid product (every
+scenario spec at every requested grid resolution, optionally plus the
+exhaustive sweep that leaves per-axis slice records behind) and publishes
+the frontiers into the given store — so the fleet's first ``launch.serve
+--dcim-select`` is warm on every host, with zero engine executions:
+
+    PYTHONPATH=src python scripts/warm_cache.py \\
+        --registry /mnt/shared/syndcim-registry --resolutions 3,4,5 --sweep
+
+Point ``--registry`` at shared storage to warm a whole fleet, or ``--store``
+at a local directory to warm one host (both may be given).  Re-running is
+cheap and idempotent: already-published addresses are cache hits and are
+skipped (content addressing), so a cron'd warm-up converges to a no-op.
+Claim files coordinate concurrent warmers — two hosts warming the same
+registry split the misses instead of duplicating them.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core.multispec import scenario_specs  # noqa: E402
+from repro.service import (ArtifactRegistry, FrontierCache,  # noqa: E402
+                           SynthesisRequest, SynthesisService)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--registry", default=None, metavar="PATH",
+                    help="fleet-shared artifact-registry root on shared "
+                         "storage (what launch.serve --dcim-registry reads)")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="local frontier-store directory (what launch.serve "
+                         "--dcim-cache reads)")
+    ap.add_argument("--resolutions", default="4", metavar="R1,R2,...",
+                    help="preference-grid resolutions to warm (default: 4, "
+                         "the serving default)")
+    ap.add_argument("--scenarios", default=None, metavar="NAME,...",
+                    help="scenario subset (default: all of "
+                         "scenario_specs())")
+    ap.add_argument("--sweep", action="store_true",
+                    help="also warm the exhaustive design-space sweep per "
+                         "scenario, leaving per-axis slice records so the "
+                         "fleet's next scoped recalibration re-synthesizes "
+                         "incrementally")
+    ap.add_argument("--mode", default="auto",
+                    help="execution mode for the fused miss passes "
+                         "(default: auto)")
+    args = ap.parse_args()
+
+    if args.registry is None and args.store is None:
+        ap.error("nothing to warm: pass --registry and/or --store")
+    resolutions = [int(r) for r in args.resolutions.split(",") if r.strip()]
+
+    specs = scenario_specs()
+    if args.scenarios is not None:
+        wanted = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+        unknown = sorted(set(wanted) - set(specs))
+        if unknown:
+            ap.error(f"unknown scenarios {unknown}; have {sorted(specs)}")
+        specs = {k: specs[k] for k in wanted}
+
+    registry = (None if args.registry is None
+                else ArtifactRegistry(args.registry))
+    service = SynthesisService(
+        mode=args.mode,
+        cache=FrontierCache(store_dir=args.store, registry=registry))
+
+    requests = [SynthesisRequest(spec=spec, resolution=r, tag=name)
+                for name, spec in specs.items() for r in resolutions]
+    if args.sweep:
+        requests += [SynthesisRequest(spec=spec, kind="sweep", tag=name)
+                     for name, spec in specs.items()]
+
+    t0 = time.time()
+    responses = service.serve(requests)
+    elapsed = time.time() - t0
+
+    filled = sum(1 for r in responses if r.served_from == "engine")
+    warm = len(responses) - filled
+    print(f"warm_cache: {len(responses)} addresses "
+          f"({len(specs)} scenarios x {len(resolutions)} resolutions"
+          + (" + sweeps" if args.sweep else "") + ") in {:.1f}s — "
+          .format(elapsed)
+          + f"{filled} synthesized, {warm} already warm")
+    for section, counters in service.telemetry().items():
+        line = " ".join(f"{k}={v}" for k, v in counters.items())
+        print(f"warm_cache: {section}: {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -73,6 +73,14 @@ def main() -> None:
                          "writes the synthesized scenario frontiers there, "
                          "every later launch serves them with zero engine "
                          "executions")
+    ap.add_argument("--dcim-registry", default=None, metavar="PATH",
+                    help="fleet-shared artifact-registry root (a directory "
+                         "on shared storage): frontiers synthesized by ANY "
+                         "host land there, so every other host's "
+                         "--dcim-select launch is warm; claim files keep "
+                         "concurrent cold launches from synthesizing the "
+                         "same spec twice (see scripts/warm_cache.py to "
+                         "pre-fill it ahead of a deployment)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -80,10 +88,14 @@ def main() -> None:
     if dcim.select:
         from ..core.dse import gemm_inventory
         from ..serve.select import apply_profile, select_macros
-        from ..service import FrontierCache, SynthesisService, get_service
-        if dcim.cache is not None:
+        from ..service import (ArtifactRegistry, FrontierCache,
+                               SynthesisService, get_service)
+        if dcim.cache is not None or dcim.registry is not None:
+            registry = (None if dcim.registry is None
+                        else ArtifactRegistry(dcim.registry))
             service = SynthesisService(
-                cache=FrontierCache(store_dir=dcim.cache))
+                cache=FrontierCache(store_dir=dcim.cache,
+                                    registry=registry))
         else:
             service = get_service()
         sel, _ = apply_profile(
@@ -98,10 +110,19 @@ def main() -> None:
         cs, ss = service.cache.stats, service.stats
         print(f"dcim: synthesis service "
               f"{'warm' if ss.misses == 0 else 'cold'} "
-              f"(hits={cs.hits + cs.disk_hits} misses={ss.misses} "
-              f"fused_passes={ss.fused_passes}"
+              f"(hits={cs.hits + cs.disk_hits + cs.shared_hits} "
+              f"misses={ss.misses} fused_passes={ss.fused_passes}"
               + (f", cache={dcim.cache}" if dcim.cache else "")
               + ")")
+        if dcim.registry is not None:
+            rt = service.cache.registry.telemetry()
+            print(f"dcim: shared registry {dcim.registry}: "
+                  f"{rt['entries']} entries, "
+                  f"hits={rt['hits']} misses={rt['misses']} "
+                  f"fills={rt['fills']} "
+                  f"claims={rt['claims_acquired']}"
+                  f"/{ss.claim_waits} waited"
+                  f"/{ss.claim_hits} served-by-peer")
         wi = sel.codesign.workloads.index(cfg.name)
         di = sel.assignment[cfg.name]
         est = sel.serving_for(cfg.name)

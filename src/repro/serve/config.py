@@ -13,6 +13,7 @@ the file**, so an ops-managed config can be locally overridden per launch:
      "pref": [0.2, 0.6, 0.2],
      "profile": "deploy/profile.json",
      "cache": "deploy/frontiers",
+     "registry": "/mnt/shared/syndcim-registry",
      "macros": 256}
 
 Unknown keys are rejected (a typo'd posture must fail loudly, not silently
@@ -36,13 +37,16 @@ class ServeConfig:
 
     ``select`` turns macro selection on; ``pref`` is the (wallclock,
     energy, area) preference vector; ``profile`` / ``cache`` are the
-    preference-profile and frontier-cache artifact paths; ``macros`` the
+    preference-profile and frontier-cache artifact paths; ``registry`` is
+    the fleet-shared artifact-registry root (shared storage — any spec
+    synthesized by any host is a cache hit on every host); ``macros`` the
     macro-array size assumed by co-design."""
 
     select: bool = False
     pref: Optional[tuple[float, float, float]] = None
     profile: Optional[str] = None
     cache: Optional[str] = None
+    registry: Optional[str] = None
     macros: int = 256
 
     def __post_init__(self):
@@ -96,6 +100,7 @@ def save_serve_config(path, config: ServeConfig) -> None:
         "pref": None if config.pref is None else list(config.pref),
         "profile": config.profile,
         "cache": config.cache,
+        "registry": config.registry,
         "macros": config.macros,
     }
     Path(path).write_text(json.dumps(payload, indent=2, sort_keys=True)
@@ -119,6 +124,8 @@ def serve_config_from_args(args) -> ServeConfig:
         overrides["profile"] = args.dcim_profile
     if getattr(args, "dcim_cache", None) is not None:
         overrides["cache"] = args.dcim_cache
+    if getattr(args, "dcim_registry", None) is not None:
+        overrides["registry"] = args.dcim_registry
     if getattr(args, "dcim_macros", None) is not None:
         overrides["macros"] = int(args.dcim_macros)
     return replace(cfg, **overrides) if overrides else cfg

@@ -1,16 +1,29 @@
-"""Lossless JSON encoding of synthesis results for the on-disk cache store.
+"""Lossless JSON encoding of synthesis results for the on-disk cache stores.
 
-The on-disk half of the :class:`repro.service.cache.FrontierCache` persists
-one :class:`repro.core.searcher.SearchResult` per artifact.  The encoding is
-bit-exact: every float field is written through Python's shortest-round-trip
-float repr (IEEE-754 doubles survive a dump/load cycle unchanged, including
-the ``inf`` TOPS/W of leakage-free corners), enums go through their value
-strings, and tuples/dicts keep their order — so a frontier loaded from disk
-satisfies the same bit-identity contract as an in-memory hit (pinned by
-``tests/test_service.py``).
+The on-disk tiers — the :class:`repro.service.cache.FrontierCache` local
+store and the :class:`repro.service.registry.ArtifactRegistry` shared store —
+persist one :class:`repro.core.searcher.SearchResult` per artifact.  The
+encoding is bit-exact: every float field is written through Python's
+shortest-round-trip float repr (IEEE-754 doubles survive a dump/load cycle
+unchanged, including the ``inf`` TOPS/W of leakage-free corners), enums go
+through their value strings, and tuples/dicts keep their order — so a
+frontier loaded from disk satisfies the same bit-identity contract as an
+in-memory hit (pinned by ``tests/test_service.py``).
+
+Besides the codec this module owns the artifact *file discipline* both tiers
+share: :func:`atomic_write_json` (unique temp name + fsync + atomic rename,
+safe for concurrent writers of the same key on shared storage),
+:func:`load_artifact` (read-and-validate, raising
+:class:`CacheArtifactError` on any defect), and :func:`quarantine_artifact`
+(rename a rejected artifact to ``<key>.corrupt`` at rejection time, so a
+poisoned file can never warm-start another process).
 """
 
 from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
 
 from ..core.csa import CSADesign, CSAReport
 from ..core.macro import MacroDesign, MacroPPA, MacroSpec, PathReport
@@ -20,6 +33,78 @@ from .keys import canonical_spec
 
 #: Schema tag of one persisted frontier artifact.
 ARTIFACT_SCHEMA = "syndcim-frontier-artifact/v1"
+
+
+class CacheArtifactError(ValueError):
+    """An on-disk artifact failed validation (bad JSON, wrong schema, key
+    mismatch, or a payload the decoder rejects)."""
+
+
+def atomic_write_json(path, payload: dict) -> Path:
+    """Write ``payload`` as JSON at ``path`` atomically, safely for
+    concurrent writers of the same path on shared storage.
+
+    The temp name is unique per writer (pid + random token, same directory,
+    so the final ``os.replace`` stays within one filesystem): two processes
+    racing on one key each complete their own temp file and the rename is
+    atomic, so readers see either a complete old artifact or a complete new
+    one — never a partial write, never another writer's clobbered temp.  The
+    file is fsynced before the rename so a crash cannot leave a renamed but
+    empty artifact behind."""
+    path = Path(path)
+    tmp = path.with_name(f".{path.name}.{os.getpid()}."
+                         f"{os.urandom(6).hex()}.tmp")
+    data = json.dumps(payload)
+    with open(tmp, "w") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def artifact_payload(key: str, result: SearchResult) -> dict:
+    """The persisted form of one frontier artifact."""
+    return {"schema": ARTIFACT_SCHEMA, "key": key,
+            "result": result_to_payload(result)}
+
+
+def load_artifact(path) -> tuple[str, SearchResult]:
+    """Read and validate one artifact; returns ``(key, result)``.
+    Raises :class:`CacheArtifactError` on any defect."""
+    try:
+        data = json.loads(Path(path).read_text())
+    except (OSError, ValueError) as e:
+        raise CacheArtifactError(f"{path}: unreadable artifact: {e}")
+    if not isinstance(data, dict) or data.get("schema") != ARTIFACT_SCHEMA:
+        raise CacheArtifactError(
+            f"{path}: not a frontier artifact (schema="
+            f"{data.get('schema') if isinstance(data, dict) else None!r}, "
+            f"expected {ARTIFACT_SCHEMA!r})")
+    key = data.get("key")
+    if not isinstance(key, str) or not key:
+        raise CacheArtifactError(f"{path}: missing content key")
+    try:
+        result = result_from_payload(data["result"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise CacheArtifactError(f"{path}: undecodable payload: {e}")
+    return key, result
+
+
+def quarantine_artifact(path) -> Path | None:
+    """Move a rejected artifact out of the serving path (``<key>.json`` →
+    ``<key>.corrupt``), so it can never be re-read as a cache entry and the
+    next put has a clean slot.  Racing quarantiners are benign: whoever
+    renames first wins, the loser's rename fails on the missing source and
+    is ignored.  Returns the quarantine path, or None if the artifact was
+    already gone."""
+    path = Path(path)
+    dest = path.with_suffix(".corrupt")
+    try:
+        os.replace(path, dest)
+    except OSError:
+        return None
+    return dest
 
 
 def spec_from_payload(p: dict) -> MacroSpec:

@@ -473,3 +473,12 @@ class ServiceFrontend:
         """Current admission-queue depth (the backpressure observable)."""
         with self._lock:
             return len(self._heap)
+
+    def telemetry(self) -> dict:
+        """The full serving-stack stats rollup: the service's request /
+        cache / shared-registry counters (:meth:`SynthesisService.
+        telemetry`) plus this front's admission-queue counters — the one
+        dict a fleet dashboard scrapes per host."""
+        out = self.service.telemetry()
+        out["frontend"] = self.stats.as_dict()
+        return out

@@ -181,6 +181,79 @@ def cache_key(spec: MacroSpec, tech: TechModel,
     })
 
 
+def key_scope(tech: TechModel, config: LatticeConfig | None = None,
+              axis: str | None = None,
+              value_index: int | None = None) -> dict[str, str]:
+    """The invalidation scope of one cache entry: every named content digest
+    the entry depends on, published alongside its shared-registry copy
+    (:meth:`repro.service.registry.ArtifactRegistry.publish`).
+
+    Without ``axis``, the scope of a full search/sweep entry: one
+    ``axis:<name>`` digest per sliceable axis, the ``__global__`` tech
+    digest, and the composite ``lattice`` signature (so eviction can also be
+    scoped by :func:`lattice_signature` alone).  With ``axis``/
+    ``value_index``, the scope of one per-axis-value *slice* entry: the
+    value's OWN payload digest (``value:<axis>``) plus every OTHER axis's
+    digest and the global digest — exactly the ingredients
+    :func:`slice_key` hashes, so an entry is evicted iff its key became
+    unreachable."""
+    config = _normalize_config(None, config)
+    sigs = axis_signatures(tech, config)
+
+    def named(a: str) -> str:
+        return a if a == "__global__" else f"axis:{a}"
+
+    if axis is None:
+        scope = {named(a): s for a, s in sigs.items()}
+        scope["lattice"] = _digest(sigs)       # == lattice_signature
+        return scope
+    payloads = axis_value_payloads(tech, config)
+    if axis not in payloads:
+        raise KeyError(f"axis {axis!r} is not sliceable under this config "
+                       f"(have {sorted(payloads)})")
+    values = payloads[axis]
+    if value_index is None or not 0 <= value_index < len(values):
+        raise IndexError(f"axis {axis!r} has {len(values)} values; "
+                         f"got index {value_index}")
+    scope = {named(a): s for a, s in sigs.items() if a != axis}
+    scope[f"value:{axis}"] = _digest(values[value_index])
+    return scope
+
+
+def stale_digests(old_tech: TechModel, new_tech: TechModel,
+                  config: LatticeConfig | None = None,
+                  new_config: LatticeConfig | None = None) -> set[str]:
+    """The content digests a recalibration (or axis-set change) retired:
+    every digest that appears in some entry's :func:`key_scope` under the
+    OLD (tech, config) but no longer holds under the new one.  Feeding this
+    set to :meth:`repro.service.registry.ArtifactRegistry.
+    invalidate_digests` evicts exactly the entries whose cache keys became
+    unreachable — a change scoped to one axis value keeps every other value's
+    slice entries warm, fleet-wide.
+
+    Digest classes compared: per-axis signatures (retired when the axis's
+    value-payload list changed), per-value payload digests (retired when the
+    value's own payload no longer appears anywhere on the axis — growth and
+    reordering keep surviving values' slice entries warm, since
+    :func:`slice_key` hashes payloads, not positions), the ``__global__``
+    tech digest, and the composite lattice signature."""
+    old_config = _normalize_config(None, config)
+    new_cfg = old_config if new_config is None else new_config
+    old_sigs = axis_signatures(old_tech, old_config)
+    new_sigs = axis_signatures(new_tech, new_cfg)
+    stale = {d for a, d in old_sigs.items() if new_sigs.get(a) != d}
+    if old_sigs != new_sigs:
+        stale.add(_digest(old_sigs))           # the old lattice_signature
+    old_payloads = axis_value_payloads(old_tech, old_config)
+    new_payloads = axis_value_payloads(new_tech, new_cfg)
+    for axis, values in old_payloads.items():
+        new_values = new_payloads.get(axis, [])
+        for payload in values:
+            if payload not in new_values:
+                stale.add(_digest(payload))
+    return stale
+
+
 def sweep_key(spec: MacroSpec, tech: TechModel,
               config: LatticeConfig | None = None,
               eps: float = PARETO_EPS) -> str:

@@ -59,7 +59,7 @@ from ..core.pareto import merged_pareto_indices, nondominated_mask_auto
 from ..core.searcher import SearchResult
 from ..core.tech import TechModel
 from .cache import FrontierCache
-from .keys import cache_key, slice_key, sweep_key
+from .keys import cache_key, key_scope, slice_key, sweep_key
 from .requests import SynthesisRequest, SynthesisResponse, as_requests
 
 #: Request-side execution modes: "auto" picks vmap for small fused batches
@@ -101,17 +101,24 @@ def resolve_service_mode(mode: str = "auto",
 @dataclass
 class ServiceStats:
     requests: int = 0
-    cache_hits: int = 0      # answered from the FrontierCache (mem or disk)
+    cache_hits: int = 0      # answered from the FrontierCache (any tier)
     coalesced: int = 0       # duplicates folded onto an in-batch miss
     misses: int = 0          # unique specs that reached the engine
     fused_passes: int = 0    # engine.execute calls this service made
     slice_hits: int = 0      # per-axis slice frontiers reused by sweeps
     incremental_passes: int = 0  # sweeps answered by slice merge, not re-roll
+    # The shared-registry claim protocol (zero without a registry):
+    claims_acquired: int = 0  # misses this service claimed and synthesized
+    claim_waits: int = 0      # misses another host was already synthesizing
+    claim_hits: int = 0       # ...of those, served by that host's publish
+    claim_timeouts: int = 0   # ...of those, synthesized here after the wait
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in
                 ("requests", "cache_hits", "coalesced", "misses",
-                 "fused_passes", "slice_hits", "incremental_passes")}
+                 "fused_passes", "slice_hits", "incremental_passes",
+                 "claims_acquired", "claim_waits", "claim_hits",
+                 "claim_timeouts")}
 
 
 def _deprecated(old: str) -> None:
@@ -132,6 +139,13 @@ class SynthesisService:
     (operands are packed per spec lane with that request's own tech).
     ``mode`` picks the execution strategy for fused miss passes (see
     :data:`SERVICE_MODES`); a request's ``mode`` overrides it per request.
+
+    With a registry-backed cache the service speaks the fleet claim
+    protocol: before synthesizing a registry miss it tries to claim the key
+    (:meth:`repro.service.registry.ArtifactRegistry.claim`); on a lost claim
+    it waits up to ``claim_wait_s`` seconds for the claiming host's publish
+    (served as a cache hit) before synthesizing anyway — a claim is an
+    optimization, never a correctness gate.
     """
 
     tech: TechModel | None = None
@@ -141,6 +155,7 @@ class SynthesisService:
     config: LatticeConfig | None = None
     cache: FrontierCache = field(default_factory=FrontierCache)
     stats: ServiceStats = field(default_factory=ServiceStats)
+    claim_wait_s: float = 30.0
 
     def __post_init__(self):
         if self.tech is None:
@@ -212,9 +227,14 @@ class SynthesisService:
         dups_of: dict[int, list[int]] = {}
         miss_by_mode: dict[str, list[int]] = {}
         sweep_misses: list[int] = []
+        claims: dict[str, object] = {}       # key -> held RegistryClaim
         for i, (r, k) in enumerate(zip(reqs, keys)):
             self.stats.requests += 1
             hit = self.cache.get(k)
+            if hit is None and first_for_key.get(k) is None:
+                hit, claim = self._claim_or_wait(k)
+                if claim is not None:
+                    claims[k] = claim
             if hit is not None:
                 self.stats.cache_hits += 1
                 out[i] = SynthesisResponse(request=r, result=hit,
@@ -234,7 +254,12 @@ class SynthesisService:
                 miss_by_mode.setdefault(eff[i][2], []).append(i)
 
         def finish(i: int, res: SearchResult) -> None:
-            self.cache.put(keys[i], res)
+            tech_i, _res_i, _mode_i, config_i = eff[i]
+            self.cache.put(keys[i], res,
+                           scope=key_scope(tech_i, config_i))
+            claim = claims.pop(keys[i], None)
+            if claim is not None:
+                claim.release()
             out[i] = SynthesisResponse(request=reqs[i], result=res,
                                        served_from="engine")
             if on_partial is not None:
@@ -256,6 +281,43 @@ class SynthesisService:
             self.stats.misses += 1
             tech, _res, _mode, config = eff[i]
             finish(i, self._serve_sweep(reqs[i].spec, tech, config))
+        return out
+
+    # -- the fleet claim protocol --------------------------------------------
+
+    def _claim_or_wait(self, key: str):
+        """One registry miss through the claim protocol.  Returns ``(hit,
+        claim)``: a served result if another host's claimed synthesis
+        published while we waited, else a held claim if this service won the
+        key (released by ``finish`` after the put), else ``(None, None)`` —
+        wait timed out or no registry, synthesize unsynchronized (safe:
+        content addressing + atomic rename make duplicate writers
+        harmless)."""
+        registry = self.cache.registry
+        if registry is None:
+            return None, None
+        claim = registry.claim(key)
+        if claim is not None:
+            self.stats.claims_acquired += 1
+            return None, claim
+        self.stats.claim_waits += 1
+        if registry.wait(key, timeout_s=self.claim_wait_s):
+            hit = self.cache.get(key)        # validated fetch + promotion
+            if hit is not None:
+                self.stats.claim_hits += 1
+                return hit, None
+        self.stats.claim_timeouts += 1
+        return None, None
+
+    def telemetry(self) -> dict:
+        """Fleet-facing stats rollup: this service's request counters, its
+        cache's per-tier counters, and — when fleet-shared — the registry
+        handle's hit/miss/fill/claim counters plus store size.  What
+        ``launch.serve`` and ``scripts/warm_cache.py`` print."""
+        out = {"service": self.stats.as_dict(),
+               "cache": self.cache.stats.as_dict()}
+        if self.cache.registry is not None:
+            out["registry"] = self.cache.registry.telemetry()
         return out
 
     # -- deprecated kwarg-tuple shims ----------------------------------------
@@ -352,7 +414,9 @@ class SynthesisService:
             for li, v in enumerate(missing):
                 rec = _slice_record(sweep, local == li)
                 fresh[v] = rec
-                self.cache.put(skeys[v], rec)
+                self.cache.put(skeys[v], rec,
+                               scope=key_scope(tech, config, axis=axis,
+                                               value_index=v))
         records = [cached[v] if v in cached else fresh[v]
                    for v in range(lattice.axis(axis).size)]
         return _merge_slice_results(lattice, records)
@@ -368,7 +432,9 @@ class SynthesisService:
             coord = sweep.lattice.coord(axis)
             for v in range(ax.size):
                 self.cache.put(slice_key(spec, tech, axis, v, config=config),
-                               _slice_record(sweep, coord == v))
+                               _slice_record(sweep, coord == v),
+                               scope=key_scope(tech, config, axis=axis,
+                                               value_index=v))
         return _sweep_result(sweep)
 
 

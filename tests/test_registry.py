@@ -1,0 +1,741 @@
+"""Differential + stress tests for the shared artifact-registry cache tier.
+
+The registry's contract is the FrontierCache contract stretched across a
+fleet: any frontier synthesized by any process is a validated, bit-identical
+hit in every other process sharing the store, concurrent writers of the same
+key are safe by construction (unique-temp atomic rename + content
+addressing), claim files elect exactly one synthesizing host per missing
+key, and a scoped tech recalibration evicts exactly the affected
+axis-value's entries fleet-wide while every other key stays warm.
+
+Process-level guarantees are drilled with real subprocess pools over one
+shared tmpdir store (same-key writer races, claim contention, the
+two-service acceptance drill); accounting invariants are property-tested
+(hypothesis; deterministic fallback shim offline).
+"""
+
+import dataclasses
+import functools
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+import threading
+import time
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import calibrated_tech_for_reference, engine
+from repro.core import subcircuits as sc
+from repro.core.axes import LatticeConfig, seed_config
+from repro.core.macro import MacroSpec
+from repro.core.multispec import mso_search_many
+from repro.core.shardspec import spec_variants
+from repro.service import (ArtifactRegistry, FrontierCache,
+                           SynthesisRequest, SynthesisService, key_scope,
+                           load_artifact, slice_key, stale_digests)
+from repro.service.artifacts import result_to_payload
+
+REPO = Path(__file__).resolve().parent.parent
+TECH = calibrated_tech_for_reference()
+
+
+@pytest.fixture()
+def execute_counter():
+    calls = []
+    engine.add_execute_hook(calls.append)
+    yield calls
+    engine.remove_execute_hook(calls.append)
+
+
+@functools.lru_cache(maxsize=1)
+def one_result():
+    """One real synthesized SearchResult, reused as the payload of every
+    accounting/stress test that only cares about file discipline."""
+    return mso_search_many(spec_variants(1, seed=97), None, TECH,
+                           resolution=3)[0]
+
+
+def assert_ppa_equal(a, b):
+    assert a.design.name() == b.design.name()
+    assert a.paths == b.paths
+    assert a.fmax_hz == b.fmax_hz
+    assert a.area_um2 == b.area_um2
+    assert a.area_breakdown == b.area_breakdown
+    assert a.e_cycle_fj == b.e_cycle_fj
+    assert a.latency_cycles == b.latency_cycles
+    assert a.meets_timing == b.meets_timing
+
+
+def assert_search_identical(got, oracle):
+    assert got.spec == oracle.spec
+    assert got.n_evaluated == oracle.n_evaluated
+    assert [p.design.name() for p in got.explored] == \
+           [p.design.name() for p in oracle.explored]
+    assert len(got.frontier) == len(oracle.frontier)
+    for x, y in zip(got.frontier, oracle.frontier):
+        assert_ppa_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# CAS-safe writers: unique temp names + atomic rename
+# ---------------------------------------------------------------------------
+
+
+class TestAtomicWriters:
+    def test_no_fixed_temp_name(self, tmp_path):
+        """The PR-5 bug: the temp file was the fixed name ``<key>.tmp``, so
+        two same-key writers on shared storage clobbered each other's
+        partial writes.  The temp name must now be unique per write."""
+        cache = FrontierCache(store_dir=tmp_path)
+        cache.save_artifact("k", one_result())
+        assert not (tmp_path / "k.tmp").exists()
+        assert not list(tmp_path.glob("*.tmp"))      # nothing left behind
+
+    def test_concurrent_same_key_writers_thread_hammer(self, tmp_path):
+        """N threads rewriting one key while a reader validates every
+        observation: with the fixed temp name this raced (missing temp on
+        replace, partial JSON); unique temps make every observed state a
+        complete artifact."""
+        cache = FrontierCache(store_dir=tmp_path)
+        res = one_result()
+        errors = []
+
+        def writer():
+            try:
+                for _ in range(25):
+                    cache.save_artifact("hot", res)
+            except Exception as e:             # pragma: no cover
+                errors.append(e)
+
+        stop = threading.Event()
+
+        def reader():
+            path = tmp_path / "hot.json"
+            try:
+                while not stop.is_set():
+                    if path.exists():
+                        key, _ = load_artifact(path)
+                        assert key == "hot"
+            except Exception as e:             # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer) for _ in range(4)]
+        rt = threading.Thread(target=reader)
+        rt.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stop.set()
+        rt.join()
+        assert not errors
+        assert not list(tmp_path.glob("*.tmp"))
+
+
+# ---------------------------------------------------------------------------
+# Quarantine at rejection time
+# ---------------------------------------------------------------------------
+
+
+class TestQuarantine:
+    def test_rejected_artifact_quarantined_not_left_in_place(self, tmp_path):
+        """The PR-5 healing gap: a rejected artifact was 'left for the next
+        put to overwrite', but a process that held the key in its LRU never
+        re-put, so the poison survived to warm-start the next process.  Now
+        the artifact is renamed to ``<key>.corrupt`` the moment validation
+        rejects it."""
+        cache = FrontierCache(store_dir=tmp_path)
+        cache.put("k", one_result())
+        path = cache.artifact_path("k")
+        path.write_text("not json {")
+
+        fresh = FrontierCache(store_dir=tmp_path)
+        assert fresh.get("k") is None
+        assert fresh.stats.corrupt == 1
+        assert not path.exists()                       # quarantined...
+        assert path.with_suffix(".corrupt").exists()   # ...not deleted
+
+        # ...so a third process sees a clean miss, not another rejection
+        third = FrontierCache(store_dir=tmp_path)
+        assert third.get("k") is None
+        assert third.stats.corrupt == 0
+
+    def test_registry_heals_poisoned_local_artifact(self, tmp_path):
+        """With a shared registry below, a corrupt local artifact falls
+        through to the fleet copy and is re-persisted locally — quarantine
+        plus promotion is self-healing."""
+        registry = ArtifactRegistry(tmp_path / "reg")
+        cache = FrontierCache(store_dir=tmp_path / "local",
+                              registry=registry)
+        res = one_result()
+        cache.put("k", res)
+        cache.artifact_path("k").write_text("garbage")
+
+        fresh = FrontierCache(store_dir=tmp_path / "local",
+                              registry=ArtifactRegistry(tmp_path / "reg"))
+        got = fresh.get("k")
+        assert got is not None
+        assert_search_identical(got, res)
+        assert fresh.stats.corrupt == 1
+        assert fresh.stats.shared_hits == 1
+        # the local artifact is healed in place
+        key, healed = load_artifact(fresh.artifact_path("k"))
+        assert key == "k"
+        assert_search_identical(healed, res)
+
+    def test_registry_quarantines_corrupt_shared_artifact(self, tmp_path):
+        registry = ArtifactRegistry(tmp_path)
+        registry.publish("k", one_result())
+        registry.object_path("k").write_text("]]]")
+        assert registry.fetch("k") is None
+        assert registry.stats.corrupt == 1
+        assert not registry.object_path("k").exists()
+        assert registry.object_path("k").with_suffix(".corrupt").exists()
+        # quarantined entries disappear from the key listing
+        assert registry.keys() == []
+
+
+# ---------------------------------------------------------------------------
+# CacheStats accounting invariant (property-tested)
+# ---------------------------------------------------------------------------
+
+
+class TestStatsAccounting:
+    @given(ops=st.lists(st.tuples(st.sampled_from(["get", "put", "corrupt"]),
+                                  st.integers(min_value=0, max_value=5)),
+                        max_size=40),
+           capacity=st.integers(min_value=1, max_value=3),
+           with_store=st.booleans(), with_registry=st.booleans())
+    @settings(max_examples=20, deadline=None)
+    def test_every_get_resolves_in_exactly_one_tier(self, ops, capacity,
+                                                    with_store,
+                                                    with_registry):
+        res = one_result()
+        with tempfile.TemporaryDirectory() as td:
+            td = Path(td)
+            cache = FrontierCache(
+                capacity=capacity,
+                store_dir=td / "store" if with_store else None,
+                registry=(ArtifactRegistry(td / "reg")
+                          if with_registry else None))
+            gets = 0
+            for op, ki in ops:
+                key = f"k{ki}"
+                if op == "put":
+                    cache.put(key, res)
+                elif op == "get":
+                    cache.get(key)
+                    gets += 1
+                elif op == "corrupt":
+                    path = cache.artifact_path(key)
+                    if path is not None and path.exists():
+                        path.write_text("junk")
+            s = cache.stats
+            assert s.gets == gets
+            assert s.gets == s.hits + s.disk_hits + s.shared_hits + s.misses
+            assert len(cache) <= capacity
+            if with_store:
+                # every eviction had a surviving local artifact
+                assert s.evictions_lost == 0
+            if not with_store and not with_registry:
+                # memory-only cache: no eviction can claim a disk survivor
+                assert s.evictions == 0
+
+    def test_disk_hit_at_capacity_one_counts_once(self, tmp_path):
+        """The capacity-1 edge: a disk hit promotes into a full LRU, which
+        immediately evicts the previous resident — the get must still count
+        exactly one disk hit and the eviction must count as disk-surviving,
+        with no phantom miss."""
+        res = one_result()
+        cache = FrontierCache(capacity=1, store_dir=tmp_path)
+        cache.put("a", res)
+        cache.put("b", res)              # evicts "a" from memory
+        assert cache.get("a") is not None   # disk hit, evicts "b"
+        s = cache.stats
+        assert (s.gets, s.hits, s.disk_hits, s.misses) == (1, 0, 1, 0)
+        assert s.evictions == 2 and s.evictions_lost == 0
+
+
+# ---------------------------------------------------------------------------
+# The registry protocol: publish/fetch, claims, wait
+# ---------------------------------------------------------------------------
+
+
+class TestRegistryProtocol:
+    def test_publish_fetch_round_trip_bit_identical(self, tmp_path):
+        registry = ArtifactRegistry(tmp_path)
+        res = one_result()
+        registry.publish("k", res, scope={"lattice": "d0"})
+        got = ArtifactRegistry(tmp_path).fetch("k")
+        assert_search_identical(got, res)
+        assert registry.scope_of("k") == {"lattice": "d0"}
+        assert registry.keys() == ["k"]
+
+    def test_fetch_missing_is_counted_miss(self, tmp_path):
+        registry = ArtifactRegistry(tmp_path)
+        assert registry.fetch("nope") is None
+        assert registry.stats.misses == 1
+
+    def test_republish_is_noop(self, tmp_path):
+        registry = ArtifactRegistry(tmp_path)
+        registry.publish("k", one_result())
+        registry.publish("k", one_result())
+        assert registry.stats.fills == 1
+        assert registry.stats.fill_noops == 1
+
+    def test_claim_single_winner_release_reclaim(self, tmp_path):
+        a = ArtifactRegistry(tmp_path)
+        b = ArtifactRegistry(tmp_path)
+        claim = a.claim("k")
+        assert claim is not None
+        assert b.claim("k") is None
+        assert b.stats.claims_lost == 1
+        claim.release()
+        assert a.stats.claims_released == 1
+        again = b.claim("k")
+        assert again is not None
+        again.release()
+
+    def test_stale_claim_broken_after_ttl(self, tmp_path):
+        holder = ArtifactRegistry(tmp_path, claim_ttl_s=0.05)
+        holder.claim("k")                    # never released (crashed host)
+        time.sleep(0.08)
+        taker = ArtifactRegistry(tmp_path, claim_ttl_s=0.05)
+        claim = taker.claim("k")
+        assert claim is not None
+        assert taker.stats.claims_broken == 1
+        claim.release()
+
+    def test_wait_sees_concurrent_publish(self, tmp_path):
+        registry = ArtifactRegistry(tmp_path)
+        t = threading.Timer(0.05, registry.publish, ("k", one_result()))
+        t.start()
+        try:
+            assert registry.wait("k", timeout_s=5.0)
+        finally:
+            t.join()
+        assert registry.wait("missing", timeout_s=0.05) is False
+
+    def test_invalidate_key_drops_artifact_and_meta(self, tmp_path):
+        registry = ArtifactRegistry(tmp_path)
+        registry.publish("k", one_result(), scope={"x": "d"})
+        assert registry.invalidate_key("k")
+        assert registry.keys() == []
+        assert registry.scope_of("k") is None
+        assert registry.stats.evictions == 1
+        assert not registry.invalidate_key("k")
+
+
+# ---------------------------------------------------------------------------
+# Three-tier lookup order + promotion
+# ---------------------------------------------------------------------------
+
+
+class TestThreeTierLookup:
+    def test_registry_only_cache_round_trip(self, tmp_path):
+        res = one_result()
+        a = FrontierCache(registry=ArtifactRegistry(tmp_path))
+        a.put("k", res)
+        b = FrontierCache(registry=ArtifactRegistry(tmp_path))
+        got = b.get("k")
+        assert_search_identical(got, res)
+        assert b.stats.shared_hits == 1
+        assert b.get("k") is got             # promoted into the LRU
+        assert b.stats.hits == 1
+
+    def test_local_disk_preferred_over_registry(self, tmp_path):
+        registry = ArtifactRegistry(tmp_path / "reg")
+        a = FrontierCache(store_dir=tmp_path / "local", registry=registry)
+        a.put("k", one_result())
+        b = FrontierCache(store_dir=tmp_path / "local",
+                          registry=ArtifactRegistry(tmp_path / "reg"))
+        assert b.get("k") is not None
+        assert b.stats.disk_hits == 1
+        assert b.registry.stats.hits == 0    # the shared tier never probed
+
+    def test_registry_hit_promoted_to_local_store(self, tmp_path):
+        seed = FrontierCache(registry=ArtifactRegistry(tmp_path / "reg"))
+        seed.put("k", one_result())
+        b = FrontierCache(store_dir=tmp_path / "local",
+                          registry=ArtifactRegistry(tmp_path / "reg"))
+        assert b.get("k") is not None
+        assert b.artifact_path("k").exists()
+        c = FrontierCache(store_dir=tmp_path / "local")   # no registry
+        assert c.get("k") is not None
+        assert c.stats.disk_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# The two-service fleet drill (in-process): zero engine executions, claims
+# ---------------------------------------------------------------------------
+
+
+class TestSharedServiceDrill:
+    def test_second_service_full_shared_hits_zero_executions(
+            self, tmp_path, execute_counter):
+        specs = spec_variants(3, seed=61)
+        reg_root = tmp_path / "registry"
+        first = SynthesisService(
+            tech=TECH, resolution=3,
+            cache=FrontierCache(store_dir=tmp_path / "host-a",
+                                registry=ArtifactRegistry(reg_root)))
+        cold = first.serve([SynthesisRequest(spec=s) for s in specs])
+        assert first.stats.claims_acquired == len(specs)
+        n_cold = len(execute_counter)
+        assert n_cold >= 1
+
+        second = SynthesisService(
+            tech=TECH, resolution=3,
+            cache=FrontierCache(store_dir=tmp_path / "host-b",
+                                registry=ArtifactRegistry(reg_root)))
+        warm = second.serve([SynthesisRequest(spec=s) for s in specs])
+        assert len(execute_counter) == n_cold   # zero engine executions
+        assert second.stats.fused_passes == 0
+        assert second.stats.misses == 0
+        assert second.cache.stats.shared_hits == len(specs)
+        for w, c in zip(warm, cold):
+            assert w.served_from == "cache"
+            assert_search_identical(w.result, c.result)
+
+    def test_telemetry_rollup_sections(self, tmp_path):
+        svc = SynthesisService(
+            tech=TECH, resolution=3,
+            cache=FrontierCache(registry=ArtifactRegistry(tmp_path)))
+        svc.serve([SynthesisRequest(spec=spec_variants(1, seed=67)[0])])
+        t = svc.telemetry()
+        assert set(t) == {"service", "cache", "registry"}
+        assert t["service"]["claims_acquired"] == 1
+        assert t["cache"]["shared_hits"] == 0
+        assert t["registry"]["fills"] == 1
+        assert t["registry"]["entries"] == 1
+
+    def test_claim_wait_serves_peer_publish(self, tmp_path):
+        """A service that loses the claim race waits for the winner's
+        publish and serves it as a cache hit — no duplicate synthesis."""
+        spec = spec_variants(1, seed=71)[0]
+        registry = ArtifactRegistry(tmp_path)
+        svc = SynthesisService(
+            tech=TECH, resolution=3, claim_wait_s=30.0,
+            cache=FrontierCache(registry=ArtifactRegistry(tmp_path)))
+        key = svc.key_for(SynthesisRequest(spec=spec))
+        peer_claim = registry.claim(key)       # a "peer host" holds the key
+        ref = mso_search_many([spec], None, TECH, resolution=3)[0]
+
+        def peer_publishes():
+            registry.publish(key, ref)
+            peer_claim.release()
+
+        t = threading.Timer(0.1, peer_publishes)
+        t.start()
+        try:
+            (resp,) = svc.serve([SynthesisRequest(spec=spec)])
+        finally:
+            t.join()
+        assert resp.served_from == "cache"
+        assert svc.stats.claim_waits == 1
+        assert svc.stats.claim_hits == 1
+        assert svc.stats.fused_passes == 0
+        assert_search_identical(resp.result, ref)
+
+    def test_claim_wait_timeout_synthesizes_anyway(self, tmp_path):
+        """A crashed claim holder costs at most the wait — the loser then
+        synthesizes itself; a claim is never a correctness gate."""
+        spec = spec_variants(1, seed=73)[0]
+        registry = ArtifactRegistry(tmp_path)
+        svc = SynthesisService(
+            tech=TECH, resolution=3, claim_wait_s=0.05,
+            cache=FrontierCache(registry=ArtifactRegistry(tmp_path)))
+        key = svc.key_for(SynthesisRequest(spec=spec))
+        registry.claim(key)                    # never released
+        (resp,) = svc.serve([SynthesisRequest(spec=spec)])
+        assert resp.served_from == "engine"
+        assert svc.stats.claim_waits == 1
+        assert svc.stats.claim_timeouts == 1
+        ref = mso_search_many([spec], None, TECH, resolution=3)[0]
+        assert_search_identical(resp.result, ref)
+
+
+# ---------------------------------------------------------------------------
+# Scoped fleet-wide invalidation
+# ---------------------------------------------------------------------------
+
+
+class TestScopedInvalidation:
+    CFG = LatticeConfig(memcells=(sc.MemCellKind.SRAM_6T,
+                                  sc.MemCellKind.DLATCH_8T))
+
+    def test_recalibration_evicts_exactly_the_stale_entries(self, tmp_path):
+        spec = MacroSpec()
+        reg_root = tmp_path / "registry"
+        svc = SynthesisService(
+            tech=TECH, config=self.CFG,
+            cache=FrontierCache(store_dir=tmp_path / "host-a",
+                                registry=ArtifactRegistry(reg_root)))
+        svc.serve([SynthesisRequest(spec=spec, tech=TECH, kind="sweep")])
+        registry = ArtifactRegistry(reg_root)
+        all_keys = set(registry.keys())
+        # sweep key + one slice record per value of every sliceable axis
+        n_slices = (len(self.CFG.memcells) + len(self.CFG.multmuxes)
+                    + len(self.CFG.rho_steps) + len(self.CFG.pipe_steps))
+        assert len(all_keys) == 1 + n_slices
+
+        # recalibrate a field scoped to DLATCH_8T only
+        bumped = dataclasses.replace(TECH, a_sram8t=TECH.a_sram8t * 1.05)
+        evicted = set(registry.invalidate_digests(
+            stale_digests(TECH, bumped, self.CFG)))
+        survivors = set(registry.keys())
+        assert evicted | survivors == all_keys and not (evicted & survivors)
+
+        # exactly the slices of unchanged memcell values stay warm — and
+        # their addresses are the SAME under the new tech, so they are
+        # immediately reusable
+        warm_6t = slice_key(spec, TECH, "memcell", 0, config=self.CFG)
+        assert survivors == {warm_6t}
+        assert slice_key(spec, bumped, "memcell", 0,
+                         config=self.CFG) == warm_6t
+        assert registry.stats.evictions == len(evicted)
+
+    def test_fleetwide_incremental_resweep_after_invalidation(self,
+                                                              tmp_path):
+        """The acceptance drill: host A sweeps, the fleet recalibrates a
+        memcell-scoped constant, host B re-sweeps under the new tech — it
+        reuses the surviving slice from the shared registry (incremental,
+        not cold) and its merged result is bit-identical to a cold run."""
+        spec = MacroSpec()
+        reg_root = tmp_path / "registry"
+        host_a = SynthesisService(
+            tech=TECH, config=self.CFG,
+            cache=FrontierCache(store_dir=tmp_path / "a",
+                                registry=ArtifactRegistry(reg_root)))
+        host_a.serve([SynthesisRequest(spec=spec, tech=TECH, kind="sweep")])
+
+        bumped = dataclasses.replace(TECH, a_sram8t=TECH.a_sram8t * 1.05)
+        registry = ArtifactRegistry(reg_root)
+        registry.invalidate_digests(stale_digests(TECH, bumped, self.CFG))
+
+        host_b = SynthesisService(
+            tech=bumped, config=self.CFG,
+            cache=FrontierCache(store_dir=tmp_path / "b",
+                                registry=ArtifactRegistry(reg_root)))
+        (warm,) = host_b.serve([SynthesisRequest(spec=spec, tech=bumped,
+                                                 kind="sweep")])
+        assert host_b.stats.incremental_passes == 1
+        assert host_b.stats.slice_hits == 1          # the surviving 6T slice
+        assert host_b.cache.stats.shared_hits >= 1   # ...came off the fleet
+
+        cold_svc = SynthesisService(
+            tech=bumped, config=self.CFG,
+            cache=FrontierCache(store_dir=tmp_path / "c"))
+        (cold,) = cold_svc.serve([SynthesisRequest(spec=spec, tech=bumped,
+                                                   kind="sweep")])
+        assert cold_svc.stats.incremental_passes == 0
+        assert dataclasses.asdict(warm.result) == \
+            dataclasses.asdict(cold.result)
+
+    def test_scope_records_published_for_search_and_slices(self, tmp_path):
+        svc = SynthesisService(
+            tech=TECH, resolution=3,
+            cache=FrontierCache(registry=ArtifactRegistry(tmp_path)))
+        req = SynthesisRequest(spec=spec_variants(1, seed=79)[0])
+        svc.serve([req])
+        registry = ArtifactRegistry(tmp_path)
+        (key,) = registry.keys()
+        assert key == svc.key_for(req)
+        scope = registry.scope_of(key)
+        assert scope == key_scope(TECH, seed_config(svc.memcells))
+        assert "lattice" in scope and "__global__" in scope
+
+
+# ---------------------------------------------------------------------------
+# Multi-process drills over one shared tmpdir store
+# ---------------------------------------------------------------------------
+
+
+def _run_workers(codes_and_args, timeout=600):
+    """Launch one subprocess per (code, argv) pair concurrently; returns the
+    completed processes after asserting every one exited 0."""
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    procs = [subprocess.Popen([sys.executable, "-c", code, *map(str, argv)],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True, env=env,
+                              cwd=REPO)
+             for code, argv in codes_and_args]
+    done = [p.communicate(timeout=timeout) for p in procs]
+    for p, (out, err) in zip(procs, done):
+        assert p.returncode == 0, f"worker failed:\n{err[-3000:]}"
+    return [out for out, _ in done]
+
+
+_WRITER_CODE = textwrap.dedent("""
+    import json, sys
+    from pathlib import Path
+    from repro.service import ArtifactRegistry, FrontierCache
+    from repro.service.artifacts import result_from_payload
+
+    payloads_path, store, reg_root, worker, iters = sys.argv[1:6]
+    payloads = json.loads(Path(payloads_path).read_text())
+    results = {k: result_from_payload(p) for k, p in payloads.items()}
+    cache = FrontierCache(store_dir=store,
+                          registry=ArtifactRegistry(reg_root))
+    order = sorted(results)
+    if int(worker) % 2:
+        order = order[::-1]        # interleave key orders across workers
+    for _ in range(int(iters)):
+        for k in order:
+            cache.put(k, results[k])
+    readback = FrontierCache(store_dir=store,
+                             registry=ArtifactRegistry(reg_root))
+    ok = all(readback.get(k) is not None for k in results)
+    print(json.dumps({"ok": ok, "corrupt": readback.stats.corrupt}))
+""")
+
+
+class TestMultiProcessStress:
+    N_WORKERS = 6
+    ITERS = 20
+
+    def test_concurrent_writers_same_and_different_keys(self, tmp_path):
+        """N subprocesses hammer one shared store (same keys AND disjoint
+        keys) while racing on the registry: every artifact reads back
+        valid, zero CacheArtifactErrors, no temp litter, and the frontiers
+        are bit-identical to the single-process originals."""
+        specs = spec_variants(2, seed=83)
+        results = mso_search_many(specs, None, TECH, resolution=3)
+        svc = SynthesisService(tech=TECH, resolution=3)
+        shared_keys = [svc.key_for(SynthesisRequest(spec=s)) for s in specs]
+        store, reg_root = tmp_path / "store", tmp_path / "registry"
+
+        workers = []
+        for w in range(self.N_WORKERS):
+            payloads = {k: result_to_payload(r)
+                        for k, r in zip(shared_keys, results)}
+            # every worker also owns one private key -> mixed contention
+            payloads[f"{shared_keys[0]}-w{w}"] = result_to_payload(
+                results[0])
+            ppath = tmp_path / f"payloads-{w}.json"
+            ppath.write_text(json.dumps(payloads))
+            workers.append((_WRITER_CODE,
+                            [ppath, store, reg_root, w, self.ITERS]))
+        outs = _run_workers(workers)
+        for out in outs:
+            status = json.loads(out.strip().splitlines()[-1])
+            assert status == {"ok": True, "corrupt": 0}
+
+        assert not list(store.glob("*.tmp"))
+        assert not list((reg_root / "objects").glob("*.tmp"))
+        assert not list(store.glob(".*.tmp"))
+        assert not list((reg_root / "objects").glob(".*.tmp"))
+
+        final = FrontierCache(store_dir=store,
+                              registry=ArtifactRegistry(reg_root))
+        for k, ref in zip(shared_keys, results):
+            got = final.get(k)
+            assert got is not None
+            assert_search_identical(got, ref)
+        for w in range(self.N_WORKERS):
+            assert final.get(f"{shared_keys[0]}-w{w}") is not None
+        assert final.stats.corrupt == 0
+        registry = ArtifactRegistry(reg_root)
+        assert len(registry.keys()) == len(shared_keys) + self.N_WORKERS
+
+
+_CLAIM_CODE = textwrap.dedent("""
+    import json, sys, time
+    from pathlib import Path
+    from repro.service import ArtifactRegistry
+
+    reg_root, gate_dir, worker = sys.argv[1:4]
+    registry = ArtifactRegistry(reg_root)
+    gate = Path(gate_dir)
+    (gate / f"ready-{worker}").touch()
+    while not (gate / "go").exists():
+        time.sleep(0.002)
+    claim = registry.claim("contended")
+    print(json.dumps({"acquired": claim is not None}))
+""")
+
+
+class TestClaimContention:
+    N_WORKERS = 8
+
+    def test_exactly_one_cross_process_claim_winner(self, tmp_path):
+        """All workers rendezvous on a gate file, then race O_EXCL claim
+        creation on one key: exactly one process may win."""
+        gate = tmp_path / "gate"
+        gate.mkdir()
+        env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+               "JAX_PLATFORMS": "cpu"}
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", _CLAIM_CODE,
+             str(tmp_path / "registry"), str(gate), str(w)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env, cwd=REPO) for w in range(self.N_WORKERS)]
+        deadline = time.monotonic() + 300
+        while (len(list(gate.glob("ready-*"))) < self.N_WORKERS
+               and time.monotonic() < deadline):
+            time.sleep(0.02)
+        assert len(list(gate.glob("ready-*"))) == self.N_WORKERS
+        (gate / "go").touch()
+        outs = []
+        for p in procs:
+            out, err = p.communicate(timeout=300)
+            assert p.returncode == 0, f"claimer failed:\n{err[-2000:]}"
+            outs.append(json.loads(out.strip().splitlines()[-1]))
+        winners = sum(1 for o in outs if o["acquired"])
+        assert winners == 1
+
+
+_SERVICE_CODE = textwrap.dedent("""
+    import json, sys
+    from repro.core import calibrated_tech_for_reference, engine
+    from repro.core.shardspec import spec_variants
+    from repro.service import (ArtifactRegistry, FrontierCache,
+                               SynthesisRequest, SynthesisService)
+    from repro.service.artifacts import result_to_payload
+
+    reg_root, local_store, out_path = sys.argv[1:4]
+    calls = []
+    engine.add_execute_hook(calls.append)
+    svc = SynthesisService(
+        tech=calibrated_tech_for_reference(), resolution=3,
+        cache=FrontierCache(store_dir=local_store,
+                            registry=ArtifactRegistry(reg_root)))
+    specs = spec_variants(3, seed=89)
+    responses = svc.serve([SynthesisRequest(spec=s) for s in specs])
+    json.dump({"executes": len(calls),
+               "service": svc.stats.as_dict(),
+               "cache": svc.cache.stats.as_dict(),
+               "results": [result_to_payload(r.result)
+                           for r in responses]}, open(out_path, "w"))
+""")
+
+
+class TestTwoProcessDrill:
+    def test_second_process_zero_executions_bit_identical(self, tmp_path):
+        """The acceptance drill, with real process isolation: service B (a
+        separate process, separate local store) answers every spec service
+        A synthesized with ZERO engine executions, bit-identical payloads,
+        purely off the shared registry."""
+        reg_root = tmp_path / "registry"
+        out_a, out_b = tmp_path / "a.json", tmp_path / "b.json"
+        (first,) = _run_workers(
+            [(_SERVICE_CODE, [reg_root, tmp_path / "host-a", out_a])])
+        (second,) = _run_workers(
+            [(_SERVICE_CODE, [reg_root, tmp_path / "host-b", out_b])])
+        a = json.loads(out_a.read_text())
+        b = json.loads(out_b.read_text())
+        assert a["executes"] >= 1
+        assert a["service"]["claims_acquired"] == 3
+        assert b["executes"] == 0
+        assert b["service"]["fused_passes"] == 0
+        assert b["service"]["misses"] == 0
+        assert b["cache"]["shared_hits"] == 3
+        # lossless payload equality == bit-identical frontiers
+        assert a["results"] == b["results"]
