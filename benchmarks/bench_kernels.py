@@ -1,28 +1,43 @@
 """Kernel microbenchmarks: XLA dispatch path wall-time on this host (CPU) +
-bit-exactness of the Pallas path (interpret mode) against the oracles.
+tracked exactness rows for every Pallas execution style (interpret mode)
+against the oracles, + an end-to-end autotune row.
 
 On TPU the same entry points dispatch to the compiled Pallas kernels; CPU
-numbers here are for harness regression tracking, not roofline claims."""
+numbers here are for harness regression tracking, not roofline claims.  The
+``identical=``/``max_err=`` metrics ARE contract rows: CI asserts them, so a
+pipelining or tiling change that breaks bit-exactness fails the smoke job,
+not just the (slower) test tier.  ``autotune/picked_nondefault`` proves the
+tuner end-to-end: on an M=64 shape the feasibility-pruned lattice excludes
+the default bm=128 block, so the winner is deterministically non-default,
+and the row also round-trips the winner through a scratch ArtifactRegistry.
+"""
 
 from __future__ import annotations
+
+import tempfile
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.csa_tree import csa_tree_pallas, csa_tree_ref
-from repro.kernels.dcim_mac import dcim_matmul, dcim_matmul_int_pallas
+from repro.kernels import autotune
+from repro.kernels.csa_tree import csa_tree_pallas, csa_tree_ref, csa_tree_sum
+from repro.kernels.dcim_mac import (dcim_matmul, dcim_matmul_int_pallas,
+                                    dcim_matmul_int_pipelined_pallas)
 from repro.kernels.dcim_mac import ref as mac_ref
-from repro.kernels.ssm_scan import ssm_scan_pallas, ssm_scan_ref
+from repro.kernels.ssm_scan import (ssm_scan_pallas, ssm_scan_pipelined_pallas,
+                                    ssm_scan_ref)
+from repro.kernels.tiles import DEFAULT_TILES
+from repro.service.registry import ArtifactRegistry
 
 from .common import timed
 
 RNG = np.random.default_rng(0)
 
 
-def run() -> list[tuple]:
+def _mac_rows() -> list[tuple]:
     rows = []
-    # dcim_mac XLA path
+    # XLA dispatch-path wall time (the off-TPU serving path).
     for m, k, n in ((256, 512, 512), (512, 2048, 2048)):
         a = jnp.asarray(RNG.integers(-128, 128, (m, k)), jnp.int8)
         w = jnp.asarray(RNG.integers(-128, 128, (k, n)), jnp.int8)
@@ -32,27 +47,80 @@ def run() -> list[tuple]:
         macs = m * k * n
         rows.append((f"kernel/dcim_mac/{m}x{k}x{n}", us,
                      f"gmacs_s={macs / us / 1e3:.2f}"))
-    # bit-exactness of the Pallas path
+    # Grid kernel vs the bit-serial DCIM oracle (the paper-faithful model).
     a = jnp.asarray(RNG.integers(-8, 8, (64, 128)), jnp.int8)
     w = jnp.asarray(RNG.integers(-8, 8, (128, 64)), jnp.int8)
     mxu = dcim_matmul_int_pallas(a, w, interpret=True)
     bits = mac_ref.dcim_matmul_bitserial_ref(a, w, 4, 4)
-    rows.append(("kernel/dcim_mac/bit_exact_vs_dcim", 0.0,
-                 f"equal={bool((np.asarray(mxu) == np.asarray(bits)).all())}"))
-    # csa_tree
+    rows.append(("kernel/dcim_mac/int_identical", 0.0,
+                 f"identical={bool((np.asarray(mxu) == np.asarray(bits)).all())}"))
+    # Multi-buffered DMA pipeline vs the XLA oracle on a ragged shape (pads
+    # every dim) at both tuned depths.
+    a = jnp.asarray(RNG.integers(-8, 8, (100, 300)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-8, 8, (300, 200)), jnp.int8)
+    want = np.asarray(mac_ref.dcim_matmul_int_ref(a, w))
+    same = all(
+        (np.asarray(dcim_matmul_int_pipelined_pallas(
+            a, w, depth=depth, interpret=True)) == want).all()
+        for depth in (2, 4))
+    rows.append(("kernel/dcim_mac/pipelined_identical", 0.0,
+                 f"identical={same};depths=2|4"))
+    return rows
+
+
+def _csa_rows() -> list[tuple]:
+    rows = []
     x = jnp.asarray(RNG.integers(-2**20, 2**20, (64, 512)), jnp.int32)
     out, us = timed(lambda: jax.block_until_ready(
         csa_tree_pallas(x, interpret=True)), iters=1)
-    rows.append(("kernel/csa_tree/64x512", us,
-                 f"exact={bool((np.asarray(out) == np.asarray(csa_tree_ref(x))).all())}"))
-    # ssm_scan
+    same = bool((np.asarray(out) == np.asarray(csa_tree_ref(x))).all())
+    rows.append(("kernel/csa_tree/identical", us, f"identical={same}"))
+    # Tiled-H variant above the whole-rows limit (H=600 > 512), reached
+    # through the public entry point's automatic routing.
+    x = jnp.asarray(RNG.integers(-2**20, 2**20, (600, 256)), jnp.int32)
+    out, us = timed(lambda: jax.block_until_ready(
+        csa_tree_sum(x, use_pallas=True, interpret=True)), iters=1)
+    same = bool((np.asarray(out) == np.asarray(csa_tree_ref(x))).all())
+    rows.append(("kernel/csa_tree/tiled_identical", us,
+                 f"identical={same};h=600"))
+    return rows
+
+
+def _ssm_rows() -> list[tuple]:
+    rows = []
     t, d = 1024, 256
     aa = jnp.asarray(RNG.uniform(0.8, 1.0, (t, d)), jnp.float32)
     bb = jnp.asarray(RNG.normal(size=(t, d)), jnp.float32)
     h0 = jnp.zeros((d,), jnp.float32)
     ref = jax.jit(lambda a, b, h: ssm_scan_ref(a, b, h))
     out, us = timed(lambda: jax.block_until_ready(ref(aa, bb, h0)), iters=3)
-    s_pl, _ = ssm_scan_pallas(aa, bb, h0, interpret=True)
-    err = float(jnp.abs(s_pl - out[0]).max())
-    rows.append((f"kernel/ssm_scan/{t}x{d}", us, f"pallas_max_err={err:.1e}"))
+    s_grid, _ = ssm_scan_pallas(aa, bb, h0, interpret=True)
+    err = float(jnp.abs(s_grid - out[0]).max())
+    rows.append((f"kernel/ssm_scan/{t}x{d}", us, f"max_err={err:.1e}"))
+    s_pipe, _ = ssm_scan_pipelined_pallas(aa, bb, h0, depth=2, interpret=True)
+    err = float(jnp.abs(s_pipe - out[0]).max())
+    rows.append(("kernel/ssm_scan/pipelined", 0.0, f"max_err={err:.1e}"))
     return rows
+
+
+def _autotune_row() -> tuple:
+    # M=64 prunes the default bm=128 from the lattice -> the winner is
+    # non-default by construction, independent of timing noise.
+    shape = (64, 128, 128)
+    with tempfile.TemporaryDirectory() as root:
+        reg = ArtifactRegistry(root)
+        res, us = timed(lambda: autotune.autotune(
+            "dcim_mac", shape, iters=1, registry=reg, memoize=False),
+            warmup=0, iters=1)
+        autotune.clear_memo()
+        got = autotune.lookup("dcim_mac", shape, registry=reg)
+        roundtrip = (got == res.winner
+                     and got != DEFAULT_TILES["dcim_mac"])
+    return ("autotune/picked_nondefault", us,
+            f"picked_nondefault={res.picked_nondefault};"
+            f"registry_roundtrip={roundtrip};"
+            f"winner_bm={res.winner.bm};candidates={len(res.candidates)}")
+
+
+def run() -> list[tuple]:
+    return _mac_rows() + _csa_rows() + _ssm_rows() + [_autotune_row()]

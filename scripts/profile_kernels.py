@@ -1,0 +1,106 @@
+"""Profile the DCIM-path Pallas kernels: DMA vs compute vs fused.
+
+Times the copy-only / compute-only / fused skeletons of each kernel
+(``repro.kernels.profile``) over a shape sweep, classifies each point
+bandwidth- vs compute-bound, and reports the roofline fraction (how much of
+the fused time the slower pipeline side accounts for — 1.0 means the cheap
+side is fully hidden):
+
+    PYTHONPATH=src python scripts/profile_kernels.py --kernel all
+    PYTHONPATH=src python scripts/profile_kernels.py \\
+        --kernel dcim_mac --shapes 512x512x512,1024x1024x1024 --iters 5
+    PYTHONPATH=src python scripts/profile_kernels.py --json profiles.json
+
+Off-TPU (this container) the kernels run in Pallas interpret mode:
+absolute numbers are meaningless there, but the tool exercises the full
+plumbing, which is what CI smoke-tests.  On a real TPU the same invocation
+produces actionable splits, and ``--json`` output can feed
+``repro.roofline.dcim.dcim_serving_bound(kernel_fraction=...)`` via
+``repro.kernels.profile.fraction_from_profiles``.
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.kernels.profile import fraction_from_profiles, profile_kernel  # noqa: E402
+from repro.kernels.tiles import KERNELS, TileConfig  # noqa: E402
+
+#: Default shape sweep per kernel (serving-ish sizes; trimmed in --smoke).
+DEFAULT_SHAPES = {
+    "dcim_mac": [(128, 512, 512), (512, 512, 512)],
+    "ssm_scan": [(1024, 256), (4096, 256)],
+    "csa_tree": [(256, 512), (1024, 512)],
+}
+
+SMOKE_SHAPES = {
+    "dcim_mac": [(32, 128, 128)],
+    "ssm_scan": [(128, 128)],
+    "csa_tree": [(600, 256)],
+}
+
+
+def parse_shapes(text: str) -> list[tuple[int, ...]]:
+    return [tuple(int(d) for d in s.split("x")) for s in text.split(",") if s]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--kernel", default="all",
+                    help=f"one of {', '.join(KERNELS)}, or 'all'")
+    ap.add_argument("--shapes", default=None, metavar="MxKxN,...",
+                    help="comma-separated 'x'-joined shapes (only with a "
+                         "single --kernel); default: a per-kernel sweep")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timing repetitions per skeleton (min taken)")
+    ap.add_argument("--depth", type=int, default=None,
+                    help="override the DMA pipeline buffer depth")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI: plumbing only)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the profiles as JSON")
+    args = ap.parse_args()
+
+    kernels = list(KERNELS) if args.kernel == "all" else [args.kernel]
+    for k in kernels:
+        if k not in KERNELS:
+            ap.error(f"unknown kernel {k!r}; have {', '.join(KERNELS)}")
+    if args.shapes and len(kernels) != 1:
+        ap.error("--shapes needs a single --kernel")
+
+    shape_table = SMOKE_SHAPES if args.smoke else DEFAULT_SHAPES
+    tc = TileConfig(depth=args.depth) if args.depth else None
+
+    profiles = []
+    hdr = (f"{'kernel':9s} {'shape':>18s} {'copy_us':>10s} {'compute_us':>11s} "
+           f"{'fused_us':>10s} {'bound':>9s} {'roofline':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for kernel in kernels:
+        shapes = (parse_shapes(args.shapes) if args.shapes
+                  else shape_table[kernel])
+        for shape in shapes:
+            p = profile_kernel(kernel, shape, tile_config=tc,
+                               iters=args.iters)
+            profiles.append(p)
+            mark = "" if p.compute_measured else "*"
+            print(f"{p.kernel:9s} {'x'.join(map(str, p.shape)):>18s} "
+                  f"{p.t_copy_us:10.1f} {p.t_compute_us:10.1f}{mark:1s} "
+                  f"{p.t_fused_us:10.1f} {p.bound:>9s} "
+                  f"{p.roofline_fraction:8.3f}")
+    print("-" * len(hdr))
+    print(f"aggregate roofline fraction (geomean): "
+          f"{fraction_from_profiles(profiles):.3f}"
+          f"   (* = compute derived as fused - copy)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([p.as_dict() for p in profiles], f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,10 @@ the frontiers into the given store — so the fleet's first ``launch.serve
         --registry /mnt/shared/syndcim-registry --resolutions 3,4,5 --sweep
 
 Point ``--registry`` at shared storage to warm a whole fleet, or ``--store``
-at a local directory to warm one host (both may be given).  Re-running is
+at a local directory to warm one host (both may be given).
+``--autotune-kernels`` additionally pre-fills the kernel tile-autotune
+artifacts (``repro.kernels.autotune``) into the registry, so serving hosts
+launching with ``tile_config="auto"`` never pay a tuning sweep.  Re-running is
 cheap and idempotent: already-published addresses are cache hits and are
 skipped (content addressing), so a cron'd warm-up converges to a no-op.
 Claim files coordinate concurrent warmers — two hosts warming the same
@@ -51,10 +54,20 @@ def main() -> None:
     ap.add_argument("--mode", default="auto",
                     help="execution mode for the fused miss passes "
                          "(default: auto)")
+    ap.add_argument("--autotune-kernels", default=None, metavar="SHAPES",
+                    help="also pre-fill kernel tile-autotune artifacts into "
+                         "--registry: comma-separated kernel:DxDx... entries "
+                         "(e.g. dcim_mac:512x512x512,ssm_scan:4096x256), or "
+                         "'default' for a stock serving sweep")
+    ap.add_argument("--autotune-iters", type=int, default=3,
+                    help="timing repetitions per tile candidate")
     args = ap.parse_args()
 
     if args.registry is None and args.store is None:
         ap.error("nothing to warm: pass --registry and/or --store")
+    if args.autotune_kernels and args.registry is None:
+        ap.error("--autotune-kernels persists through the shared registry; "
+                 "pass --registry")
     resolutions = [int(r) for r in args.resolutions.split(",") if r.strip()]
 
     specs = scenario_specs()
@@ -91,6 +104,34 @@ def main() -> None:
     for section, counters in service.telemetry().items():
         line = " ".join(f"{k}={v}" for k, v in counters.items())
         print(f"warm_cache: {section}: {line}")
+
+    if args.autotune_kernels:
+        from repro.kernels import autotune as kernel_autotune
+        if args.autotune_kernels == "default":
+            targets = [("dcim_mac", (128, 512, 512)),
+                       ("dcim_mac", (512, 512, 512)),
+                       ("ssm_scan", (1024, 256)),
+                       ("ssm_scan", (4096, 256)),
+                       ("csa_tree", (256, 512)),
+                       ("csa_tree", (1024, 512))]
+        else:
+            targets = []
+            for entry in args.autotune_kernels.split(","):
+                kernel, _, dims = entry.strip().partition(":")
+                targets.append((kernel, tuple(int(d)
+                                              for d in dims.split("x"))))
+        t0 = time.time()
+        for kernel, shape in targets:
+            res = kernel_autotune.autotune(kernel, shape,
+                                           iters=args.autotune_iters,
+                                           registry=registry)
+            print(f"warm_cache: autotune {kernel} "
+                  f"{'x'.join(map(str, shape))} -> {res.winner.as_dict()} "
+                  f"({res.time_us:.0f}us, "
+                  f"nondefault={res.picked_nondefault})")
+        print(f"warm_cache: {len(targets)} tile artifacts in "
+              f"{time.time() - t0:.1f}s — serving hosts resolve them via "
+              f"tile_config='auto'")
 
 
 if __name__ == "__main__":

@@ -4,23 +4,39 @@
               int matmul, int32 accumulate, fused dequant epilogue) with a
               faithful bit-serial DCIM oracle.
   csa_tree  — bit-exact executable model of the Fig. 4 mixed-CSA adder tree
-              (4-2 compressors as 5-3 carry-save adders) on the VPU.
+              (4-2 compressors as 5-3 carry-save adders) on the VPU, with a
+              tiled-H variant for operand stacks past the VMEM row budget.
   ssm_scan  — chunked diagonal linear recurrence (SSM / linear-attention
               decode primitive) with VMEM-carried state.
 
-Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-dispatch) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
-interpret mode against the oracles.
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec grid kernels plus a
+multi-buffered manual-DMA pipeline), ops.py (dispatch with ``tile_config``
+selection — explicit :class:`~repro.kernels.tiles.TileConfig`, the depth-2
+default, or ``"auto"`` for the persisted autotuner winner) and ref.py (the
+pure-jnp oracle); tests sweep shapes/dtypes in interpret mode against the
+oracles.  ``repro.kernels.profile`` times copy-only / compute-only / fused
+skeletons to classify kernels bandwidth- vs compute-bound;
+``repro.kernels.autotune`` sweeps the tile lattice through the repo's DSE
+Pareto machinery and persists winners in the artifact registry.
 """
 
-from .csa_tree import csa_tree_pallas, csa_tree_ref, csa_tree_sum
+from .csa_tree import (CSA_MAX_ROWS, csa_tree_pallas, csa_tree_ref,
+                       csa_tree_sum, csa_tree_tiled_pallas)
 from .dcim_mac import (dcim_matmul, dcim_matmul_int, dcim_matmul_int_pallas,
-                       dcim_matmul_pallas)
-from .ssm_scan import ssm_scan, ssm_scan_assoc_ref, ssm_scan_pallas, ssm_scan_ref
+                       dcim_matmul_int_pipelined_pallas, dcim_matmul_pallas,
+                       dcim_matmul_pipelined_pallas)
+from .ssm_scan import (ssm_scan, ssm_scan_assoc_ref, ssm_scan_pallas,
+                       ssm_scan_pipelined_pallas, ssm_scan_ref)
+from .tiles import DEFAULT_TILES, TileConfig, resolve_tile, shape_class, tile_space
 
 __all__ = [
-    "csa_tree_pallas", "csa_tree_ref", "csa_tree_sum",
+    "CSA_MAX_ROWS", "csa_tree_pallas", "csa_tree_ref", "csa_tree_sum",
+    "csa_tree_tiled_pallas",
     "dcim_matmul", "dcim_matmul_int", "dcim_matmul_int_pallas",
-    "dcim_matmul_pallas",
-    "ssm_scan", "ssm_scan_assoc_ref", "ssm_scan_pallas", "ssm_scan_ref",
+    "dcim_matmul_int_pipelined_pallas", "dcim_matmul_pallas",
+    "dcim_matmul_pipelined_pallas",
+    "ssm_scan", "ssm_scan_assoc_ref", "ssm_scan_pallas",
+    "ssm_scan_pipelined_pallas", "ssm_scan_ref",
+    "DEFAULT_TILES", "TileConfig", "resolve_tile", "shape_class",
+    "tile_space",
 ]

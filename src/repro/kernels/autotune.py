@@ -1,0 +1,253 @@
+"""Tile autotuning for the DCIM-path kernels via the repo's DSE machinery.
+
+The synthesis side of this repo picks subcircuits by sweeping a candidate
+lattice, scoring each candidate on multiple objectives, and keeping the
+Pareto frontier (:mod:`repro.core.dse`).  The kernel layer reuses exactly
+that idiom one level down: for one ``(kernel, shape)`` the tuner
+
+  1. enumerates the feasibility-pruned (block-shape, buffer-depth) lattice
+     from :func:`repro.kernels.tiles.tile_space`;
+  2. runs every candidate against the kernel's oracle (a mis-computing
+     candidate is disqualified, never timed);
+  3. times each survivor and scores it on ``(time_us, vmem_bytes)``;
+  4. extracts the frontier with :func:`repro.core.pareto.pareto_indices`
+     (the same single source of truth the synthesis sweeps use) and picks
+     the fastest frontier member as the winner.
+
+Winners persist through the shared :class:`repro.service.registry.
+ArtifactRegistry` as generic JSON payloads (schema
+:data:`TILE_SCHEMA`), content-addressed by ``(kernel, shape-class,
+backend digest)`` — a tuning done once on one host warms the fleet, and a
+jax upgrade or backend change silently re-tunes because the address moves.
+``lookup`` is the read path the kernels' ``tile_config="auto"`` mode calls:
+process memo, then registry, then the static default.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.pareto import pareto_indices
+from .tiles import DEFAULT_TILES, TileConfig, shape_class, tile_space
+
+#: Schema tag of one persisted tile-winner payload.
+TILE_SCHEMA = "syndcim-kernel-tile/v1"
+
+#: Exactness contract per kernel: int paths must match the oracle bit-for-
+#: bit; the f32 scan reorders the reduction per chunk shape, so it gets a
+#: tolerance.
+_MAX_ERR = {"dcim_mac": 0.0, "csa_tree": 0.0, "ssm_scan": 1e-3}
+
+
+def _digest(obj) -> str:
+    blob = json.dumps(obj, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def backend_digest() -> str:
+    """Content digest of the execution substrate a tuning is valid for."""
+    return _digest({"jax": jax.__version__,
+                    "backend": jax.default_backend()})
+
+
+def tile_key(kernel: str, shape: tuple[int, ...]) -> str:
+    """Registry address of one tuning: (kernel, shape-class, backend)."""
+    return _digest({"kind": "kernel-tile", "kernel": kernel,
+                    "shape_class": shape_class(kernel, tuple(shape)),
+                    "backend": backend_digest()})
+
+
+def _vmem_bytes(kernel: str, cfg: TileConfig) -> int:
+    """Planned VMEM working set of one candidate — the second objective
+    (same formulas :func:`repro.kernels.tiles.tile_space` prunes with)."""
+    if kernel == "dcim_mac":
+        return cfg.depth * (cfg.bm * cfg.bk + cfg.bk * cfg.bn) + 4 * cfg.bm * cfg.bn
+    if kernel == "ssm_scan":
+        return 4 * (3 * cfg.depth * cfg.bt * cfg.bd + cfg.bd)
+    return 4 * (cfg.bh * cfg.bn + cfg.bn)
+
+
+@dataclass
+class CandidateScore:
+    """One evaluated lattice point."""
+
+    config: TileConfig
+    time_us: float
+    vmem_bytes: int
+    max_err: float
+    ok: bool
+
+
+@dataclass
+class TuneResult:
+    """Outcome of one autotune sweep."""
+
+    kernel: str
+    shape: tuple[int, ...]
+    shape_class: str
+    winner: TileConfig
+    time_us: float
+    picked_nondefault: bool
+    candidates: list[CandidateScore] = field(default_factory=list)
+    frontier: list[int] = field(default_factory=list)
+    key: str = ""
+
+    def payload(self) -> dict:
+        """The registry artifact body (JSON-safe)."""
+        return {
+            "kernel": self.kernel,
+            "shape_class": self.shape_class,
+            "backend": backend_digest(),
+            "tile": self.winner.as_dict(),
+            "time_us": self.time_us,
+            "picked_nondefault": self.picked_nondefault,
+            "n_candidates": len(self.candidates),
+            "n_frontier": len(self.frontier),
+        }
+
+
+def _make_case(kernel: str, shape: tuple[int, ...], interpret: bool):
+    """Deterministic inputs, oracle output, and a per-config runner."""
+    rng = np.random.default_rng(0)
+    if kernel == "dcim_mac":
+        from .dcim_mac import dcim_matmul_int, ref
+        m, k, n = shape
+        a = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+        want = np.asarray(ref.dcim_matmul_int_ref(a, w), np.int64)
+
+        def run(cfg: TileConfig):
+            return dcim_matmul_int(a, w, use_pallas=True,
+                                   interpret=interpret, tile_config=cfg)
+    elif kernel == "ssm_scan":
+        from .ssm_scan import ssm_scan
+        from .ssm_scan.ref import ssm_scan_ref
+        t, d = shape
+        a = jnp.asarray(0.9 + 0.05 * rng.standard_normal((t, d)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+        h0 = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+        want = np.asarray(ssm_scan_ref(a, b, h0)[0], np.float64)
+
+        def run(cfg: TileConfig):
+            return ssm_scan(a, b, h0, use_pallas=True, interpret=interpret,
+                            tile_config=cfg)[0]
+    elif kernel == "csa_tree":
+        from .csa_tree import csa_tree_sum
+        from .csa_tree.ref import csa_tree_ref
+        h, n = shape
+        x = jnp.asarray(rng.integers(-1000, 1000, (h, n)), jnp.int32)
+        want = np.asarray(csa_tree_ref(x), np.int64)
+
+        def run(cfg: TileConfig):
+            return csa_tree_sum(x, use_pallas=True, interpret=interpret,
+                                tile_config=cfg)
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    return run, want
+
+
+def _time_us(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def autotune(kernel: str, shape: tuple[int, ...], *, iters: int = 3,
+             interpret: bool | None = None, registry=None,
+             memoize: bool = True) -> TuneResult:
+    """Sweep the tile lattice for ``(kernel, shape)`` and pick a winner.
+
+    ``interpret`` defaults to True off-TPU (where compiled Pallas is
+    unavailable; interpret-mode timings still rank launch-count and
+    working-set effects deterministically via the feasibility-pruned
+    lattice).  When ``registry`` is an :class:`~repro.service.registry.
+    ArtifactRegistry`, the winner is published under :func:`tile_key`."""
+    shape = tuple(int(d) for d in shape)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    run, want = _make_case(kernel, shape, interpret)
+    tol = _MAX_ERR[kernel]
+
+    scores: list[CandidateScore] = []
+    for cfg in tile_space(kernel, shape):
+        out = np.asarray(jax.block_until_ready(run(cfg)), np.float64)
+        err = float(np.max(np.abs(out - want))) if out.size else 0.0
+        ok = err <= tol
+        t_us = _time_us(lambda: run(cfg), iters) if ok else float("inf")
+        scores.append(CandidateScore(cfg, t_us, _vmem_bytes(kernel, cfg),
+                                     err, ok))
+    live = [i for i, s in enumerate(scores) if s.ok]
+    if not live:
+        raise RuntimeError(
+            f"autotune({kernel}, {shape}): every candidate failed the "
+            f"oracle check — kernel bug, not a tuning problem")
+
+    objs = [(scores[i].time_us, float(scores[i].vmem_bytes)) for i in live]
+    frontier = [live[j] for j in pareto_indices(objs)]
+    win_idx = min(frontier, key=lambda i: scores[i].time_us)
+    winner = scores[win_idx].config
+
+    default = DEFAULT_TILES[kernel]
+    result = TuneResult(
+        kernel=kernel, shape=shape,
+        shape_class=shape_class(kernel, shape),
+        winner=winner, time_us=scores[win_idx].time_us,
+        picked_nondefault=(winner != default),
+        candidates=scores, frontier=frontier,
+        key=tile_key(kernel, shape))
+    if registry is not None:
+        registry.publish_payload(result.key, result.payload(),
+                                 schema=TILE_SCHEMA)
+    if memoize:
+        _MEMO[result.key] = winner
+    return result
+
+
+# -- the read path ("auto" tile_config) --------------------------------------
+
+#: Process-wide memo: tile_key -> winning TileConfig.  Misses fall through
+#: to the configured registry, then to the static default.
+_MEMO: dict[str, TileConfig] = {}
+
+_REGISTRY = None
+
+
+def set_registry(registry) -> None:
+    """Install the process-default registry the ``"auto"`` path consults
+    (e.g. the warm-cache script's shared store).  None disables it."""
+    global _REGISTRY
+    _REGISTRY = registry
+
+
+def clear_memo() -> None:
+    _MEMO.clear()
+
+
+def lookup(kernel: str, shape: tuple[int, ...],
+           registry=None) -> TileConfig:
+    """The tile config ``tile_config="auto"`` resolves to: process memo →
+    registry payload → per-kernel default.  Never raises on a cold cache —
+    an untuned shape just runs the default posture."""
+    shape = tuple(int(d) for d in shape)
+    key = tile_key(kernel, shape)
+    hit = _MEMO.get(key)
+    if hit is not None:
+        return hit
+    reg = registry if registry is not None else _REGISTRY
+    if reg is not None:
+        payload = reg.fetch_payload(key, schema=TILE_SCHEMA)
+        if payload is not None and isinstance(payload.get("tile"), dict):
+            cfg = TileConfig.from_dict(payload["tile"])
+            _MEMO[key] = cfg
+            return cfg
+    return DEFAULT_TILES[kernel]

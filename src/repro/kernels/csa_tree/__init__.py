@@ -1,5 +1,6 @@
-from .kernel import csa_tree_pallas
+from .kernel import CSA_MAX_ROWS, csa_tree_pallas, csa_tree_tiled_pallas
 from .ops import csa_tree_sum
 from .ref import csa_tree_ref
 
-__all__ = ["csa_tree_pallas", "csa_tree_sum", "csa_tree_ref"]
+__all__ = ["CSA_MAX_ROWS", "csa_tree_pallas", "csa_tree_tiled_pallas",
+           "csa_tree_sum", "csa_tree_ref"]

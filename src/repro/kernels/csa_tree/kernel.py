@@ -9,8 +9,13 @@ at trace time from the row count, exactly like the netlist builder in
 structure.
 
 Layout: operands (H, N) int32 arrive as (H, bn) VMEM blocks (full row dim in
-VMEM — the adder tree is a column-local reduction, H <= 512 by construction);
-the grid tiles N.
+VMEM — the adder tree is a column-local reduction); the grid tiles N.  The
+whole-rows kernel guards its H <= ``CSA_MAX_ROWS`` VMEM residency assumption
+with an explicit ValueError; taller operand stacks go through
+``csa_tree_tiled_pallas``, which tiles H into (bh, bn) blocks along a
+sequential grid axis and accumulates tile sums in a VMEM scratch — int32
+addition wraps mod 2^32 either way, so the tiled result is bit-identical to
+the whole-rows kernel and to the ``sum(axis=0)`` oracle for any H.
 """
 
 from __future__ import annotations
@@ -20,6 +25,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: Row budget of the whole-rows kernel: H int32 rows of a bn-lane block must
+#: sit in VMEM at once, and the trace-time reduction schedule unrolls over
+#: them — 512 is the seed kernel's stated construction limit, now enforced.
+CSA_MAX_ROWS = 512
 
 
 def _fa(a, b, c):
@@ -58,8 +69,8 @@ def _reduce_level(lanes: list, rho_comp: bool) -> list:
     return nxt
 
 
-def _csa_kernel(x_ref, o_ref, *, h: int, use_compressors: bool):
-    lanes = [x_ref[i, :] for i in range(h)]
+def _reduce_lanes(lanes: list, use_compressors: bool):
+    """Run the full reduction schedule down to one lane (tree + final RCA)."""
     guard = 0
     while len(lanes) > 2 and guard < 64:
         guard += 1
@@ -71,15 +82,30 @@ def _csa_kernel(x_ref, o_ref, *, h: int, use_compressors: bool):
     total = lanes[0]
     for l in lanes[1:]:
         total = total + l                          # final RCA
-    o_ref[...] = total
+    return total
+
+
+def _csa_kernel(x_ref, o_ref, *, h: int, use_compressors: bool):
+    o_ref[...] = _reduce_lanes([x_ref[i, :] for i in range(h)],
+                               use_compressors)
 
 
 @functools.partial(jax.jit, static_argnames=("use_compressors", "bn",
                                              "interpret"))
 def csa_tree_pallas(operands: jnp.ndarray, *, use_compressors: bool = True,
                     bn: int = 256, interpret: bool = False) -> jnp.ndarray:
-    """Carry-save column reduction: (H, N) int32 -> (N,) int32."""
+    """Carry-save column reduction: (H, N) int32 -> (N,) int32.
+
+    Whole-rows layout — requires H <= ``CSA_MAX_ROWS``; taller stacks must
+    go through :func:`csa_tree_tiled_pallas` (``repro.kernels.csa_tree.
+    csa_tree_sum`` routes there automatically)."""
     h, n = operands.shape
+    if h > CSA_MAX_ROWS:
+        raise ValueError(
+            f"csa_tree_pallas keeps all H rows of a block in VMEM and "
+            f"unrolls the reduction schedule over them; H={h} exceeds the "
+            f"H<={CSA_MAX_ROWS} construction limit — use "
+            f"csa_tree_tiled_pallas (csa_tree_sum routes automatically)")
     rem = (-n) % bn
     x = jnp.pad(operands.astype(jnp.int32), ((0, 0), (0, rem)))
     np_ = x.shape[1]
@@ -89,6 +115,67 @@ def csa_tree_pallas(operands: jnp.ndarray, *, use_compressors: bool = True,
         in_specs=[pl.BlockSpec((h, bn), lambda j: (0, j))],
         out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
         out_shape=jax.ShapeDtypeStruct((np_,), jnp.int32),
+        interpret=interpret,
+    )(x)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Tiled-H variant: unbounded row count via sequential (bh, bn) tile waves
+# ---------------------------------------------------------------------------
+
+
+def _csa_tiled_kernel(x_ref, o_ref, acc_ref, *, bh: int, h_steps: int,
+                      use_compressors: bool, mode: str):
+    """One (bh, bn) tile per grid step, H innermost (sequential): reduce the
+    tile's rows through the CSA schedule, accumulate tile sums in VMEM.
+    int32 addition is associative mod 2^32, so the tiling is exact.
+
+    ``mode == "copy"`` (profiling skeleton) keeps the BlockSpec streaming but
+    skips the reduction tree — one row read per tile keeps the data
+    dependency alive.  There is no compute-only mode: BlockSpec pipelines
+    cannot disable their operand streaming, so the profiler derives the
+    compute share as fused minus copy."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if mode == "copy":
+        acc_ref[...] += x_ref[0, :]
+    else:
+        acc_ref[...] += _reduce_lanes([x_ref[i, :] for i in range(bh)],
+                                      use_compressors)
+
+    @pl.when(t == h_steps - 1)
+    def _out():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("use_compressors", "bh", "bn",
+                                             "interpret", "_mode"))
+def csa_tree_tiled_pallas(operands: jnp.ndarray, *,
+                          use_compressors: bool = True, bh: int = 128,
+                          bn: int = 256, interpret: bool = False,
+                          _mode: str = "fused") -> jnp.ndarray:
+    """Tiled-H carry-save column reduction: (H, N) int32 -> (N,) int32 for
+    ANY H.  H pads up to a bh multiple with zero rows (exact: zero lanes
+    compress away), N to a bn multiple; the grid walks N tiles x H tiles
+    with H sequential so the partial-sum scratch carries across tile waves."""
+    h, n = operands.shape
+    x = operands.astype(jnp.int32)
+    x = jnp.pad(x, ((0, (-h) % bh), (0, (-n) % bn)))
+    hp, np_ = x.shape
+    h_steps = hp // bh
+    out = pl.pallas_call(
+        functools.partial(_csa_tiled_kernel, bh=bh, h_steps=h_steps,
+                          use_compressors=use_compressors, mode=_mode),
+        grid=(np_ // bn, h_steps),
+        in_specs=[pl.BlockSpec((bh, bn), lambda j, t: (t, j))],
+        out_specs=pl.BlockSpec((bn,), lambda j, t: (j,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.int32)],
         interpret=interpret,
     )(x)
     return out[:n]

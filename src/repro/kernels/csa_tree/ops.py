@@ -2,24 +2,39 @@
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from .kernel import csa_tree_pallas
+from ..tiles import TileConfig, resolve_tile
+from .kernel import CSA_MAX_ROWS, csa_tree_pallas, csa_tree_tiled_pallas
 from .ref import csa_tree_ref
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "use_compressors",
-                                             "interpret"))
 def csa_tree_sum(operands: jnp.ndarray, *, use_pallas: bool | None = None,
-                 use_compressors: bool = True,
-                 interpret: bool = False) -> jnp.ndarray:
-    """(H, N) int32 -> (N,) int32 column sums via the Fig. 4 CSA structure."""
+                 use_compressors: bool = True, interpret: bool = False,
+                 tile_config: TileConfig | str | None = None) -> jnp.ndarray:
+    """(H, N) int32 -> (N,) int32 column sums via the Fig. 4 CSA structure.
+
+    H <= ``CSA_MAX_ROWS`` runs the whole-rows kernel; taller stacks route to
+    the tiled-H variant automatically (bit-identical — int32 addition wraps
+    mod 2^32 regardless of tiling)."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
+        h = operands.shape[0]
+        if tile_config == "auto":
+            from .. import autotune
+            tc = autotune.lookup("csa_tree", operands.shape)
+        else:
+            tc = resolve_tile("csa_tree", tile_config)
+        if h > CSA_MAX_ROWS or tile_config is not None:
+            return csa_tree_tiled_pallas(operands,
+                                         use_compressors=use_compressors,
+                                         bh=tc.bh, bn=tc.bn,
+                                         interpret=interpret)
         return csa_tree_pallas(operands, use_compressors=use_compressors,
-                               interpret=interpret)
-    return csa_tree_ref(operands)
+                               bn=tc.bn, interpret=interpret)
+    return _ref_sum(operands)
+
+
+_ref_sum = jax.jit(csa_tree_ref)

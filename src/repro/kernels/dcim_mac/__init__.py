@@ -1,6 +1,8 @@
 from .ops import dcim_matmul, dcim_matmul_int
-from .kernel import dcim_matmul_int_pallas, dcim_matmul_pallas
+from .kernel import (dcim_matmul_int_pallas, dcim_matmul_int_pipelined_pallas,
+                     dcim_matmul_pallas, dcim_matmul_pipelined_pallas)
 from . import ref
 
 __all__ = ["dcim_matmul", "dcim_matmul_int", "dcim_matmul_pallas",
-           "dcim_matmul_int_pallas", "ref"]
+           "dcim_matmul_int_pallas", "dcim_matmul_pipelined_pallas",
+           "dcim_matmul_int_pipelined_pallas", "ref"]

@@ -1,37 +1,54 @@
 """Public entry points for the DCIM MAC.
 
-``dcim_matmul`` dispatches between the Pallas TPU kernel and an XLA path:
+``dcim_matmul`` dispatches between the Pallas TPU kernels and an XLA path:
 
   * On TPU the Pallas kernel runs compiled (interpret=False).
   * On CPU (this container) the *framework* uses the XLA path for speed, and
-    tests exercise the Pallas kernel in interpret mode against the oracles.
+    tests exercise the Pallas kernels in interpret mode against the oracles.
 
 Both paths compute identical integers (asserted by tests), so the dispatch is
-purely a performance decision.
+purely a performance decision.  Within the Pallas path ``tile_config``
+selects the launch posture:
+
+  * ``None`` — the per-kernel default (:data:`repro.kernels.tiles.
+    DEFAULT_TILES`): 128-blocks, depth-2 manual DMA pipeline;
+  * a :class:`repro.kernels.tiles.TileConfig` — explicit blocks/depth
+    (``depth == 1`` selects the classic BlockSpec grid kernel, ``>= 2`` the
+    multi-buffered pipeline);
+  * ``"auto"`` — the autotuner's persisted winner for this shape class
+    (:func:`repro.kernels.autotune.lookup`), falling back to the default
+    when nothing has been tuned.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .kernel import dcim_matmul_int_pallas, dcim_matmul_pallas
+from ..tiles import TileConfig, resolve_tile
+from .kernel import (dcim_matmul_int_pallas, dcim_matmul_int_pipelined_pallas,
+                     dcim_matmul_pallas, dcim_matmul_pipelined_pallas)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("out_dtype", "use_pallas",
-                                             "interpret"))
+def _resolve(shape: tuple[int, ...],
+             tile_config: TileConfig | str | None) -> TileConfig:
+    if tile_config == "auto":
+        from .. import autotune
+        return autotune.lookup("dcim_mac", shape)
+    return resolve_tile("dcim_mac", tile_config)
+
+
 def dcim_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray,
                 a_scale: jnp.ndarray | float = 1.0,
                 w_scale: jnp.ndarray | float = 1.0,
                 *, out_dtype=jnp.float32, use_pallas: bool | None = None,
-                interpret: bool = False) -> jnp.ndarray:
+                interpret: bool = False,
+                tile_config: TileConfig | str | None = None) -> jnp.ndarray:
     """Quantized (M,K)x(K,N) matmul with fused dequant epilogue."""
     if use_pallas is None:
         use_pallas = _on_tpu()
@@ -39,18 +56,38 @@ def dcim_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray,
         m, n = a_q.shape[0], w_q.shape[1]
         asc = jnp.broadcast_to(jnp.asarray(a_scale, jnp.float32), (m,))
         wsc = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (n,))
-        return dcim_matmul_pallas(a_q, w_q, asc, wsc, out_dtype=out_dtype,
+        tc = _resolve((m, a_q.shape[1], n), tile_config)
+        if tc.depth >= 2:
+            return dcim_matmul_pipelined_pallas(
+                a_q, w_q, asc, wsc, bm=tc.bm, bn=tc.bn, bk=tc.bk,
+                depth=tc.depth, out_dtype=out_dtype, interpret=interpret)
+        return dcim_matmul_pallas(a_q, w_q, asc, wsc, bm=tc.bm, bn=tc.bn,
+                                  bk=tc.bk, out_dtype=out_dtype,
                                   interpret=interpret)
-    return ref.dcim_matmul_ref(a_q, w_q, a_scale, w_scale, out_dtype=out_dtype)
+    return _ref_matmul(a_q, w_q, jnp.asarray(a_scale, jnp.float32),
+                       jnp.asarray(w_scale, jnp.float32),
+                       out_dtype=out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def dcim_matmul_int(a_q: jnp.ndarray, w_q: jnp.ndarray,
                     *, use_pallas: bool | None = None,
-                    interpret: bool = False) -> jnp.ndarray:
+                    interpret: bool = False,
+                    tile_config: TileConfig | str | None = None
+                    ) -> jnp.ndarray:
     """Integer-accumulator variant: returns int32 (M,N)."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return dcim_matmul_int_pallas(a_q, w_q, interpret=interpret)
-    return ref.dcim_matmul_int_ref(a_q, w_q)
+        tc = _resolve((a_q.shape[0], a_q.shape[1], w_q.shape[1]),
+                      tile_config)
+        if tc.depth >= 2:
+            return dcim_matmul_int_pipelined_pallas(
+                a_q, w_q, bm=tc.bm, bn=tc.bn, bk=tc.bk, depth=tc.depth,
+                interpret=interpret)
+        return dcim_matmul_int_pallas(a_q, w_q, bm=tc.bm, bn=tc.bn,
+                                      bk=tc.bk, interpret=interpret)
+    return _ref_matmul_int(a_q, w_q)
+
+
+_ref_matmul = jax.jit(ref.dcim_matmul_ref, static_argnames=("out_dtype",))
+_ref_matmul_int = jax.jit(ref.dcim_matmul_int_ref)

@@ -1,0 +1,191 @@
+"""DMA-vs-compute profiling for the DCIM-path kernels.
+
+Multi-buffered pipelines only pay off when operand streaming of chunk t+1
+genuinely overlaps compute on chunk t — and tuning buffer depth only makes
+sense once you know which side of the pipeline is the bottleneck.  This
+harness answers that per ``(kernel, shape, tile)`` by timing three
+skeletons of the *same* kernel body (the ``_mode`` static argument of the
+pipelined kernels):
+
+  copy     DMA rotation runs, math is skipped (a one-element data
+           dependency into the output defeats DCE) → streaming time;
+  compute  DMA is skipped, the math runs on resident slot-0 buffers
+           → arithmetic time;
+  fused    the real kernel → what actually ships.
+
+Classification: a kernel is **bandwidth-bound** when the copy skeleton
+dominates (``t_copy >= t_compute``), compute-bound otherwise.  The
+``roofline_fraction`` is ``max(t_copy, t_compute) / t_fused`` — how close
+the fused pipeline comes to fully hiding the cheaper side under the more
+expensive one (1.0 = perfect overlap; 0.5 = no overlap at all for balanced
+sides).  ``repro.roofline.dcim`` accepts this fraction to derate its
+analytic serving bound with a measured pipeline efficiency.
+
+``csa_tree`` has no manual pipeline (BlockSpec streaming cannot be turned
+off), so its compute time is *derived* as ``max(fused - copy, 0)`` and
+flagged ``compute_measured=False``.
+
+Off-TPU the skeletons run in Pallas interpret mode: absolute times are
+meaningless there, but the plumbing (modes, shapes, report format) is
+identical, which is what CI exercises.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tiles import TileConfig, resolve_tile
+
+#: Mode tags understood by the pipelined kernels' ``_mode`` argument.
+MODES = ("copy", "compute", "fused")
+
+
+@dataclass
+class KernelProfile:
+    """Timing split of one (kernel, shape, tile) point."""
+
+    kernel: str
+    shape: tuple[int, ...]
+    tile: TileConfig
+    t_copy_us: float
+    t_compute_us: float
+    t_fused_us: float
+    bytes_moved: int          # analytic HBM traffic of one fused launch
+    flops: int                # analytic arithmetic of one fused launch
+    compute_measured: bool    # False when compute was derived (csa_tree)
+
+    @property
+    def bound(self) -> str:
+        return "bandwidth" if self.t_copy_us >= self.t_compute_us else "compute"
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Pipeline efficiency: the slower skeleton over the fused time
+        (1.0 = the cheap side is perfectly hidden)."""
+        if self.t_fused_us <= 0.0:
+            return 0.0
+        return min(1.0, max(self.t_copy_us, self.t_compute_us)
+                   / self.t_fused_us)
+
+    def as_dict(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "shape": list(self.shape),
+            "tile": self.tile.as_dict(),
+            "t_copy_us": self.t_copy_us,
+            "t_compute_us": self.t_compute_us,
+            "t_fused_us": self.t_fused_us,
+            "bytes_moved": self.bytes_moved,
+            "flops": self.flops,
+            "bound": self.bound,
+            "roofline_fraction": self.roofline_fraction,
+            "compute_measured": self.compute_measured,
+        }
+
+
+def _traffic(kernel: str, shape: tuple[int, ...]) -> tuple[int, int]:
+    """(bytes_moved, flops) of one fused launch, analytic."""
+    if kernel == "dcim_mac":
+        m, k, n = shape
+        return m * k + k * n + 4 * m * n, 2 * m * k * n
+    if kernel == "ssm_scan":
+        t, d = shape
+        # in: a, b; out: states (+ final).  Doubling scan: ~3 vector ops per
+        # level, log2(bt)~7 levels at the default chunk, plus the carry fix.
+        levels = 7
+        return 4 * (3 * t * d + d), t * d * (3 * levels + 2)
+    if kernel == "csa_tree":
+        h, n = shape
+        # ~5 bitwise ops per lane per reduced row (FA: 3 xor/and + or + shift)
+        return 4 * (h * n + n), 5 * h * n
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def _runner(kernel: str, shape: tuple[int, ...], tc: TileConfig,
+            interpret: bool):
+    """mode -> zero-arg callable running one launch."""
+    rng = np.random.default_rng(1)
+    if kernel == "dcim_mac":
+        from .dcim_mac.kernel import dcim_matmul_int_pipelined_pallas
+        m, k, n = shape
+        a = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+        depth = max(2, tc.depth)
+
+        def run(mode: str):
+            return dcim_matmul_int_pipelined_pallas(
+                a, w, bm=tc.bm, bn=tc.bn, bk=tc.bk, depth=depth,
+                interpret=interpret, _mode=mode)
+    elif kernel == "ssm_scan":
+        from .ssm_scan.kernel import ssm_scan_pipelined_pallas
+        t, d = shape
+        a = jnp.asarray(0.9 + 0.05 * rng.standard_normal((t, d)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+        h0 = jnp.zeros((d,), jnp.float32)
+        depth = max(2, tc.depth)
+
+        def run(mode: str):
+            return ssm_scan_pipelined_pallas(
+                a, b, h0, bt=tc.bt, bd=tc.bd, depth=depth,
+                interpret=interpret, _mode=mode)
+    elif kernel == "csa_tree":
+        from .csa_tree.kernel import csa_tree_tiled_pallas
+        h, n = shape
+        x = jnp.asarray(rng.integers(-1000, 1000, (h, n)), jnp.int32)
+
+        def run(mode: str):
+            return csa_tree_tiled_pallas(x, bh=tc.bh, bn=tc.bn,
+                                         interpret=interpret, _mode=mode)
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    return run
+
+
+def _time_us(fn, iters: int) -> float:
+    jax.block_until_ready(fn())          # compile + warm outside the clock
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def profile_kernel(kernel: str, shape: tuple[int, ...], *,
+                   tile_config: TileConfig | None = None, iters: int = 3,
+                   interpret: bool | None = None) -> KernelProfile:
+    """Time the copy / compute / fused skeletons of one kernel launch."""
+    shape = tuple(int(d) for d in shape)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tc = resolve_tile(kernel, tile_config)
+    run = _runner(kernel, shape, tc, interpret)
+
+    t_fused = _time_us(lambda: run("fused"), iters)
+    t_copy = _time_us(lambda: run("copy"), iters)
+    if kernel == "csa_tree":
+        t_compute, measured = max(t_fused - t_copy, 0.0), False
+    else:
+        t_compute, measured = _time_us(lambda: run("compute"), iters), True
+
+    nbytes, flops = _traffic(kernel, shape)
+    return KernelProfile(kernel=kernel, shape=shape, tile=tc,
+                         t_copy_us=t_copy, t_compute_us=t_compute,
+                         t_fused_us=t_fused, bytes_moved=nbytes,
+                         flops=flops, compute_measured=measured)
+
+
+def fraction_from_profiles(profiles) -> float:
+    """Aggregate roofline fraction for the serving-bound derate: the
+    geometric mean of per-kernel fractions (each in (0, 1]) — duck-typed so
+    :mod:`repro.roofline.dcim` need not import this module."""
+    fracs = [max(1e-6, float(p.roofline_fraction)) for p in profiles]
+    if not fracs:
+        return 1.0
+    return float(math.exp(sum(math.log(f) for f in fracs) / len(fracs)))

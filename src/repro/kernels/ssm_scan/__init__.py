@@ -1,5 +1,6 @@
-from .kernel import ssm_scan_pallas
+from .kernel import ssm_scan_pallas, ssm_scan_pipelined_pallas
 from .ops import ssm_scan
 from .ref import ssm_scan_assoc_ref, ssm_scan_ref
 
-__all__ = ["ssm_scan_pallas", "ssm_scan", "ssm_scan_assoc_ref", "ssm_scan_ref"]
+__all__ = ["ssm_scan_pallas", "ssm_scan_pipelined_pallas", "ssm_scan",
+           "ssm_scan_assoc_ref", "ssm_scan_ref"]

@@ -2,25 +2,40 @@
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from .kernel import ssm_scan_pallas
+from ..tiles import TileConfig, resolve_tile
+from .kernel import ssm_scan_pallas, ssm_scan_pipelined_pallas
 from .ref import ssm_scan_assoc_ref
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def ssm_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
-             *, use_pallas: bool | None = None, interpret: bool = False
+             *, use_pallas: bool | None = None, interpret: bool = False,
+             tile_config: TileConfig | str | None = None
              ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t.
 
     a, b: (T, D); h0: (D,).  Returns (states (T, D), final (D,)).
+    ``tile_config`` as in :func:`repro.kernels.dcim_mac.dcim_matmul`:
+    None = default depth-2 pipeline, ``depth == 1`` = the BlockSpec grid
+    kernel, "auto" = the autotuner's winner for this shape class.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
-        return ssm_scan_pallas(a, b, h0, interpret=interpret)
-    return ssm_scan_assoc_ref(a, b, h0)
+        if tile_config == "auto":
+            from .. import autotune
+            tc = autotune.lookup("ssm_scan", a.shape)
+        else:
+            tc = resolve_tile("ssm_scan", tile_config)
+        if tc.depth >= 2:
+            return ssm_scan_pipelined_pallas(a, b, h0, bt=tc.bt, bd=tc.bd,
+                                             depth=tc.depth,
+                                             interpret=interpret)
+        return ssm_scan_pallas(a, b, h0, bt=tc.bt, bd=tc.bd,
+                               interpret=interpret)
+    return _ref_scan(a, b, h0)
+
+
+_ref_scan = jax.jit(ssm_scan_assoc_ref)

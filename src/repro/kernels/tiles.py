@@ -1,0 +1,153 @@
+"""Tile/pipeline configuration shared by the three DCIM-path kernels.
+
+A :class:`TileConfig` names every tunable of one kernel launch — the block
+shape the grid is cut into and the DMA pipeline ``depth`` (how many VMEM
+buffer slots the manual ``make_async_copy`` pipeline rotates through).  The
+same object is the currency of the tile autotuner
+(:mod:`repro.kernels.autotune`): candidate configs are enumerated from the
+per-kernel :func:`tile_space`, timed, and the winner persisted under a
+``(kernel, shape-class, backend)`` content address.
+
+Field semantics per kernel (unused fields stay None):
+
+  dcim_mac   bm x bn output tile, bk K-chunk, depth-slot operand streaming
+  ssm_scan   bt T-chunk, bd D-tile (lanes), depth-slot (a, b) streaming
+  csa_tree   bh row tile (the tiled-H variant), bn lane tile
+
+``depth >= 2`` selects the manual multi-buffered DMA pipeline; ``depth == 1``
+selects the classic BlockSpec grid kernel (compiler-managed double
+buffering) — both compute identical bits, so the choice is purely a
+performance decision and the autotuner sweeps it like any other axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+#: VMEM working-set budget one kernel launch may plan for (bytes).  Real
+#: cores have ~16 MB; leave headroom for the compiler's own temporaries.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+#: Lane width of the VPU/MXU — the last block dim should stay a multiple.
+LANE = 128
+
+#: Sublane granularity floor (f32); int8 wants 32 but small interpret-mode
+#: shapes legitimately tune below it, so feasibility clamps, never rounds up.
+SUBLANE = 8
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """One kernel launch posture.  Hashable, so it can ride as a jit static
+    argument; ``None`` fields mean "not meaningful for this kernel"."""
+
+    bm: int | None = None
+    bn: int | None = None
+    bk: int | None = None
+    bt: int | None = None
+    bd: int | None = None
+    bh: int | None = None
+    depth: int = 2
+
+    def as_dict(self) -> dict[str, int]:
+        """Only the set fields, for artifact payloads and bench rows."""
+        out = {k: v for k, v in dataclasses.asdict(self).items()
+               if v is not None and k != "depth"}
+        out["depth"] = self.depth
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TileConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in fields})
+
+
+#: Per-kernel default launch posture (the seed kernels' historical blocks).
+DEFAULT_TILES: dict[str, TileConfig] = {
+    "dcim_mac": TileConfig(bm=128, bn=128, bk=128, depth=2),
+    "ssm_scan": TileConfig(bt=128, bd=128, depth=2),
+    "csa_tree": TileConfig(bh=128, bn=256, depth=1),
+}
+
+KERNELS = tuple(DEFAULT_TILES)
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def shape_class(kernel: str, shape: tuple[int, ...]) -> str:
+    """Bucket a concrete shape so one tuning generalizes: every dim rounds
+    up to the next power of two (decode M=1..128 share a class, long-context
+    T=400k..524k share a class)."""
+    def pow2(x: int) -> int:
+        p = 1
+        while p < x:
+            p *= 2
+        return p
+    return f"{kernel}:" + "x".join(str(pow2(max(1, int(d)))) for d in shape)
+
+
+def _fits_vmem(nbytes: int) -> bool:
+    return nbytes <= VMEM_BUDGET_BYTES
+
+
+def _clamp(cands: tuple[int, ...], dim: int, align: int) -> list[int]:
+    """Feasible tile sizes for one dimension: a tile larger than the
+    dimension's aligned extent only streams padding, so it is pruned (this
+    is what makes the tuner's non-default picks deterministic on shapes
+    smaller than the default block)."""
+    ceil = max(align, round_up(dim, align))
+    keep = sorted({min(c, ceil) for c in cands})
+    return [c for c in keep if c <= ceil]
+
+
+def tile_space(kernel: str, shape: tuple[int, ...]) -> list[TileConfig]:
+    """The candidate (block-shape, buffer-depth) lattice for one kernel on
+    one concrete shape — feasibility-pruned (no tile past the padded extent,
+    no working set past the VMEM budget), default-first when the default
+    survives pruning."""
+    depths = (1, 2, 4)
+    out: list[TileConfig] = []
+    if kernel == "dcim_mac":
+        m, k, n = shape
+        for bm in _clamp((32, 64, 128, 256), m, SUBLANE):
+            for bn in _clamp((128, 256), n, LANE):
+                for bk in _clamp((128, 256, 512), k, LANE):
+                    for depth in depths:
+                        work = depth * (bm * bk + bk * bn) + 4 * bm * bn
+                        if _fits_vmem(work):
+                            out.append(TileConfig(bm=bm, bn=bn, bk=bk,
+                                                  depth=depth))
+    elif kernel == "ssm_scan":
+        t, d = shape
+        for bt in _clamp((32, 64, 128, 256), t, SUBLANE):
+            for bd in _clamp((128, 256), d, LANE):
+                for depth in depths:
+                    work = 4 * (3 * depth * bt * bd + bd)
+                    if _fits_vmem(work):
+                        out.append(TileConfig(bt=bt, bd=bd, depth=depth))
+    elif kernel == "csa_tree":
+        h, n = shape
+        for bh in _clamp((32, 64, 128, 256), h, SUBLANE):
+            for bn in _clamp((128, 256, 512), n, LANE):
+                if _fits_vmem(4 * (bh * bn + bn)):
+                    out.append(TileConfig(bh=bh, bn=bn, depth=1))
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}; have {KERNELS}")
+    default = DEFAULT_TILES[kernel]
+    if default in out:
+        out.remove(default)
+        out.insert(0, default)
+    return out
+
+
+def resolve_tile(kernel: str, tile_config: "TileConfig | None") -> TileConfig:
+    """Fill unset fields of an explicit config from the kernel default."""
+    default = DEFAULT_TILES[kernel]
+    if tile_config is None:
+        return default
+    merged = {k: (v if v is not None else getattr(default, k))
+              for k, v in dataclasses.asdict(tile_config).items()}
+    return TileConfig(**merged)

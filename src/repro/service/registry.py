@@ -202,6 +202,50 @@ class ArtifactRegistry:
                                      "scope": dict(scope)})
         return path
 
+    # -- generic JSON payloads (non-frontier artifacts) -----------------------
+
+    def publish_payload(self, key: str, payload: dict, *, schema: str,
+                        scope: dict[str, str] | None = None) -> Path:
+        """Publish an arbitrary JSON payload under ``key`` with an explicit
+        ``schema`` tag — the registry's store/claim/invalidation machinery
+        for artifacts that are not frontier :class:`SearchResult`\\ s (e.g.
+        the kernel autotuner's tile winners).  Same no-op-if-present and
+        scope-record semantics as :meth:`publish`."""
+        path = self.object_path(key)
+        if path.exists():
+            self.stats.fill_noops += 1
+        else:
+            atomic_write_json(path, {"schema": schema, "key": key,
+                                     "payload": payload})
+            self.stats.fills += 1
+        meta = self.meta_path(key)
+        if scope is not None and not meta.exists():
+            atomic_write_json(meta, {"schema": META_SCHEMA, "key": key,
+                                     "scope": dict(scope)})
+        return path
+
+    def fetch_payload(self, key: str, *, schema: str) -> dict | None:
+        """The validated payload stored under ``key``, or None.  An artifact
+        with the wrong schema tag, a mismatched key, or unparseable bytes is
+        quarantined (same policy as :meth:`fetch`) and counts as a miss."""
+        path = self.object_path(key)
+        if not path.exists():
+            self.stats.misses += 1
+            return None
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, ValueError):
+            data = None
+        if (not isinstance(data, dict) or data.get("schema") != schema
+                or data.get("key") != key
+                or not isinstance(data.get("payload"), dict)):
+            self.stats.corrupt += 1
+            self.stats.misses += 1
+            quarantine_artifact(path)
+            return None
+        self.stats.hits += 1
+        return data["payload"]
+
     # -- the claim protocol --------------------------------------------------
 
     def claim(self, key: str) -> RegistryClaim | None:

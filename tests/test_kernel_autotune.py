@@ -1,0 +1,200 @@
+"""Tile autotuning + profiling harness + generic registry payloads.
+
+Determinism matters more than timing here: the one thing interpret-mode CPU
+timing can assert honestly is the *feasibility-pruned* behaviour — on shapes
+smaller than the default block the default config is excluded from the
+lattice, so the winner is non-default regardless of noise.  Everything
+timing-flavoured (profile splits, candidate ranking) is smoke-tested for
+plumbing, not for magnitudes.
+"""
+
+import json
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+from repro.kernels.autotune import TILE_SCHEMA, tile_key
+from repro.kernels.profile import (KernelProfile, fraction_from_profiles,
+                                   profile_kernel)
+from repro.kernels.tiles import (DEFAULT_TILES, KERNELS, TileConfig,
+                                 VMEM_BUDGET_BYTES, resolve_tile, shape_class,
+                                 tile_space)
+from repro.roofline.dcim import dcim_serving_bound
+from repro.service.registry import ArtifactRegistry
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo():
+    autotune.clear_memo()
+    autotune.set_registry(None)
+    yield
+    autotune.clear_memo()
+    autotune.set_registry(None)
+
+
+class TestTileSpace:
+    @pytest.mark.parametrize("kernel", KERNELS)
+    def test_default_first_on_big_shapes(self, kernel):
+        shape = {"dcim_mac": (512, 512, 512), "ssm_scan": (1024, 256),
+                 "csa_tree": (256, 512)}[kernel]
+        space = tile_space(kernel, shape)
+        assert space[0] == DEFAULT_TILES[kernel]
+        assert len(space) == len(set(space)) > 1
+
+    def test_small_m_prunes_default_block(self):
+        """m=64 < bm=128: no candidate streams pure padding, so the default
+        is infeasible and every winner is non-default by construction."""
+        space = tile_space("dcim_mac", (64, 256, 256))
+        assert DEFAULT_TILES["dcim_mac"] not in space
+        assert all(tc.bm <= 64 for tc in space)
+
+    def test_vmem_budget_respected(self):
+        for tc in tile_space("dcim_mac", (4096, 4096, 4096)):
+            work = tc.depth * (tc.bm * tc.bk + tc.bk * tc.bn) + 4 * tc.bm * tc.bn
+            assert work <= VMEM_BUDGET_BYTES
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(ValueError, match="unknown kernel"):
+            tile_space("nope", (8, 8))
+
+    def test_shape_class_buckets_pow2(self):
+        assert shape_class("dcim_mac", (100, 500, 512)) == \
+            "dcim_mac:128x512x512"
+        assert shape_class("ssm_scan", (1, 32)) == "ssm_scan:1x32"
+
+    def test_tile_config_dict_roundtrip(self):
+        tc = TileConfig(bm=64, bn=256, bk=128, depth=4)
+        assert TileConfig.from_dict(tc.as_dict()) == tc
+
+    def test_resolve_fills_from_default(self):
+        tc = resolve_tile("dcim_mac", TileConfig(bm=64))
+        assert (tc.bm, tc.bn, tc.bk) == (64, 128, 128)
+
+
+class TestAutotune:
+    def test_nondefault_winner_and_registry_roundtrip(self, tmp_path):
+        reg = ArtifactRegistry(tmp_path)
+        res = autotune.autotune("dcim_mac", (64, 128, 128), iters=1,
+                                registry=reg)
+        assert res.picked_nondefault
+        assert res.winner.bm <= 64
+        assert res.frontier and all(res.candidates[i].ok
+                                    for i in res.frontier)
+        # Round-trip: a fresh process (cleared memo) resolves "auto" to the
+        # persisted winner.
+        autotune.clear_memo()
+        assert autotune.lookup("dcim_mac", (64, 128, 128),
+                               registry=reg) == res.winner
+        # Same shape *class* shares the tuning (33 buckets up to 64).
+        autotune.clear_memo()
+        assert autotune.lookup("dcim_mac", (33, 128, 128),
+                               registry=reg) == res.winner
+
+    def test_lookup_cold_falls_back_to_default(self):
+        assert autotune.lookup("ssm_scan", (10_000, 256)) == \
+            DEFAULT_TILES["ssm_scan"]
+
+    def test_auto_dispatch_through_entry_point(self, tmp_path):
+        """tile_config='auto' end-to-end: tune, install the registry, run."""
+        from repro.kernels import dcim_matmul_int
+        from repro.kernels.dcim_mac.ref import dcim_matmul_int_ref
+        reg = ArtifactRegistry(tmp_path)
+        autotune.autotune("dcim_mac", (48, 128, 128), iters=1, registry=reg)
+        autotune.clear_memo()
+        autotune.set_registry(reg)
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.integers(-8, 8, (48, 128)), jnp.int8)
+        w = jnp.asarray(rng.integers(-8, 8, (128, 128)), jnp.int8)
+        out = dcim_matmul_int(a, w, use_pallas=True, interpret=True,
+                              tile_config="auto")
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(dcim_matmul_int_ref(a, w)))
+        assert reg.stats.hits == 1
+
+    @pytest.mark.parametrize("kernel,shape", [("ssm_scan", (96, 128)),
+                                              ("csa_tree", (48, 256))])
+    def test_other_kernels_tune(self, kernel, shape):
+        res = autotune.autotune(kernel, shape, iters=1)
+        assert res.candidates and all(c.ok for c in res.candidates)
+        assert res.payload()["tile"] == res.winner.as_dict()
+
+    def test_key_moves_with_backend(self, monkeypatch):
+        k1 = tile_key("dcim_mac", (64, 128, 128))
+        import jax
+        monkeypatch.setattr(jax, "__version__", "999.0.0")
+        assert tile_key("dcim_mac", (64, 128, 128)) != k1
+
+
+class TestRegistryPayloads:
+    def test_publish_fetch_roundtrip(self, tmp_path):
+        reg = ArtifactRegistry(tmp_path)
+        reg.publish_payload("k1", {"tile": {"bm": 64}}, schema=TILE_SCHEMA)
+        assert reg.fetch_payload("k1", schema=TILE_SCHEMA) == \
+            {"tile": {"bm": 64}}
+        # No-op republish (content addressing).
+        reg.publish_payload("k1", {"tile": {"bm": 64}}, schema=TILE_SCHEMA)
+        assert reg.stats.fill_noops == 1
+
+    def test_wrong_schema_quarantined(self, tmp_path):
+        reg = ArtifactRegistry(tmp_path)
+        reg.publish_payload("k1", {"x": 1}, schema="other-schema/v1")
+        assert reg.fetch_payload("k1", schema=TILE_SCHEMA) is None
+        assert reg.stats.corrupt == 1
+        assert not reg.has("k1")          # slot clean for the next publish
+
+    def test_corrupt_bytes_quarantined(self, tmp_path):
+        reg = ArtifactRegistry(tmp_path)
+        reg.object_path("k2").write_text("{not json")
+        assert reg.fetch_payload("k2", schema=TILE_SCHEMA) is None
+        assert reg.stats.corrupt == 1
+
+    def test_key_mismatch_rejected(self, tmp_path):
+        reg = ArtifactRegistry(tmp_path)
+        reg.publish_payload("k3", {"x": 1}, schema=TILE_SCHEMA)
+        blob = json.loads(reg.object_path("k3").read_text())
+        blob["key"] = "other"
+        reg.object_path("k3").write_text(json.dumps(blob))
+        assert reg.fetch_payload("k3", schema=TILE_SCHEMA) is None
+
+    def test_scope_record_enables_invalidation(self, tmp_path):
+        reg = ArtifactRegistry(tmp_path)
+        reg.publish_payload("k4", {"x": 1}, schema=TILE_SCHEMA,
+                            scope={"backend": "digest-a"})
+        assert reg.invalidate_digests({"digest-a"}) == ["k4"]
+        assert reg.fetch_payload("k4", schema=TILE_SCHEMA) is None
+
+
+class TestProfile:
+    @pytest.mark.parametrize("kernel,shape", [("dcim_mac", (32, 128, 128)),
+                                              ("ssm_scan", (64, 128)),
+                                              ("csa_tree", (600, 256))])
+    def test_profile_smoke(self, kernel, shape):
+        p = profile_kernel(kernel, shape, iters=1)
+        assert p.t_fused_us > 0 and p.t_copy_us >= 0
+        assert p.bound in ("bandwidth", "compute")
+        assert 0.0 <= p.roofline_fraction <= 1.0
+        assert p.bytes_moved > 0 and p.flops > 0
+        assert p.compute_measured == (kernel != "csa_tree")
+        d = p.as_dict()
+        assert d["kernel"] == kernel and d["tile"]["depth"] >= 1
+
+    def test_fraction_aggregation(self):
+        mk = lambda f: KernelProfile("dcim_mac", (1, 1, 1), TileConfig(),
+                                     f, 0.0, 1.0, 1, 1, True)
+        assert fraction_from_profiles([]) == 1.0
+        assert abs(fraction_from_profiles([mk(0.25), mk(1.0)])
+                   - 0.5) < 1e-9
+
+    def test_roofline_feed_in(self):
+        class G:
+            m, k, n, count = 64, 256, 256, 1
+        ideal = dcim_serving_bound([G()], 1e-3)
+        derated = dcim_serving_bound([G()], 1e-3, kernel_fraction=0.5)
+        assert ideal.kernel_fraction == 1.0
+        assert derated.t_macro_s == pytest.approx(2 * ideal.t_macro_s)
+        assert "kernel_fraction" in derated.summary()
+        assert "kernel_fraction" not in ideal.summary()
+        with pytest.raises(ValueError, match="kernel_fraction"):
+            dcim_serving_bound([G()], 1e-3, kernel_fraction=0.0)

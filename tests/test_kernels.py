@@ -11,12 +11,19 @@ import jax.numpy as jnp
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.kernels.csa_tree import csa_tree_pallas, csa_tree_ref
-from repro.kernels.dcim_mac import (dcim_matmul, dcim_matmul_int_pallas,
-                                    dcim_matmul_pallas)
+from repro.kernels.csa_tree import (CSA_MAX_ROWS, csa_tree_pallas,
+                                    csa_tree_ref, csa_tree_sum,
+                                    csa_tree_tiled_pallas)
+from repro.kernels.dcim_mac import (dcim_matmul, dcim_matmul_int,
+                                    dcim_matmul_int_pallas,
+                                    dcim_matmul_int_pipelined_pallas,
+                                    dcim_matmul_pallas,
+                                    dcim_matmul_pipelined_pallas)
 from repro.kernels.dcim_mac import ref as mac_ref
-from repro.kernels.ssm_scan import (ssm_scan_assoc_ref, ssm_scan_pallas,
+from repro.kernels.ssm_scan import (ssm_scan, ssm_scan_assoc_ref,
+                                    ssm_scan_pallas, ssm_scan_pipelined_pallas,
                                     ssm_scan_ref)
+from repro.kernels.tiles import TileConfig
 
 RNG = np.random.default_rng(1234)
 
@@ -91,6 +98,79 @@ class TestDcimMac:
             np.asarray(out), np.asarray(mac_ref.dcim_matmul_int_ref(a, w)))
 
 
+class TestDcimMacPipelined:
+    """The manual multi-buffered DMA pipeline must be bit-identical to the
+    grid kernel / oracle at every depth — pipelining is a schedule, not an
+    arithmetic change."""
+
+    @pytest.mark.parametrize("m,k,n", MAC_SHAPES)
+    @pytest.mark.parametrize("depth", [2, 4])
+    def test_int_matches_oracle(self, m, k, n, depth):
+        a = jnp.asarray(RNG.integers(-128, 128, (m, k)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-128, 128, (k, n)), jnp.int8)
+        out = dcim_matmul_int_pipelined_pallas(a, w, depth=depth,
+                                               interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(mac_ref.dcim_matmul_int_ref(a, w)))
+
+    def test_depth_exceeding_k_steps(self):
+        """Warm-up must not issue fetches past the last K chunk."""
+        a = jnp.asarray(RNG.integers(-128, 128, (32, 128)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-128, 128, (128, 32)), jnp.int8)
+        out = dcim_matmul_int_pipelined_pallas(a, w, bk=128, depth=4,
+                                               interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(mac_ref.dcim_matmul_int_ref(a, w)))
+
+    def test_dequant_epilogue(self):
+        m, k, n = 100, 300, 200      # ragged: every dim pads
+        a = jnp.asarray(RNG.integers(-128, 128, (m, k)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-128, 128, (k, n)), jnp.int8)
+        asc = jnp.asarray(RNG.uniform(0.01, 2.0, (m,)), jnp.float32)
+        wsc = jnp.asarray(RNG.uniform(0.01, 2.0, (n,)), jnp.float32)
+        out = dcim_matmul_pipelined_pallas(a, w, asc, wsc, depth=2,
+                                           interpret=True)
+        ref = mac_ref.dcim_matmul_ref(a, w, asc[:, None], wsc[None, :])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6)
+
+    def test_dispatch_tile_config(self):
+        """The entry point honours explicit TileConfigs on both paths."""
+        a = jnp.asarray(RNG.integers(-128, 128, (40, 70)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-128, 128, (70, 50)), jnp.int8)
+        want = np.asarray(mac_ref.dcim_matmul_int_ref(a, w))
+        for tc in (TileConfig(bm=32, bn=128, bk=128, depth=2),
+                   TileConfig(bm=32, bn=128, bk=128, depth=1)):
+            out = dcim_matmul_int(a, w, use_pallas=True, interpret=True,
+                                  tile_config=tc)
+            np.testing.assert_array_equal(np.asarray(out), want)
+
+    @given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+           scale_kind=st.sampled_from(["scalar", "row", "col", "both"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_padding_and_scale_broadcast(self, m, k, n, scale_kind,
+                                                  seed):
+        """Ragged M/K/N (nothing block-aligned) and every scale broadcast
+        shape agree with the oracle through the pipelined path."""
+        r = np.random.default_rng(seed)
+        a = jnp.asarray(r.integers(-128, 128, (m, k)), jnp.int8)
+        w = jnp.asarray(r.integers(-128, 128, (k, n)), jnp.int8)
+        asc = (0.37 if scale_kind in ("scalar", "col")
+               else jnp.asarray(r.uniform(0.01, 2.0, (m,)), jnp.float32))
+        wsc = (1.5 if scale_kind in ("scalar", "row")
+               else jnp.asarray(r.uniform(0.01, 2.0, (n,)), jnp.float32))
+        out = dcim_matmul(a, w, asc, wsc, use_pallas=True, interpret=True,
+                          tile_config=TileConfig(bm=32, bn=128, bk=128,
+                                                 depth=2))
+        asc_ref = jnp.broadcast_to(jnp.asarray(asc, jnp.float32), (m,))
+        wsc_ref = jnp.broadcast_to(jnp.asarray(wsc, jnp.float32), (n,))
+        ref = mac_ref.dcim_matmul_ref(a, w, asc_ref[:, None],
+                                      wsc_ref[None, :])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # csa_tree
 # ---------------------------------------------------------------------------
@@ -123,6 +203,48 @@ class TestCsaTree:
         x = jnp.asarray(r.integers(-10**6, 10**6, (h, n)), jnp.int32)
         out = csa_tree_pallas(x, bn=64, interpret=True)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(x).sum(0))
+
+
+class TestCsaTreeTiled:
+    """The H <= 512 whole-rows assumption is now an explicit guard, and the
+    tiled-H variant lifts it bit-exactly."""
+
+    def test_whole_rows_guard_raises(self):
+        x = jnp.zeros((CSA_MAX_ROWS + 1, 128), jnp.int32)
+        with pytest.raises(ValueError, match="csa_tree_tiled_pallas"):
+            csa_tree_pallas(x, interpret=True)
+
+    def test_just_above_limit_routes_to_tiled(self):
+        """Regression for the old silent assumption: H one past the limit
+        must work through the public entry point, exactly."""
+        h = CSA_MAX_ROWS + 1
+        x = jnp.asarray(RNG.integers(-2**16, 2**16, (h, 140)), jnp.int32)
+        out = csa_tree_sum(x, use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(x).sum(0, dtype=np.int64)
+                                      .astype(np.int32))
+
+    @pytest.mark.parametrize("h", [5, 64, 130, 512, 700])
+    @pytest.mark.parametrize("bh", [32, 128])
+    def test_tiled_matches_sum(self, h, bh):
+        x = jnp.asarray(RNG.integers(-2**16, 2**16, (h, 257)), jnp.int32)
+        out = csa_tree_tiled_pallas(x, bh=bh, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(csa_tree_ref(x)))
+
+    def test_tiled_matches_whole_rows_kernel(self):
+        """Same bits as the whole-rows kernel where both apply (int32 wrap)."""
+        x = jnp.asarray(RNG.integers(-2**30, 2**30, (96, 256)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(csa_tree_tiled_pallas(x, bh=32, interpret=True)),
+            np.asarray(csa_tree_pallas(x, interpret=True)))
+
+    def test_explicit_tile_config_routes_to_tiled(self):
+        x = jnp.asarray(RNG.integers(-2**16, 2**16, (64, 256)), jnp.int32)
+        out = csa_tree_sum(x, use_pallas=True, interpret=True,
+                           tile_config=TileConfig(bh=32, bn=128))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(csa_tree_ref(x)))
 
 
 # ---------------------------------------------------------------------------
@@ -176,3 +298,85 @@ class TestSsmScan:
         s_pl, f_pl = ssm_scan_pallas(a, b, h0, bt=32, bd=32, interpret=True)
         np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
                                    rtol=3e-5, atol=3e-5)
+
+
+class TestSsmScanPipelined:
+    """Multi-buffered streaming scan vs the sequential oracle: identical
+    per-chunk arithmetic, so the tolerance contract matches the grid kernel."""
+
+    @pytest.mark.parametrize("t,d", SCAN_SHAPES)
+    @pytest.mark.parametrize("depth", [2, 4])
+    def test_matches_sequential_ref(self, t, d, depth):
+        a = jnp.asarray(RNG.uniform(0.7, 1.0, (t, d)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(t, d)), jnp.float32)
+        h0 = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+        s_ref, f_ref = ssm_scan_ref(a, b, h0)
+        s_pl, f_pl = ssm_scan_pipelined_pallas(a, b, h0, bt=64, bd=64,
+                                               depth=depth, interpret=True)
+        np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(f_pl), np.asarray(f_ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_grid_kernel_exactly(self):
+        """Same chunk shape => same reduction order => same floats bit-wise."""
+        t, d = 256, 128
+        a = jnp.asarray(RNG.uniform(0.7, 1.0, (t, d)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(t, d)), jnp.float32)
+        h0 = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+        s_grid, f_grid = ssm_scan_pallas(a, b, h0, bt=64, bd=64,
+                                         interpret=True)
+        s_pipe, f_pipe = ssm_scan_pipelined_pallas(a, b, h0, bt=64, bd=64,
+                                                   depth=2, interpret=True)
+        np.testing.assert_array_equal(np.asarray(s_grid), np.asarray(s_pipe))
+        np.testing.assert_array_equal(np.asarray(f_grid), np.asarray(f_pipe))
+
+    def test_dispatch_tile_config(self):
+        t, d = 200, 96
+        a = jnp.asarray(RNG.uniform(0.7, 1.0, (t, d)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(t, d)), jnp.float32)
+        h0 = jnp.zeros((d,), jnp.float32)
+        s_ref, _ = ssm_scan_ref(a, b, h0)
+        for tc in (TileConfig(bt=64, bd=128, depth=2),
+                   TileConfig(bt=64, bd=128, depth=1)):
+            s, _ = ssm_scan(a, b, h0, use_pallas=True, interpret=True,
+                            tile_config=tc)
+            np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                       rtol=2e-5, atol=2e-5)
+
+    @given(t=st.integers(1, 100), d=st.integers(1, 50),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_ragged_shapes(self, t, d, seed):
+        """T not a multiple of the chunk, D not 128-aligned — the doubling
+        scan must agree with the sequential oracle through the padding."""
+        r = np.random.default_rng(seed)
+        a = jnp.asarray(r.uniform(0.0, 1.0, (t, d)), jnp.float32)
+        b = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+        h0 = jnp.asarray(r.normal(size=(d,)), jnp.float32)
+        s_ref, f_ref = ssm_scan_ref(a, b, h0)
+        s_pl, f_pl = ssm_scan_pipelined_pallas(a, b, h0, bt=32, bd=32,
+                                               depth=2, interpret=True)
+        np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(f_pl), np.asarray(f_ref),
+                                   rtol=3e-5, atol=3e-5)
+
+    @given(t=st.integers(1, 150), seed=st.integers(0, 2**31 - 1),
+           eps=st.floats(0.0, 0.02))
+    @settings(max_examples=10, deadline=None)
+    def test_property_near_identity_decay_stable(self, t, seed, eps):
+        """a ~= 1 (the numerically touchy long-memory regime): the log-depth
+        prefix products must stay close to the sequential recurrence instead
+        of drifting."""
+        d = 24
+        r = np.random.default_rng(seed)
+        a = jnp.asarray(np.full((t, d), 1.0 - eps), jnp.float32)
+        b = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+        h0 = jnp.asarray(r.normal(size=(d,)), jnp.float32)
+        s_ref, f_ref = ssm_scan_ref(a, b, h0)
+        s_pl, f_pl = ssm_scan_pipelined_pallas(a, b, h0, bt=32, bd=32,
+                                               depth=2, interpret=True)
+        scale = max(1.0, float(np.abs(np.asarray(s_ref)).max()))
+        np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                                   rtol=1e-4, atol=1e-4 * scale)
