@@ -13,9 +13,9 @@ import traceback
 
 from . import (bench_csa, bench_dse, bench_fig7_energy, bench_fig8_pareto,
                bench_fig9_shmoo, bench_frontend, bench_kernels,
-               bench_lattice, bench_multispec, bench_pareto, bench_roofline,
-               bench_service, bench_shardspec, bench_table1_features,
-               bench_table2_sota)
+               bench_lattice, bench_multispec, bench_obs, bench_pareto,
+               bench_roofline, bench_service, bench_shardspec,
+               bench_table1_features, bench_table2_sota)
 from .common import emit, rows_to_dicts
 
 MODULES = [
@@ -33,6 +33,7 @@ MODULES = [
     ("lattice", bench_lattice),
     ("service", bench_service),
     ("frontend", bench_frontend),
+    ("obs", bench_obs),
     ("roofline", bench_roofline),
 ]
 

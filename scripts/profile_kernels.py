@@ -14,9 +14,11 @@ side is fully hidden):
 Off-TPU (this container) the kernels run in Pallas interpret mode:
 absolute numbers are meaningless there, but the tool exercises the full
 plumbing, which is what CI smoke-tests.  On a real TPU the same invocation
-produces actionable splits, and ``--json`` output can feed
-``repro.roofline.dcim.dcim_serving_bound(kernel_fraction=...)`` via
-``repro.kernels.profile.fraction_from_profiles``.
+produces actionable splits, and the ``--json`` artifact (schema
+``syndcim-kernel-profile/v1``) feeds
+``repro.launch.serve --dcim-kernel-profile PATH``, which derates
+``repro.roofline.dcim.dcim_serving_bound(kernel_fraction=...)`` with the
+measured pipeline efficiency.
 """
 
 import argparse
@@ -25,7 +27,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.kernels.profile import fraction_from_profiles, profile_kernel  # noqa: E402
+from repro.kernels.profile import (fraction_from_profiles, profile_kernel,  # noqa: E402
+                                   profiles_payload)
 from repro.kernels.tiles import KERNELS, TileConfig  # noqa: E402
 
 #: Default shape sweep per kernel (serving-ish sizes; trimmed in --smoke).
@@ -62,7 +65,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes (CI: plumbing only)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also dump the profiles as JSON")
+                    help="also dump the profiles as a schema'd JSON "
+                         "artifact consumable by repro.launch.serve "
+                         "--dcim-kernel-profile")
     args = ap.parse_args()
 
     kernels = list(KERNELS) if args.kernel == "all" else [args.kernel]
@@ -98,7 +103,9 @@ def main() -> None:
           f"   (* = compute derived as fused - copy)")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump([p.as_dict() for p in profiles], f, indent=2)
+            json.dump(profiles_payload(profiles), f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
         print(f"wrote {args.json}")
 
 

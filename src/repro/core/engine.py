@@ -416,14 +416,19 @@ class ExecutionPlan:
 
 def plan_for(lattices: Sequence[DesignLattice],
              tables: Sequence[SpecTables], mode: str = "auto", mesh=None,
-             sharded: bool = False) -> ExecutionPlan:
-    """Group already-characterized specs into an :class:`ExecutionPlan`."""
+             sharded: bool = False,
+             placement: Placement | None = None) -> ExecutionPlan:
+    """Group already-characterized specs into an :class:`ExecutionPlan`.
+    An already-resolved ``placement`` skips the :func:`place` call (callers
+    that time planning and placement as separate phases resolve it first)."""
     groups: dict[tuple, list[int]] = {}
     for i, (lat, tab) in enumerate(zip(lattices, tables)):
         groups.setdefault(group_key(lat, tab), []).append(i)
+    if placement is None:
+        placement = place(mode, mesh, sharded=sharded)
     return ExecutionPlan(lattices=tuple(lattices), tables=tuple(tables),
                          groups=tuple(tuple(m) for m in groups.values()),
-                         placement=place(mode, mesh, sharded=sharded))
+                         placement=placement)
 
 
 def plan(specs: Sequence[MacroSpec], tech: TechModel,

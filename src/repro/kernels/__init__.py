@@ -18,10 +18,17 @@ oracles.  ``repro.kernels.profile`` times copy-only / compute-only / fused
 skeletons to classify kernels bandwidth- vs compute-bound;
 ``repro.kernels.autotune`` sweeps the tile lattice through the repo's DSE
 Pareto machinery and persists winners in the artifact registry.
+
+Every dispatch is observable (:mod:`repro.kernels.instrument`): a
+``kernel.<name>`` span (tile config chosen, pipelined-vs-grid route,
+autotune memo/registry/default source) when a trace is live, plus always-on
+``kernel/<name>/*`` dispatch counters in the :mod:`repro.obs` metrics
+registry.
 """
 
 from .csa_tree import (CSA_MAX_ROWS, csa_tree_pallas, csa_tree_ref,
                        csa_tree_sum, csa_tree_tiled_pallas)
+from .instrument import dispatch_span
 from .dcim_mac import (dcim_matmul, dcim_matmul_int, dcim_matmul_int_pallas,
                        dcim_matmul_int_pipelined_pallas, dcim_matmul_pallas,
                        dcim_matmul_pipelined_pallas)
@@ -38,5 +45,5 @@ __all__ = [
     "ssm_scan", "ssm_scan_assoc_ref", "ssm_scan_pallas",
     "ssm_scan_pipelined_pallas", "ssm_scan_ref",
     "DEFAULT_TILES", "TileConfig", "resolve_tile", "shape_class",
-    "tile_space",
+    "tile_space", "dispatch_span",
 ]

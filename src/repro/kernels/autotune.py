@@ -233,21 +233,30 @@ def clear_memo() -> None:
     _MEMO.clear()
 
 
-def lookup(kernel: str, shape: tuple[int, ...],
-           registry=None) -> TileConfig:
-    """The tile config ``tile_config="auto"`` resolves to: process memo →
-    registry payload → per-kernel default.  Never raises on a cold cache —
-    an untuned shape just runs the default posture."""
+def lookup_with_source(kernel: str, shape: tuple[int, ...], registry=None
+                       ) -> tuple[TileConfig, str]:
+    """:func:`lookup` plus where the config came from: ``"memo"`` (process
+    memo), ``"registry"`` (shared payload, memoized on the way out), or
+    ``"default"`` (the static per-kernel posture) — the attribution the
+    kernel-dispatch spans and counters record."""
     shape = tuple(int(d) for d in shape)
     key = tile_key(kernel, shape)
     hit = _MEMO.get(key)
     if hit is not None:
-        return hit
+        return hit, "memo"
     reg = registry if registry is not None else _REGISTRY
     if reg is not None:
         payload = reg.fetch_payload(key, schema=TILE_SCHEMA)
         if payload is not None and isinstance(payload.get("tile"), dict):
             cfg = TileConfig.from_dict(payload["tile"])
             _MEMO[key] = cfg
-            return cfg
-    return DEFAULT_TILES[kernel]
+            return cfg, "registry"
+    return DEFAULT_TILES[kernel], "default"
+
+
+def lookup(kernel: str, shape: tuple[int, ...],
+           registry=None) -> TileConfig:
+    """The tile config ``tile_config="auto"`` resolves to: process memo →
+    registry payload → per-kernel default.  Never raises on a cold cache —
+    an untuned shape just runs the default posture."""
+    return lookup_with_source(kernel, shape, registry=registry)[0]

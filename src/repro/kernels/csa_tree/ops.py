@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..instrument import dispatch_span
 from ..tiles import TileConfig, resolve_tile
 from .kernel import CSA_MAX_ROWS, csa_tree_pallas, csa_tree_tiled_pallas
 from .ref import csa_tree_ref
@@ -24,17 +25,23 @@ def csa_tree_sum(operands: jnp.ndarray, *, use_pallas: bool | None = None,
         h = operands.shape[0]
         if tile_config == "auto":
             from .. import autotune
-            tc = autotune.lookup("csa_tree", operands.shape)
+            tc, source = autotune.lookup_with_source("csa_tree",
+                                                     operands.shape)
         else:
             tc = resolve_tile("csa_tree", tile_config)
-        if h > CSA_MAX_ROWS or tile_config is not None:
-            return csa_tree_tiled_pallas(operands,
-                                         use_compressors=use_compressors,
-                                         bh=tc.bh, bn=tc.bn,
-                                         interpret=interpret)
-        return csa_tree_pallas(operands, use_compressors=use_compressors,
-                               bn=tc.bn, interpret=interpret)
-    return _ref_sum(operands)
+            source = "default" if tile_config is None else "explicit"
+        route = ("tiled" if h > CSA_MAX_ROWS or tile_config is not None
+                 else "rows")
+        with dispatch_span("csa_tree", operands.shape, tc, source, route):
+            if route == "tiled":
+                return csa_tree_tiled_pallas(
+                    operands, use_compressors=use_compressors,
+                    bh=tc.bh, bn=tc.bn, interpret=interpret)
+            return csa_tree_pallas(operands,
+                                   use_compressors=use_compressors,
+                                   bn=tc.bn, interpret=interpret)
+    with dispatch_span("csa_tree", operands.shape, None, "none", "xla"):
+        return _ref_sum(operands)
 
 
 _ref_sum = jax.jit(csa_tree_ref)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from ..instrument import dispatch_span
 from ..tiles import TileConfig, resolve_tile
 from .kernel import (dcim_matmul_int_pallas, dcim_matmul_int_pipelined_pallas,
                      dcim_matmul_pallas, dcim_matmul_pipelined_pallas)
@@ -36,11 +37,16 @@ def _on_tpu() -> bool:
 
 
 def _resolve(shape: tuple[int, ...],
-             tile_config: TileConfig | str | None) -> TileConfig:
+             tile_config: TileConfig | str | None
+             ) -> tuple[TileConfig, str]:
+    """The tile config to launch with, plus its attribution: the autotune
+    resolution chain for ``"auto"``, ``"explicit"`` for a caller-provided
+    config, ``"default"`` for the stock posture."""
     if tile_config == "auto":
         from .. import autotune
-        return autotune.lookup("dcim_mac", shape)
-    return resolve_tile("dcim_mac", tile_config)
+        return autotune.lookup_with_source("dcim_mac", shape)
+    return (resolve_tile("dcim_mac", tile_config),
+            "default" if tile_config is None else "explicit")
 
 
 def dcim_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray,
@@ -56,17 +62,24 @@ def dcim_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray,
         m, n = a_q.shape[0], w_q.shape[1]
         asc = jnp.broadcast_to(jnp.asarray(a_scale, jnp.float32), (m,))
         wsc = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (n,))
-        tc = _resolve((m, a_q.shape[1], n), tile_config)
-        if tc.depth >= 2:
-            return dcim_matmul_pipelined_pallas(
-                a_q, w_q, asc, wsc, bm=tc.bm, bn=tc.bn, bk=tc.bk,
-                depth=tc.depth, out_dtype=out_dtype, interpret=interpret)
-        return dcim_matmul_pallas(a_q, w_q, asc, wsc, bm=tc.bm, bn=tc.bn,
-                                  bk=tc.bk, out_dtype=out_dtype,
-                                  interpret=interpret)
-    return _ref_matmul(a_q, w_q, jnp.asarray(a_scale, jnp.float32),
-                       jnp.asarray(w_scale, jnp.float32),
-                       out_dtype=out_dtype)
+        shape = (m, a_q.shape[1], n)
+        tc, source = _resolve(shape, tile_config)
+        route = "pipelined" if tc.depth >= 2 else "grid"
+        with dispatch_span("dcim_mac", shape, tc, source, route):
+            if tc.depth >= 2:
+                return dcim_matmul_pipelined_pallas(
+                    a_q, w_q, asc, wsc, bm=tc.bm, bn=tc.bn, bk=tc.bk,
+                    depth=tc.depth, out_dtype=out_dtype,
+                    interpret=interpret)
+            return dcim_matmul_pallas(a_q, w_q, asc, wsc, bm=tc.bm,
+                                      bn=tc.bn, bk=tc.bk,
+                                      out_dtype=out_dtype,
+                                      interpret=interpret)
+    shape = (a_q.shape[0], a_q.shape[1], w_q.shape[1])
+    with dispatch_span("dcim_mac", shape, None, "none", "xla"):
+        return _ref_matmul(a_q, w_q, jnp.asarray(a_scale, jnp.float32),
+                           jnp.asarray(w_scale, jnp.float32),
+                           out_dtype=out_dtype)
 
 
 def dcim_matmul_int(a_q: jnp.ndarray, w_q: jnp.ndarray,
@@ -77,16 +90,19 @@ def dcim_matmul_int(a_q: jnp.ndarray, w_q: jnp.ndarray,
     """Integer-accumulator variant: returns int32 (M,N)."""
     if use_pallas is None:
         use_pallas = _on_tpu()
+    shape = (a_q.shape[0], a_q.shape[1], w_q.shape[1])
     if use_pallas:
-        tc = _resolve((a_q.shape[0], a_q.shape[1], w_q.shape[1]),
-                      tile_config)
-        if tc.depth >= 2:
-            return dcim_matmul_int_pipelined_pallas(
-                a_q, w_q, bm=tc.bm, bn=tc.bn, bk=tc.bk, depth=tc.depth,
-                interpret=interpret)
-        return dcim_matmul_int_pallas(a_q, w_q, bm=tc.bm, bn=tc.bn,
-                                      bk=tc.bk, interpret=interpret)
-    return _ref_matmul_int(a_q, w_q)
+        tc, source = _resolve(shape, tile_config)
+        route = "pipelined" if tc.depth >= 2 else "grid"
+        with dispatch_span("dcim_mac", shape, tc, source, route):
+            if tc.depth >= 2:
+                return dcim_matmul_int_pipelined_pallas(
+                    a_q, w_q, bm=tc.bm, bn=tc.bn, bk=tc.bk, depth=tc.depth,
+                    interpret=interpret)
+            return dcim_matmul_int_pallas(a_q, w_q, bm=tc.bm, bn=tc.bn,
+                                          bk=tc.bk, interpret=interpret)
+    with dispatch_span("dcim_mac", shape, None, "none", "xla"):
+        return _ref_matmul_int(a_q, w_q)
 
 
 _ref_matmul = jax.jit(ref.dcim_matmul_ref, static_argnames=("out_dtype",))

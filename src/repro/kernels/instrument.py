@@ -1,0 +1,42 @@
+"""Kernel-dispatch observability: one span + counters per kernel launch.
+
+Every public kernel entry point (``dcim_matmul``/``dcim_matmul_int``,
+``ssm_scan``, ``csa_tree_sum``) routes its launch through
+:func:`dispatch_span`, which records
+
+  * a ``kernel.<name>`` span (child of whatever request/engine span is
+    current) tagged with the shape, the tile config chosen, the route taken
+    (``pipelined`` vs ``grid`` vs ``tiled``/``rows`` vs ``xla``), and where
+    the tile came from (autotune ``memo``/``registry``/``default``, an
+    ``explicit`` config, or the ``default`` posture);
+  * always-on dispatch counters in the global metrics registry
+    (``kernel/<name>/dispatch``, ``.../route/<route>``,
+    ``.../tile_source/<source>``) — the cheap signal that answers "is the
+    fleet actually running tuned pipelines?" without tracing enabled.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from ..obs import tracer
+from ..obs.metrics import get_registry
+
+
+@contextlib.contextmanager
+def dispatch_span(kernel: str, shape: tuple[int, ...], tile, source: str,
+                  route: str):
+    """Wrap one kernel launch: dispatch counters plus (when a trace is
+    live) a ``kernel.<name>`` span.  ``tile`` is the resolved TileConfig
+    (or None on the XLA path); ``source`` is the tile attribution."""
+    reg = get_registry()
+    reg.counter(f"kernel/{kernel}/dispatch").inc()
+    reg.counter(f"kernel/{kernel}/route/{route}").inc()
+    reg.counter(f"kernel/{kernel}/tile_source/{source}").inc()
+    span = tracer.span(f"kernel.{kernel}", tags={
+        "shape": "x".join(str(int(d)) for d in shape),
+        "route": route, "tile_source": source})
+    if span and tile is not None:
+        span.set_tag("tile", tile.as_dict())
+    with span:
+        yield span

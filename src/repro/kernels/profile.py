@@ -32,9 +32,11 @@ identical, which is what CI exercises.
 
 from __future__ import annotations
 
+import json
 import math
 import time
 from dataclasses import dataclass
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +46,11 @@ from .tiles import TileConfig, resolve_tile
 
 #: Mode tags understood by the pipelined kernels' ``_mode`` argument.
 MODES = ("copy", "compute", "fused")
+
+#: Schema tag of the persisted kernel-profile artifact
+#: (``scripts/profile_kernels.py --json`` output, consumed by
+#: ``repro.launch.serve --dcim-kernel-profile``).
+PROFILE_SCHEMA = "syndcim-kernel-profile/v1"
 
 
 @dataclass
@@ -189,3 +196,46 @@ def fraction_from_profiles(profiles) -> float:
     if not fracs:
         return 1.0
     return float(math.exp(sum(math.log(f) for f in fracs) / len(fracs)))
+
+
+def profiles_payload(profiles) -> dict:
+    """The machine-readable artifact of one profiling run: schema tag, the
+    per-point timing splits, and the pre-aggregated serving derate (so the
+    consumer need not recompute the geomean)."""
+    profiles = list(profiles)
+    return {
+        "schema": PROFILE_SCHEMA,
+        "backend": jax.default_backend(),
+        "fraction": fraction_from_profiles(profiles),
+        "profiles": [p.as_dict() for p in profiles],
+    }
+
+
+def load_profile_artifact(path) -> dict:
+    """Read a kernel-profile artifact; a missing file is an error (the
+    launch was pointed at a measurement that must exist).  A legacy bare
+    list of profile dicts (pre-schema ``--json`` output) is upgraded in
+    memory."""
+    p = Path(path)
+    data = json.loads(p.read_text())
+    if isinstance(data, list):                      # legacy bare list
+        fracs = [max(1e-6, float(d["roofline_fraction"])) for d in data]
+        frac = (float(math.exp(sum(math.log(f) for f in fracs)
+                               / len(fracs))) if fracs else 1.0)
+        return {"schema": PROFILE_SCHEMA, "backend": None,
+                "fraction": frac, "profiles": data}
+    if not isinstance(data, dict) or data.get("schema") != PROFILE_SCHEMA:
+        raise ValueError(f"{p}: not a kernel profile "
+                         f"(schema={data.get('schema') if isinstance(data, dict) else type(data).__name__!r}, "
+                         f"expected {PROFILE_SCHEMA!r})")
+    return data
+
+
+def fraction_from_profile_artifact(path) -> float:
+    """The serving-roofline derate recorded in (or derivable from) a
+    profile artifact, clamped to (0, 1]."""
+    data = load_profile_artifact(path)
+    frac = float(data.get("fraction", 1.0))
+    if not (0.0 < frac <= 1.0):
+        raise ValueError(f"{path}: fraction must be in (0, 1], got {frac}")
+    return frac

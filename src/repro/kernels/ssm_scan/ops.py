@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..instrument import dispatch_span
 from ..tiles import TileConfig, resolve_tile
 from .kernel import ssm_scan_pallas, ssm_scan_pipelined_pallas
 from .ref import ssm_scan_assoc_ref
@@ -26,16 +27,20 @@ def ssm_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
     if use_pallas:
         if tile_config == "auto":
             from .. import autotune
-            tc = autotune.lookup("ssm_scan", a.shape)
+            tc, source = autotune.lookup_with_source("ssm_scan", a.shape)
         else:
             tc = resolve_tile("ssm_scan", tile_config)
-        if tc.depth >= 2:
-            return ssm_scan_pipelined_pallas(a, b, h0, bt=tc.bt, bd=tc.bd,
-                                             depth=tc.depth,
-                                             interpret=interpret)
-        return ssm_scan_pallas(a, b, h0, bt=tc.bt, bd=tc.bd,
-                               interpret=interpret)
-    return _ref_scan(a, b, h0)
+            source = "default" if tile_config is None else "explicit"
+        route = "pipelined" if tc.depth >= 2 else "grid"
+        with dispatch_span("ssm_scan", a.shape, tc, source, route):
+            if tc.depth >= 2:
+                return ssm_scan_pipelined_pallas(a, b, h0, bt=tc.bt,
+                                                 bd=tc.bd, depth=tc.depth,
+                                                 interpret=interpret)
+            return ssm_scan_pallas(a, b, h0, bt=tc.bt, bd=tc.bd,
+                                   interpret=interpret)
+    with dispatch_span("ssm_scan", a.shape, None, "none", "xla"):
+        return _ref_scan(a, b, h0)
 
 
 _ref_scan = jax.jit(ssm_scan_assoc_ref)

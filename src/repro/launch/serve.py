@@ -16,6 +16,16 @@ PATH`` round-trips the preference-profile artifact through
 The ``--dcim-*`` flag cluster is one typed posture,
 :class:`repro.serve.config.ServeConfig`: ``--dcim-config PATH`` loads it
 from a JSON artifact and every explicitly-passed flag overrides the file.
+
+``--dcim-trace PATH`` turns on :mod:`repro.obs` request tracing for the
+launch: the selection pass runs through a :class:`repro.service.
+ServiceFrontend` (so every request carries real queued -> batched ->
+served timestamps) and a Chrome-trace JSON lands at PATH — load it at
+``ui.perfetto.dev`` to see the span tree from request admission through
+cache tiers to the fused engine pass.  ``--dcim-kernel-profile PATH``
+feeds a measured ``scripts/profile_kernels.py --json`` artifact into the
+serving roofline (``kernel_fraction`` derate), closing the loop between
+profiled pipeline efficiency and the reported tokens/s bound.
 """
 
 from __future__ import annotations
@@ -81,10 +91,34 @@ def main() -> None:
                          "concurrent cold launches from synthesizing the "
                          "same spec twice (see scripts/warm_cache.py to "
                          "pre-fill it ahead of a deployment)")
+    ap.add_argument("--dcim-trace", default=None, metavar="PATH",
+                    help="enable request tracing and write a Chrome-trace "
+                         "JSON (ui.perfetto.dev) of the launch: per-request "
+                         "queued/batched/served spans, cache-tier probes, "
+                         "engine phases, kernel dispatches")
+    ap.add_argument("--dcim-trace-sample", type=float, default=None,
+                    metavar="F", help="head sampling rate for --dcim-trace "
+                                      "in (0, 1] (default 1.0)")
+    ap.add_argument("--dcim-kernel-profile", default=None, metavar="PATH",
+                    help="kernel-profile artifact from scripts/"
+                         "profile_kernels.py --json: its measured pipeline "
+                         "efficiency derates the serving roofline "
+                         "(kernel_fraction)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     dcim = serve_config_from_args(args)
+    if dcim.trace is not None:
+        from .. import obs
+        obs.configure(enabled=True, sample=dcim.trace_sample)
+    kernel_fraction = 1.0
+    if dcim.kernel_profile is not None:
+        from ..kernels.profile import fraction_from_profile_artifact
+        kernel_fraction = fraction_from_profile_artifact(
+            dcim.kernel_profile)
+        print(f"dcim: kernel profile {dcim.kernel_profile}: serving "
+              f"roofline derated by measured pipeline efficiency "
+              f"{kernel_fraction:.3f}")
     if dcim.select:
         from ..core.dse import gemm_inventory
         from ..serve.select import apply_profile, select_macros
@@ -98,13 +132,25 @@ def main() -> None:
                                     registry=registry))
         else:
             service = get_service()
+        serve_via = service
+        frontend = None
+        if dcim.trace is not None:
+            # Route the selection pass through the admission frontend so
+            # every traced request carries real queued -> batched ->
+            # served timestamps (the span boundaries the trace shows).
+            from ..service import ServiceFrontend
+            frontend = ServiceFrontend(service)
+            serve_via = frontend
         sel, _ = apply_profile(
             dcim.profile,
             lambda profile: select_macros({cfg.name: gemm_inventory(cfg)},
                                           n_macros=dcim.macros,
                                           preference=dcim.pref,
                                           profile=profile,
-                                          service=service))
+                                          service=serve_via,
+                                          kernel_fraction=kernel_fraction))
+        if frontend is not None:
+            frontend.close()
         if dcim.profile is not None:
             print(f"dcim: preference profile updated: {dcim.profile}")
         cs, ss = service.cache.stats, service.stats
@@ -183,6 +229,13 @@ def main() -> None:
     print(f"decode : {n_tok} tokens in {t_decode:.2f}s "
           f"({n_tok / max(t_decode, 1e-9):.1f} tok/s)")
     print("sample:", np.asarray(jnp.concatenate(out, axis=1))[0, :16])
+
+    if dcim.trace is not None:
+        from ..obs import tracer
+        from ..obs.export import write_chrome_trace
+        n = write_chrome_trace(tracer.drain(), dcim.trace)
+        print(f"dcim: trace: {n} span events -> {dcim.trace} "
+              f"(load at ui.perfetto.dev or chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -14,10 +14,19 @@ the file**, so an ops-managed config can be locally overridden per launch:
      "profile": "deploy/profile.json",
      "cache": "deploy/frontiers",
      "registry": "/mnt/shared/syndcim-registry",
-     "macros": 256}
+     "macros": 256,
+     "trace": "deploy/trace.json",
+     "trace_sample": 1.0,
+     "kernel_profile": "deploy/kernel_profile.json"}
 
 Unknown keys are rejected (a typo'd posture must fail loudly, not silently
 serve defaults).
+
+``trace`` enables :mod:`repro.obs` request tracing for the launch and
+names the Chrome-trace output path (load it at ``ui.perfetto.dev``);
+``trace_sample`` is the head-based trace sampling rate in (0, 1];
+``kernel_profile`` points at a ``scripts/profile_kernels.py --json``
+artifact whose measured pipeline efficiency derates the serving roofline.
 """
 
 from __future__ import annotations
@@ -40,7 +49,10 @@ class ServeConfig:
     preference-profile and frontier-cache artifact paths; ``registry`` is
     the fleet-shared artifact-registry root (shared storage — any spec
     synthesized by any host is a cache hit on every host); ``macros`` the
-    macro-array size assumed by co-design."""
+    macro-array size assumed by co-design; ``trace`` the Chrome-trace
+    output path (None = tracing off) with ``trace_sample`` the head
+    sampling rate in (0, 1]; ``kernel_profile`` a measured kernel-profile
+    artifact derating the serving roofline."""
 
     select: bool = False
     pref: Optional[tuple[float, float, float]] = None
@@ -48,6 +60,9 @@ class ServeConfig:
     cache: Optional[str] = None
     registry: Optional[str] = None
     macros: int = 256
+    trace: Optional[str] = None
+    trace_sample: float = 1.0
+    kernel_profile: Optional[str] = None
 
     def __post_init__(self):
         if self.pref is not None:
@@ -58,6 +73,10 @@ class ServeConfig:
             object.__setattr__(self, "pref", p)
         if self.macros < 1:
             raise ValueError("macros must be >= 1")
+        s = float(self.trace_sample)
+        if not (0.0 < s <= 1.0):
+            raise ValueError(f"trace_sample must be in (0, 1], got {s}")
+        object.__setattr__(self, "trace_sample", s)
 
 
 def parse_pref(text: str) -> tuple[float, float, float]:
@@ -102,6 +121,9 @@ def save_serve_config(path, config: ServeConfig) -> None:
         "cache": config.cache,
         "registry": config.registry,
         "macros": config.macros,
+        "trace": config.trace,
+        "trace_sample": config.trace_sample,
+        "kernel_profile": config.kernel_profile,
     }
     Path(path).write_text(json.dumps(payload, indent=2, sort_keys=True)
                           + "\n")
@@ -128,4 +150,10 @@ def serve_config_from_args(args) -> ServeConfig:
         overrides["registry"] = args.dcim_registry
     if getattr(args, "dcim_macros", None) is not None:
         overrides["macros"] = int(args.dcim_macros)
+    if getattr(args, "dcim_trace", None) is not None:
+        overrides["trace"] = args.dcim_trace
+    if getattr(args, "dcim_trace_sample", None) is not None:
+        overrides["trace_sample"] = float(args.dcim_trace_sample)
+    if getattr(args, "dcim_kernel_profile", None) is not None:
+        overrides["kernel_profile"] = args.dcim_kernel_profile
     return replace(cfg, **overrides) if overrides else cfg

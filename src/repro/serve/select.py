@@ -264,7 +264,8 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
                   preference: Sequence[float] | None = None,
                   profile: PreferenceProfile | None = None,
                   service=None,
-                  config: LatticeConfig | None = None) -> MacroSelection:
+                  config: LatticeConfig | None = None,
+                  kernel_fraction: float = 1.0) -> MacroSelection:
     """Synthesize the multi-spec frontier and pick a macro per workload.
 
     ``workloads`` maps deployed-workload names to GEMM inventories (see
@@ -294,7 +295,13 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
     ``config`` selects the lattice axis set candidates are drawn from
     (:class:`repro.core.axes.LatticeConfig` — e.g. extra precision-headroom
     plans or approximate adder-tree cells); the seed axes when unset, so
-    existing selections are untouched."""
+    existing selections are untouched.
+
+    ``kernel_fraction`` derates the serving roofline with a *measured*
+    pipeline efficiency (see
+    :func:`repro.kernels.profile.fraction_from_profiles` and the
+    ``--dcim-kernel-profile`` launcher flag); 1.0 keeps the analytic
+    bound."""
     if not workloads:
         raise ValueError("need at least one deployed workload")
     if tech is None:
@@ -332,7 +339,7 @@ def select_macros(workloads: Mapping[str, Sequence[GemmShape]],
         di = assignment[w]
         serving[w] = dcim_serving_bound(
             workloads[w], float(report.wallclock_s[wi, di]), ib=ib, wb=wb,
-            workload=w, macro=labels[di])
+            workload=w, macro=labels[di], kernel_fraction=kernel_fraction)
     return MacroSelection(workloads=report.workloads, scenarios=names,
                           pool_labels=tuple(labels), pool=tuple(pool),
                           assignment=assignment, codesign=report,

@@ -36,35 +36,31 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 from ..core.searcher import SearchResult
+from ..obs import tracer
+from ..obs.metrics import StatsView
 from .artifacts import (ARTIFACT_SCHEMA, CacheArtifactError,  # noqa: F401
                         artifact_payload, atomic_write_json, load_artifact,
                         quarantine_artifact)
 from .registry import ArtifactRegistry
 
 
-@dataclass
-class CacheStats:
-    """Per-tier accounting.  Invariant (property-tested):
-    ``gets == hits + disk_hits + shared_hits + misses`` — every ``get()``
-    resolves in exactly one tier or is a miss; ``corrupt`` counts rejected
-    artifacts on the side (a rejection is not a resolution).  Evictions
-    split by durability: ``evictions`` are LRU entries that survive in a
-    disk tier, ``evictions_lost`` left no copy anywhere."""
+class CacheStats(StatsView):
+    """Per-tier accounting, backed by a metrics registry
+    (:class:`repro.obs.metrics.StatsView` — same attributes and
+    ``as_dict()`` key set as the historical dataclass).
 
-    gets: int = 0
-    hits: int = 0            # in-memory LRU hits
-    disk_hits: int = 0       # artifacts loaded (and promoted) from local disk
-    shared_hits: int = 0     # artifacts fetched from the shared registry
-    misses: int = 0
-    puts: int = 0
-    evictions: int = 0       # LRU capacity evictions with a surviving copy
-    evictions_lost: int = 0  # LRU capacity evictions with no disk tier copy
-    corrupt: int = 0         # artifacts rejected (and quarantined)
+    Invariant (property-tested): ``gets == hits + disk_hits + shared_hits
+    + misses`` — every ``get()`` resolves in exactly one tier or is a
+    miss; ``corrupt`` counts rejected artifacts on the side (a rejection
+    is not a resolution).  ``hits`` are in-memory LRU hits, ``disk_hits``
+    artifacts loaded (and promoted) from local disk, ``shared_hits``
+    artifacts fetched from the shared registry.  Evictions split by
+    durability: ``evictions`` are LRU entries that survive in a disk
+    tier, ``evictions_lost`` left no copy anywhere."""
 
-    def as_dict(self) -> dict:
-        return {k: getattr(self, k) for k in
-                ("gets", "hits", "disk_hits", "shared_hits", "misses",
-                 "puts", "evictions", "evictions_lost", "corrupt")}
+    _NAMESPACE = "cache"
+    _FIELDS = ("gets", "hits", "disk_hits", "shared_hits", "misses",
+               "puts", "evictions", "evictions_lost", "corrupt")
 
 
 @dataclass
@@ -142,23 +138,33 @@ class FrontierCache:
         validated and a rejected artifact is quarantined on the spot, the
         lookup falling through to the next tier."""
         self.stats.gets += 1
-        if key in self._lru:
-            self._lru.move_to_end(key)
-            self.stats.hits += 1
-            return self._lru[key]
-        result = self._load_local(key)
-        if result is not None:
-            self.stats.disk_hits += 1
-            self._insert(key, result)
-            return result
+        with tracer.span("cache.mem") as span:
+            if key in self._lru:
+                self._lru.move_to_end(key)
+                self.stats.hits += 1
+                span.set_tag("outcome", "hit")
+                return self._lru[key]
+            span.set_tag("outcome", "miss")
+        if self.store_dir is not None:
+            with tracer.span("cache.disk") as span:
+                result = self._load_local(key)
+                if result is not None:
+                    self.stats.disk_hits += 1
+                    self._insert(key, result)
+                    span.set_tag("outcome", "hit")
+                    return result
+                span.set_tag("outcome", "miss")
         if self.registry is not None:
-            result = self.registry.fetch(key)
-            if result is not None:
-                self.stats.shared_hits += 1
-                if self.store_dir is not None:
-                    self.save_artifact(key, result)   # promote to tier 2
-                self._insert(key, result)
-                return result
+            with tracer.span("cache.registry") as span:
+                result = self.registry.fetch(key)
+                if result is not None:
+                    self.stats.shared_hits += 1
+                    if self.store_dir is not None:
+                        self.save_artifact(key, result)  # promote to tier 2
+                    self._insert(key, result)
+                    span.set_tag("outcome", "hit")
+                    return result
+                span.set_tag("outcome", "miss")
         self.stats.misses += 1
         return None
 

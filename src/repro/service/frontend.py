@@ -45,11 +45,12 @@ from __future__ import annotations
 import heapq
 import threading
 import time
-from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
 from ..core import engine as E
 from ..core.macro import MacroSpec
+from ..obs import tracer
+from ..obs.metrics import StatsView, get_registry
 from .requests import (FRONTIER_EVENT, Priority, RequestState,
                        SheddedResponse, StreamEvent, SynthesisRequest,
                        SynthesisResponse)
@@ -66,19 +67,21 @@ WINDOW_BOUNDS = (0.001, 0.25)
 WINDOW_FRACTION = 0.1
 
 
-@dataclass
-class FrontendStats:
-    submitted: int = 0       # admitted to the queue
-    served: int = 0
-    shedded: int = 0         # typed rejections (all reasons)
-    batches: int = 0         # scheduler drains that reached the service
-    max_batch: int = 0       # largest drained batch
-    depth_hwm: int = 0       # admission-queue depth high-water mark
+class FrontendStats(StatsView):
+    """Admission-queue counters, backed by a metrics registry
+    (:class:`repro.obs.metrics.StatsView` — same attributes and
+    ``as_dict()`` key set as the historical dataclass).
 
-    def as_dict(self) -> dict:
-        return {k: getattr(self, k) for k in
-                ("submitted", "served", "shedded", "batches", "max_batch",
-                 "depth_hwm")}
+    - ``submitted``: admitted to the queue
+    - ``shedded``: typed rejections (all reasons)
+    - ``batches``: scheduler drains that reached the service
+    - ``max_batch``: largest drained batch
+    - ``depth_hwm``: admission-queue depth high-water mark
+    """
+
+    _NAMESPACE = "frontend"
+    _FIELDS = ("submitted", "served", "shedded", "batches", "max_batch",
+               "depth_hwm")
 
 
 class Ticket:
@@ -114,15 +117,17 @@ class _Entry:
     """One queued request plus its scheduling state."""
 
     __slots__ = ("request", "ticket", "on_event", "submitted_at",
-                 "deadline_at", "batched_at")
+                 "deadline_at", "batched_at", "span")
 
-    def __init__(self, request, ticket, on_event, submitted_at, deadline_at):
+    def __init__(self, request, ticket, on_event, submitted_at, deadline_at,
+                 span=None):
         self.request = request
         self.ticket = ticket
         self.on_event = on_event
         self.submitted_at = submitted_at
         self.deadline_at = deadline_at
         self.batched_at = None
+        self.span = span        # the request's trace root (SpanHandle|noop)
 
 
 class SweepHandle:
@@ -195,6 +200,10 @@ class ServiceFrontend:
                             f"{type(request).__name__}")
         ticket = Ticket(request)
         now = self._clock()
+        span = tracer.start_trace("request", start_s=now, tags={
+            "kind": request.kind, "priority": int(request.priority)})
+        if span and request.tag is not None:
+            span.set_tag("tag", request.tag)
         with self._work:
             depth = len(self._heap)
             reason = None
@@ -207,13 +216,16 @@ class ServiceFrontend:
                 resp = SheddedResponse(request=request, reason=reason,
                                        queue_depth=depth)
                 ticket._resolve(resp)
+                if span:
+                    span.set_tag("shedded", reason)
+                    span.finish(end_s=self._clock())
                 self._emit(on_event, StreamEvent(
                     request=request, kind=RequestState.SHEDDED.value,
                     response=resp))
                 return ticket
             entry = _Entry(request, ticket, on_event, now,
                            None if request.deadline_s is None
-                           else now + request.deadline_s)
+                           else now + request.deadline_s, span=span)
             heapq.heappush(self._heap,
                            (int(request.priority), self._seq, entry))
             self._seq += 1
@@ -362,6 +374,9 @@ class ServiceFrontend:
                                       kind=RequestState.SHEDDED.value,
                                       response=resp)
                 e.ticket._resolve(resp)
+                if e.span:
+                    e.span.set_tag("shedded", "deadline")
+                    e.span.finish(end_s=now)
                 self._emit(e.on_event, resp_ev)
                 continue
             e.batched_at = now
@@ -381,8 +396,9 @@ class ServiceFrontend:
                 result=result, done=i + 1, total=len(live)))
 
         try:
-            responses = self.service.serve([e.request for e in live],
-                                           on_partial=partial)
+            responses = self.service.serve(
+                [e.request for e in live], on_partial=partial,
+                contexts=[e.span.context if e.span else None for e in live])
         except Exception as exc:                     # typed, never silent
             with self._lock:
                 depth = len(self._heap)
@@ -393,16 +409,33 @@ class ServiceFrontend:
                                        queue_depth=depth,
                                        detail=f"{type(exc).__name__}: {exc}")
                 e.ticket._resolve(resp)
+                if e.span:
+                    e.span.set_tag("error", type(exc).__name__)
+                    e.span.finish(end_s=self._clock())
                 self._emit(e.on_event, StreamEvent(
                     request=e.request, kind=RequestState.SHEDDED.value,
                     response=resp))
             return
         served_at = self._clock()
+        latency = get_registry().histogram("frontend/request_latency_s")
         for e, resp in zip(live, responses):
             resp.queued_at = e.submitted_at
             resp.batched_at = e.batched_at
             resp.served_at = served_at
             self.stats.served += 1
+            latency.observe(served_at - e.submitted_at)
+            if e.span:
+                # Lifecycle children carry the very timestamps the response
+                # is stamped with, so span boundaries == response times.
+                tracer.start("request.queued", parent=e.span.context,
+                             start_s=e.submitted_at
+                             ).finish(end_s=e.batched_at)
+                tracer.start("request.batched", parent=e.span.context,
+                             start_s=e.batched_at,
+                             tags={"batch_size": len(live)}
+                             ).finish(end_s=served_at)
+                e.span.set_tag("served_from", resp.served_from)
+                e.span.finish(end_s=served_at)
             e.ticket._resolve(resp)
             self._emit(e.on_event, StreamEvent(
                 request=e.request, kind=RequestState.SERVED.value,

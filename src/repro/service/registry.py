@@ -55,6 +55,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 from ..core.searcher import SearchResult
+from ..obs.metrics import StatsView
 from .artifacts import (CacheArtifactError, artifact_payload,
                         atomic_write_json, load_artifact,
                         quarantine_artifact)
@@ -71,26 +72,27 @@ CLAIM_SCHEMA = "syndcim-registry-claim/v1"
 CLAIM_TTL_S = 600.0
 
 
-@dataclass
-class RegistryStats:
-    """Fleet-facing telemetry of one registry handle (per process)."""
+class RegistryStats(StatsView):
+    """Fleet-facing telemetry of one registry handle (per process),
+    backed by a metrics registry (:class:`repro.obs.metrics.StatsView` —
+    same attributes and ``as_dict()`` key set as the historical
+    dataclass).
 
-    hits: int = 0             # artifacts fetched (validated) from the store
-    misses: int = 0           # fetch() found no artifact
-    fills: int = 0            # artifacts this process published
-    fill_noops: int = 0       # publishes skipped: artifact already present
-    corrupt: int = 0          # artifacts rejected (and quarantined)
-    claims_acquired: int = 0  # claim files this process won
-    claims_lost: int = 0      # claim attempts another holder already owned
-    claims_broken: int = 0    # stale claims (past TTL) this process broke
-    claims_released: int = 0
-    evictions: int = 0        # entries dropped by scoped invalidation
+    - ``hits``: artifacts fetched (validated) from the store
+    - ``misses``: ``fetch()`` found no artifact
+    - ``fills``: artifacts this process published
+    - ``fill_noops``: publishes skipped, artifact already present
+    - ``corrupt``: artifacts rejected (and quarantined)
+    - ``claims_acquired`` / ``claims_lost`` / ``claims_broken`` /
+      ``claims_released``: the claim-file protocol from this process's
+      point of view
+    - ``evictions``: entries dropped by scoped invalidation
+    """
 
-    def as_dict(self) -> dict:
-        return {k: getattr(self, k) for k in
-                ("hits", "misses", "fills", "fill_noops", "corrupt",
-                 "claims_acquired", "claims_lost", "claims_broken",
-                 "claims_released", "evictions")}
+    _NAMESPACE = "registry"
+    _FIELDS = ("hits", "misses", "fills", "fill_noops", "corrupt",
+               "claims_acquired", "claims_lost", "claims_broken",
+               "claims_released", "evictions")
 
 
 class RegistryClaim:

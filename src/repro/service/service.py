@@ -42,6 +42,7 @@ and thread-compatible (callers serialize on the frontend's scheduler).
 
 from __future__ import annotations
 
+import contextlib
 import threading
 import warnings
 from dataclasses import dataclass, field
@@ -58,9 +59,15 @@ from ..core.macro import MacroSpec, calibrated_tech_for_reference
 from ..core.pareto import merged_pareto_indices, nondominated_mask_auto
 from ..core.searcher import SearchResult
 from ..core.tech import TechModel
+from ..obs import install_engine_hooks, tracer
+from ..obs.metrics import StatsView
 from .cache import FrontierCache
 from .keys import cache_key, key_scope, slice_key, sweep_key
 from .requests import SynthesisRequest, SynthesisResponse, as_requests
+
+#: Reusable no-op context for the untraced fast path (a shared
+#: ``nullcontext`` instance is re-enterable and allocation-free).
+_NULL_CTX = contextlib.nullcontext()
 
 #: Request-side execution modes: "auto" picks vmap for small fused batches
 #: and the capability-probed sharded pick once a batch is big enough to pay
@@ -98,27 +105,29 @@ def resolve_service_mode(mode: str = "auto",
     return E._SHARDED_STRATEGY[E.resolve_sharded_mode(mode)]
 
 
-@dataclass
-class ServiceStats:
-    requests: int = 0
-    cache_hits: int = 0      # answered from the FrontierCache (any tier)
-    coalesced: int = 0       # duplicates folded onto an in-batch miss
-    misses: int = 0          # unique specs that reached the engine
-    fused_passes: int = 0    # engine.execute calls this service made
-    slice_hits: int = 0      # per-axis slice frontiers reused by sweeps
-    incremental_passes: int = 0  # sweeps answered by slice merge, not re-roll
-    # The shared-registry claim protocol (zero without a registry):
-    claims_acquired: int = 0  # misses this service claimed and synthesized
-    claim_waits: int = 0      # misses another host was already synthesizing
-    claim_hits: int = 0       # ...of those, served by that host's publish
-    claim_timeouts: int = 0   # ...of those, synthesized here after the wait
+class ServiceStats(StatsView):
+    """Per-service request counters, backed by a metrics registry
+    (:class:`repro.obs.metrics.StatsView` — same attributes and
+    ``as_dict()`` key set as the historical dataclass).
 
-    def as_dict(self) -> dict:
-        return {k: getattr(self, k) for k in
-                ("requests", "cache_hits", "coalesced", "misses",
-                 "fused_passes", "slice_hits", "incremental_passes",
-                 "claims_acquired", "claim_waits", "claim_hits",
-                 "claim_timeouts")}
+    - ``cache_hits``: answered from the FrontierCache (any tier)
+    - ``coalesced``: duplicates folded onto an in-batch miss
+    - ``misses``: unique specs that reached the engine
+    - ``fused_passes``: engine.execute calls this service made
+    - ``slice_hits``: per-axis slice frontiers reused by sweeps
+    - ``incremental_passes``: sweeps answered by slice merge, not re-roll
+    - claim counters (the shared-registry protocol; zero without a
+      registry): ``claims_acquired`` misses this service claimed and
+      synthesized, ``claim_waits`` misses another host was already
+      synthesizing, ``claim_hits`` of those served by that host's publish,
+      ``claim_timeouts`` of those synthesized here after the wait.
+    """
+
+    _NAMESPACE = "service"
+    _FIELDS = ("requests", "cache_hits", "coalesced", "misses",
+               "fused_passes", "slice_hits", "incremental_passes",
+               "claims_acquired", "claim_waits", "claim_hits",
+               "claim_timeouts")
 
 
 def _deprecated(old: str) -> None:
@@ -162,6 +171,7 @@ class SynthesisService:
             self.tech = calibrated_tech_for_reference()
         resolve_service_mode(self.mode)      # validate eagerly
         self.memcells = tuple(self.memcells)
+        install_engine_hooks()               # idempotent observation hooks
 
     # -- effective per-request parameters -----------------------------------
 
@@ -202,7 +212,8 @@ class SynthesisService:
 
     def serve(self, requests: Sequence[SynthesisRequest],
               on_partial: Optional[Callable[[int, SearchResult], None]]
-              = None) -> list[SynthesisResponse]:
+              = None, contexts: Sequence | None = None
+              ) -> list[SynthesisResponse]:
         """Serve a batch of typed requests: dedup against the cache and each
         other, one fused engine pass per execution mode for the misses, fan
         results back out in request order.  Per-request results are
@@ -212,6 +223,12 @@ class SynthesisService:
         ``SearchResult`` the moment it exists — cache hits immediately,
         fused-pass lanes as each spec's Algorithm-1 replay completes — so a
         long sweep's frontier-so-far is observable before the batch returns.
+
+        ``contexts`` (parallel to ``requests``) carries each request's
+        :class:`repro.obs.SpanContext` across the thread boundary — the
+        frontend passes its tickets' trace roots so per-tier cache spans and
+        the engine-pass link attach to the right trace.  ``None`` entries
+        (or no list at all) simply record no request-scoped spans.
         """
         reqs = list(requests)
         for r in reqs:
@@ -219,6 +236,10 @@ class SynthesisService:
                 raise TypeError("serve() takes SynthesisRequest objects; "
                                 "use the synthesize_many shim for bare "
                                 f"specs (got {type(r).__name__})")
+        if contexts is not None and len(contexts) != len(reqs):
+            raise ValueError(f"contexts must parallel requests: "
+                             f"{len(contexts)} != {len(reqs)}")
+        ctxs = list(contexts) if contexts is not None else [None] * len(reqs)
         eff = [self._effective(r) for r in reqs]
         keys = [self.key_for(r) for r in reqs]
         out: list[SynthesisResponse | None] = [None] * len(reqs)
@@ -230,11 +251,13 @@ class SynthesisService:
         claims: dict[str, object] = {}       # key -> held RegistryClaim
         for i, (r, k) in enumerate(zip(reqs, keys)):
             self.stats.requests += 1
-            hit = self.cache.get(k)
-            if hit is None and first_for_key.get(k) is None:
-                hit, claim = self._claim_or_wait(k)
-                if claim is not None:
-                    claims[k] = claim
+            with (tracer.activate(ctxs[i]) if ctxs[i] is not None
+                  else _NULL_CTX):
+                hit = self.cache.get(k)
+                if hit is None and first_for_key.get(k) is None:
+                    hit, claim = self._claim_or_wait(k)
+                    if claim is not None:
+                        claims[k] = claim
             if hit is not None:
                 self.stats.cache_hits += 1
                 out[i] = SynthesisResponse(request=r, result=hit,
@@ -253,7 +276,23 @@ class SynthesisService:
             else:
                 miss_by_mode.setdefault(eff[i][2], []).append(i)
 
-        def finish(i: int, res: SearchResult) -> None:
+        def link_engine_span(i: int, pass_ref: dict | None,
+                             coalesced: bool) -> None:
+            """A per-request child span covering the shared fused pass —
+            tagged with the pass's own trace/span ids so N coalesced
+            requests all point at the ONE ``engine.pass`` timeline."""
+            if not pass_ref or ctxs[i] is None:
+                return
+            span = tracer.start("request.engine", parent=ctxs[i],
+                                start_s=pass_ref["start_s"],
+                                tags={"engine_pass": pass_ref["span_id"],
+                                      "engine_trace": pass_ref["trace_id"],
+                                      "coalesced": coalesced})
+            if span:
+                span.finish()
+
+        def finish(i: int, res: SearchResult,
+                   pass_ref: dict | None = None) -> None:
             tech_i, _res_i, _mode_i, config_i = eff[i]
             self.cache.put(keys[i], res,
                            scope=key_scope(tech_i, config_i))
@@ -262,25 +301,34 @@ class SynthesisService:
                 claim.release()
             out[i] = SynthesisResponse(request=reqs[i], result=res,
                                        served_from="engine")
+            link_engine_span(i, pass_ref, coalesced=False)
             if on_partial is not None:
                 on_partial(i, res)
             for d in dups_of.get(i, ()):
                 out[d] = SynthesisResponse(request=reqs[d], result=res,
                                            served_from="coalesced")
+                link_engine_span(d, pass_ref, coalesced=True)
                 if on_partial is not None:
                     on_partial(d, res)
 
         for mode, members in miss_by_mode.items():
             self.stats.misses += len(members)
+            pass_ref: dict = {}
             self._fused_pass([reqs[i] for i in members],
                              [eff[i] for i in members], mode,
-                             lambda slot, res, _m=members: finish(_m[slot],
-                                                                  res))
+                             lambda slot, res, _m=members, _p=pass_ref:
+                                 finish(_m[slot], res, _p),
+                             pass_ref=pass_ref)
 
         for i in sweep_misses:
             self.stats.misses += 1
             tech, _res, _mode, config = eff[i]
-            finish(i, self._serve_sweep(reqs[i].spec, tech, config))
+            with (tracer.activate(ctxs[i]) if ctxs[i] is not None
+                  else _NULL_CTX):
+                with tracer.span("service.sweep",
+                                 tags={"kind": "sweep"}):
+                    res = self._serve_sweep(reqs[i].spec, tech, config)
+            finish(i, res)
         return out
 
     # -- the fleet claim protocol --------------------------------------------
@@ -296,18 +344,22 @@ class SynthesisService:
         registry = self.cache.registry
         if registry is None:
             return None, None
-        claim = registry.claim(key)
-        if claim is not None:
-            self.stats.claims_acquired += 1
-            return None, claim
-        self.stats.claim_waits += 1
-        if registry.wait(key, timeout_s=self.claim_wait_s):
-            hit = self.cache.get(key)        # validated fetch + promotion
-            if hit is not None:
-                self.stats.claim_hits += 1
-                return hit, None
-        self.stats.claim_timeouts += 1
-        return None, None
+        with tracer.span("cache.claim") as span:
+            claim = registry.claim(key)
+            if claim is not None:
+                self.stats.claims_acquired += 1
+                span.set_tag("outcome", "acquired")
+                return None, claim
+            self.stats.claim_waits += 1
+            if registry.wait(key, timeout_s=self.claim_wait_s):
+                hit = self.cache.get(key)    # validated fetch + promotion
+                if hit is not None:
+                    self.stats.claim_hits += 1
+                    span.set_tag("outcome", "claim-wait-hit")
+                    return hit, None
+            self.stats.claim_timeouts += 1
+            span.set_tag("outcome", "claim-wait-timeout")
+            return None, None
 
     def telemetry(self) -> dict:
         """Fleet-facing stats rollup: this service's request counters, its
@@ -345,7 +397,8 @@ class SynthesisService:
     def _fused_pass(self, requests: Sequence[SynthesisRequest],
                     eff: Sequence[tuple[TechModel, int, str, LatticeConfig]],
                     mode: str,
-                    on_result: Callable[[int, SearchResult], None]) -> None:
+                    on_result: Callable[[int, SearchResult], None],
+                    pass_ref: dict | None = None) -> None:
         """All same-mode misses through one ``engine.execute`` call:
         ``engine.plan_for`` micro-batches them into vmap groups by
         ``engine.group_key`` (operands packed with each request's own tech,
@@ -353,17 +406,39 @@ class SynthesisService:
         group fused, and Algorithm 1 is replayed per spec at that request's
         resolution (exactly the ``mso_search_many`` contract, under
         whichever strategy the service resolved).  ``on_result(slot,
-        result)`` fires as each spec lane finishes — the streaming hook."""
-        lattices = [B.DesignLattice.enumerate(r.spec, config=cfg)
-                    for r, (_, _, _, cfg) in zip(requests, eff)]
-        tables = [B.SpecTables(r.spec, tech, config=cfg)
-                  for r, (tech, _, _, cfg) in zip(requests, eff)]
-        plan = E.plan_for(lattices, tables,
-                          mode=resolve_service_mode(mode, len(requests)))
-        evals = E.execute(plan)
-        self.stats.fused_passes += 1
-        for slot, (lat, tab, T) in enumerate(evals):
-            on_result(slot, B._alg1_replay(lat, tab, T, eff[slot][1]))
+        result)`` fires as each spec lane finishes — the streaming hook.
+
+        When tracing is on, the pass runs under an ``engine.pass`` trace of
+        its own (a fused pass is shared by N requests, so it cannot live
+        inside any single request's trace) with ``engine.plan`` /
+        ``engine.place`` / ``engine.execute`` / per-lane ``engine.extract``
+        phase children; ``pass_ref`` (when given) is filled with the pass
+        span's ids so the caller can cross-link each request's trace to it.
+        """
+        with tracer.start_trace("engine.pass",
+                                tags={"mode": mode,
+                                      "n_requests": len(requests)}) as root:
+            if pass_ref is not None and root:
+                pass_ref.update(trace_id=root.trace_id,
+                                span_id=root.span_id,
+                                start_s=root.span.start_s)
+            with tracer.span("engine.plan"):
+                lattices = [B.DesignLattice.enumerate(r.spec, config=cfg)
+                            for r, (_, _, _, cfg) in zip(requests, eff)]
+                tables = [B.SpecTables(r.spec, tech, config=cfg)
+                          for r, (tech, _, _, cfg) in zip(requests, eff)]
+            with tracer.span("engine.place") as pspan:
+                placement = E.place(resolve_service_mode(mode,
+                                                         len(requests)))
+                pspan.set_tag("mode", placement.mode)
+                pspan.set_tag("n_dev", placement.n_dev)
+            plan = E.plan_for(lattices, tables, placement=placement)
+            evals = E.execute(plan)          # engine.execute span: obs hooks
+            self.stats.fused_passes += 1
+            for slot, (lat, tab, T) in enumerate(evals):
+                with tracer.span("engine.extract", tags={"slot": slot}):
+                    res = B._alg1_replay(lat, tab, T, eff[slot][1])
+                on_result(slot, res)
 
     # -- exhaustive sweeps: slice caching + incremental re-synthesis ---------
 
